@@ -1,0 +1,27 @@
+"""Shared benchmark helpers: timing, CSV emission, graph suite."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return min(ts), out
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def block(x):
+    import jax
+    return jax.block_until_ready(x)

@@ -1,0 +1,95 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
+results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def load(dirpath):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def roofline_table(recs, mesh="16x16"):
+    rows = []
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        key = f'{r["arch"]} × {r["shape"]}'
+        if r["status"] == "skipped":
+            rows.append(f"| {key} | — | — | — | — | skipped: {r['note']} |")
+            continue
+        if r["status"] != "ok" or "roofline" not in r:
+            rows.append(f"| {key} | — | — | — | — | "
+                        f"FAILED: {r.get('error','?')[:60]} |")
+            continue
+        t = r["roofline"]
+        dom = t["dominant"]
+        rows.append(
+            f"| {key} | {t['compute_s']*1e3:.2f} | {t['memory_s']*1e3:.2f} "
+            f"| {t['collective_s']*1e3:.2f} | **{dom}** "
+            f"| rf={t['roofline_fraction']:.2f} "
+            f"useful={t['useful_fraction']:.2f} |")
+    hdr = ("| arch × shape | compute (ms) | memory (ms) | collective (ms) "
+           "| bound | fractions |\n|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def dryrun_table(recs):
+    rows = []
+    for r in recs:
+        key = f'{r["arch"]} × {r["shape"]} × {r["mesh"]}'
+        if r["status"] == "skipped":
+            rows.append(f"| {key} | skipped | {r['note']} |")
+        elif r["status"] == "ok":
+            mem = r["mem"]
+            cf = r.get("cost", r.get("cost_full_scanbody_once", {}))
+            coll = cf.get("coll_by_op", {})
+            coll_s = ", ".join(f"{k}:{fmt_bytes(v)}G"
+                               for k, v in sorted(coll.items()) if v) or "none"
+            rows.append(
+                f"| {key} | ok ({r['compile_s']}s) | "
+                f"args {fmt_bytes(mem['argument_bytes'])}G + "
+                f"temp {fmt_bytes(mem['temp_bytes'])}G; {coll_s} |")
+        else:
+            rows.append(f"| {key} | FAILED | {r.get('error','')[:80]} |")
+    hdr = ("| cell | compile | bytes/device + collective schedule |\n"
+           "|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--section", default="both",
+                    choices=("roofline", "dryrun", "both"))
+    args = ap.parse_args()
+    recs = load(args.dir)
+    ok = sum(r["status"] == "ok" for r in recs)
+    sk = sum(r["status"] == "skipped" for r in recs)
+    fl = len(recs) - ok - sk
+    print(f"<!-- {len(recs)} cells: {ok} ok, {sk} skipped, {fl} failed -->")
+    if args.section in ("roofline", "both"):
+        print("\n### Roofline (single-pod 16×16, per-device terms)\n")
+        print(roofline_table(recs, "16x16"))
+        print("\n### Roofline (multi-pod 2×16×16)\n")
+        print(roofline_table(recs, "2x16x16"))
+    if args.section in ("dryrun", "both"):
+        print("\n### Dry-run detail\n")
+        print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

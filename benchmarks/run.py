@@ -1,0 +1,50 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small graph suite only")
+    ap.add_argument("--only", default=None,
+                    help="comma list: convergence,etree,scaling,pipeline,"
+                         "stages")
+    args = ap.parse_args()
+
+    from repro.data import graphs
+    suite = graphs.SUITE if not args.quick else {
+        "grid2d_64": graphs.SUITE["grid2d_64"],
+        "powerlaw_4k": graphs.SUITE["powerlaw_4k"],
+    }
+    which = set((args.only or "convergence,etree,scaling,pipeline,stages")
+                .split(","))
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    if "convergence" in which:
+        from . import bench_convergence
+        bench_convergence.run(suite)
+    if "etree" in which:
+        from . import bench_etree
+        bench_etree.run(suite)
+    if "scaling" in which:
+        from . import bench_factor_scaling
+        bench_factor_scaling.run()
+    if "pipeline" in which:
+        from . import bench_solve_pipeline
+        bench_solve_pipeline.run()
+    if "stages" in which:
+        from . import bench_stages
+        bench_stages.run()
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Insert the generated dry-run/roofline tables into EXPERIMENTS.md and
+print baseline -> optimized deltas."""
+import io
+import json
+import glob
+import sys
+sys.path.insert(0, "src")
+from benchmarks.roofline_report import load, roofline_table, dryrun_table
+
+new = load("results/dryrun")
+old = load("results/dryrun_baseline")
+
+# deltas on the dominant term for cells whose bound moved >5%
+omap = {(r["arch"], r["shape"], r["mesh"]): r for r in old}
+deltas = []
+for r in new:
+    k = (r["arch"], r["shape"], r["mesh"])
+    if k in omap and r.get("roofline") and omap[k].get("roofline"):
+        b0 = omap[k]["roofline"]["bound_s"]
+        b1 = r["roofline"]["bound_s"]
+        if b0 > 0 and abs(b1 - b0) / b0 > 0.05 and r["mesh"] == "16x16":
+            deltas.append((k[0], k[1], b0, b1, b0 / b1))
+deltas.sort(key=lambda d: -d[4])
+dl = ["| cell | paper-faithful baseline bound | optimized bound | speedup |",
+      "|---|---|---|---|"]
+for a, s, b0, b1, sp in deltas:
+    dl.append(f"| {a} × {s} | {b0*1e3:.2f} ms | {b1*1e3:.2f} ms | "
+              f"**{sp:.2f}×** |")
+delta_tbl = "\n".join(dl)
+
+ok = sum(r["status"] == "ok" for r in new)
+sk = sum(r["status"] == "skipped" for r in new)
+summary = (f"{len(new)} cells: **{ok} compiled ok, {sk} documented skips, "
+           f"{len(new)-ok-sk} failed** (single-pod 16×16 and multi-pod "
+           f"2×16×16).")
+
+text = open("EXPERIMENTS.md").read()
+text = text.replace("<!-- DRYRUN_TABLE -->",
+                    summary + "\n\n" + dryrun_table(new))
+text = text.replace(
+    "<!-- ROOFLINE_TABLE -->",
+    "### Single-pod 16×16 (per-device terms)\n\n"
+    + roofline_table(new, "16x16")
+    + "\n\n### Multi-pod 2×16×16\n\n" + roofline_table(new, "2x16x16")
+    + "\n\n### Baseline → optimized deltas (dominant term, cells that "
+      "moved >5%)\n\nThe paper-faithful baseline sweep is preserved in "
+      "`results/dryrun_baseline/`; the table above reflects the adopted "
+      "beyond-baseline optimizations (§Perf).\n\n" + delta_tbl)
+open("EXPERIMENTS.md", "w").write(text)
+print(delta_tbl)
+print("\nwrote EXPERIMENTS.md")

@@ -1,0 +1,32 @@
+"""Perf hillclimb driver: run a cell under variants, print roofline terms.
+
+    PYTHONPATH=src python scripts/hillclimb.py <arch> <shape> \
+        '{"feature_shard": true}' [--cfg '{"remat": false}']
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse, json, sys
+sys.path.insert(0, "src")
+
+ap = argparse.ArgumentParser()
+ap.add_argument("arch")
+ap.add_argument("shape")
+ap.add_argument("variant", nargs="?", default="{}")
+ap.add_argument("--cfg", default="{}")
+ap.add_argument("--multi-pod", action="store_true")
+args = ap.parse_args()
+
+from repro.launch.dryrun import run_cell
+r = run_cell(args.arch, args.shape, args.multi_pod,
+             variant=json.loads(args.variant),
+             cfg_override=json.loads(args.cfg) or None)
+out = {k: r.get(k) for k in ("status", "error")}
+if "roofline" in r:
+    t = r["roofline"]
+    out.update({k: round(v, 6) if isinstance(v, float) else v
+                for k, v in t.items()})
+    out["coll_by_op_GB"] = {k: round(v / 1e9, 2)
+                            for k, v in r["cost"]["coll_by_op"].items()}
+if "mem" in r:
+    out["peak_GB"] = round(r["mem"]["peak_bytes"] / 1e9, 2)
+print(json.dumps(out, indent=1))

@@ -1,0 +1,84 @@
+"""Preemption-safe pytree checkpointing.
+
+Layout: ``<dir>/step_<N>/`` with one ``.npy`` per flattened leaf plus a
+msgpack manifest (tree structure, dtypes, step).  Writes go to a
+``.tmp`` directory that is atomically renamed — a killed writer never
+corrupts the latest checkpoint, which is what checkpoint/restart fault
+tolerance needs.  ``keep`` bounds disk use; restore validates the
+manifest hash against the tree structure it is asked to fill.
+
+On a real multi-host cluster each host writes its own addressable shards
+(jax.experimental.multihost_utils); on this single-process container the
+full arrays are written.  The API (save/restore/latest_step) is what the
+trainer codes against either way.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+from typing import Any, Optional, Tuple
+
+import numpy as np
+import jax
+
+
+def _tree_signature(treedef) -> str:
+    return hashlib.sha1(str(treedef).encode()).hexdigest()[:16]
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    keep: int = 3) -> str:
+    d = pathlib.Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    tmp = d / f".tmp_step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    manifest = {"step": step, "n_leaves": len(leaves),
+                "sig": _tree_signature(treedef)}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(tmp / f"leaf_{i}.npy", arr)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    final = d / f"step_{step}"
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                      # atomic publish
+    # GC old checkpoints
+    steps = sorted(int(p.name.split("_")[1]) for p in d.glob("step_*"))
+    for s in steps[:-keep]:
+        shutil.rmtree(d / f"step_{s}", ignore_errors=True)
+    return str(final)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    d = pathlib.Path(directory)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.glob("step_*")
+             if (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, tree_like: Any,
+                       step: Optional[int] = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``tree_like`` (values ignored)."""
+    d = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    src = d / f"step_{step}"
+    manifest = json.loads((src / "manifest.json").read_text())
+    leaves, treedef = jax.tree.flatten(tree_like)
+    if manifest["sig"] != _tree_signature(treedef):
+        raise ValueError("checkpoint tree structure mismatch")
+    if manifest["n_leaves"] != len(leaves):
+        raise ValueError("checkpoint leaf count mismatch")
+    out = [np.load(src / f"leaf_{i}.npy") for i in range(len(leaves))]
+    restored = jax.tree.unflatten(treedef, out)
+    return restored, step

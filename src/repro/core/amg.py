@@ -1,0 +1,105 @@
+"""Smoothed-aggregation AMG V-cycle — HyPre/AmgX stand-in baseline.
+
+Greedy strength-based aggregation, piecewise-constant tentative
+prolongator smoothed by one weighted-Jacobi step, Galerkin coarse
+operators, V(1,1)-cycle with weighted-Jacobi smoothing.  scipy.sparse
+host implementation — it is a *quality baseline* (iteration counts for
+Table 2), not a performance target.
+"""
+from __future__ import annotations
+
+from typing import Callable, List
+
+import numpy as np
+import scipy.sparse as sp
+
+from .laplacian import Graph
+
+
+def _laplacian_csr(g: Graph) -> sp.csr_matrix:
+    i = np.concatenate([g.src, g.dst, np.arange(g.n)])
+    j = np.concatenate([g.dst, g.src, np.arange(g.n)])
+    wd = g.weighted_degrees()
+    v = np.concatenate([-g.w, -g.w, wd + 1e-12 * (wd.max() or 1.0)])
+    return sp.coo_matrix((v, (i, j)), shape=(g.n, g.n)).tocsr()
+
+
+def _aggregate(A: sp.csr_matrix, theta: float = 0.08) -> np.ndarray:
+    """Greedy aggregation on the strength graph."""
+    n = A.shape[0]
+    D = np.asarray(A.diagonal())
+    agg = np.full(n, -1, np.int64)
+    next_agg = 0
+    indptr, indices, data = A.indptr, A.indices, A.data
+    # pass 1: seed aggregates around unaggregated vertices
+    for v in range(n):
+        if agg[v] >= 0:
+            continue
+        nbrs = indices[indptr[v]:indptr[v + 1]]
+        vals = data[indptr[v]:indptr[v + 1]]
+        strong = nbrs[(nbrs != v) & (-vals >= theta * np.sqrt(
+            np.abs(D[v] * D[nbrs]) + 1e-30))]
+        if np.all(agg[strong] < 0):
+            agg[v] = next_agg
+            agg[strong] = next_agg
+            next_agg += 1
+    # pass 2: attach leftovers to a strong neighbour's aggregate
+    for v in range(n):
+        if agg[v] >= 0:
+            continue
+        nbrs = indices[indptr[v]:indptr[v + 1]]
+        cand = nbrs[agg[nbrs] >= 0]
+        if cand.size:
+            vals = data[indptr[v]:indptr[v + 1]][agg[nbrs] >= 0]
+            agg[v] = agg[cand[np.argmin(vals)]]
+        else:
+            agg[v] = next_agg
+            next_agg += 1
+    return agg
+
+
+def _build_hierarchy(A: sp.csr_matrix, max_levels: int = 10,
+                     min_coarse: int = 64):
+    levels = [{"A": A}]
+    while len(levels) < max_levels and levels[-1]["A"].shape[0] > min_coarse:
+        Al = levels[-1]["A"]
+        agg = _aggregate(Al)
+        nc = int(agg.max()) + 1
+        if nc >= Al.shape[0]:
+            break
+        T = sp.coo_matrix((np.ones(Al.shape[0]),
+                           (np.arange(Al.shape[0]), agg)),
+                          shape=(Al.shape[0], nc)).tocsr()
+        Dinv = sp.diags(1.0 / np.maximum(Al.diagonal(), 1e-30))
+        P = (sp.identity(Al.shape[0]) - (2.0 / 3.0) * (Dinv @ Al)) @ T
+        Ac = (P.T @ Al @ P).tocsr()
+        levels[-1].update(P=P)
+        levels.append({"A": Ac})
+    return levels
+
+
+def _jacobi(A, Dinv, x, b, omega=2.0 / 3.0, iters=1):
+    for _ in range(iters):
+        x = x + omega * Dinv * (b - A @ x)
+    return x
+
+
+def smoothed_aggregation_preconditioner(g: Graph) -> Callable:
+    A = _laplacian_csr(g)
+    levels = _build_hierarchy(A)
+    for lv in levels:
+        lv["Dinv"] = 1.0 / np.maximum(lv["A"].diagonal(), 1e-30)
+    coarse = levels[-1]["A"].toarray()
+    coarse_pinv = np.linalg.pinv(coarse)
+
+    def cycle(lv: int, b: np.ndarray) -> np.ndarray:
+        if lv == len(levels) - 1:
+            return coarse_pinv @ b
+        L = levels[lv]
+        x = _jacobi(L["A"], L["Dinv"], np.zeros_like(b), b)
+        r = b - L["A"] @ x
+        xc = cycle(lv + 1, L["P"].T @ r)
+        x = x + L["P"] @ xc
+        return _jacobi(L["A"], L["Dinv"], x, b)
+
+    return lambda r: cycle(0, np.asarray(r, np.float64))

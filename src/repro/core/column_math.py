@@ -1,0 +1,167 @@
+"""Per-column elimination math shared by the sequential oracle and the
+parallel wavefront engine (paper Algorithm 2 / Algorithm 3 lines 13-21,
+Algorithm 4 lines 14-23).
+
+Everything operates on a fixed-width padded column so it vmaps/tiles:
+
+  * merge parallel (multi-)edges with the same neighbour id,
+  * ℓ_kk = Σ merged weights (Laplacian diagonal is implicit),
+  * sort neighbours ascending by (|ℓ_ki|, id)   [paper: sort improves quality],
+  * suffix sums S[i] = Σ_{g≥i} w_g,
+  * for each position i < m-1: inverse-CDF sample a partner j > i with
+    probability w_j / S[i+1] and emit the spanning-tree edge
+    (id_i, id_j) with weight  S[i+1] · w_i / ℓ_kk.
+
+Randomness is supplied per *logical slot* so the sampled factor is
+*schedule independent*: the oracle and the engine feed identical uniforms
+(``fold_in(key, vertex)`` then ``fold_in(·, slot)``) and must produce
+bit-identical factors — the correctness claim of the bulk-synchronous
+wavefront adaptation (DESIGN.md §2), tested in tests/test_core_ac.py.
+
+Bit-exactness across different padding widths requires *width-independent
+reduction bracketing*.  ``jnp.cumsum`` lowers to a tree scan whose shape
+depends on the array length, so we use a Hillis–Steele scan instead: the
+value at position i combines only positions ≤ i with a bracketing that
+depends on i alone (shifted-in zeros are exact no-ops).  Prefix scans run
+on left-aligned data; suffix scans on right-aligned data (the sampling
+sort pushes invalid lanes to the *front* with a −inf key) so both are
+padding-invariant.  The same scan vectorises on TPU VPU lanes inside the
+Pallas ``sample_clique`` kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INVALID_ID = jnp.iinfo(jnp.int32).max
+_NEG_INF = float("-inf")
+
+
+class ColumnElim(NamedTuple):
+    """Result of eliminating one vertex (fixed width ``width``).
+
+    ``g_rows/g_vals`` are left-aligned (positions < m valid); the sampled
+    edges live at right-aligned positions — use ``e_valid`` to select.
+    """
+
+    g_rows: jnp.ndarray   # int32[width]  merged neighbour ids, ascending
+    g_vals: jnp.ndarray   # f32[width]    factor values  -w/ℓkk
+    m: jnp.ndarray        # int32         number of merged neighbours
+    ell_kk: jnp.ndarray   # f32           diagonal D[k]
+    e_lo: jnp.ndarray     # int32[width]  sampled edge endpoints, lo < hi
+    e_hi: jnp.ndarray     # int32[width]
+    e_w: jnp.ndarray      # f32[width]    sampled edge weights (> 0 where valid)
+    e_valid: jnp.ndarray  # bool[width]
+
+
+def _next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+def hs_cumsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive prefix sum with index-only bracketing (Hillis–Steele).
+
+    prefix[i] is a fixed binary-tree combination of x[0..i]; appending
+    padding on the right never changes earlier prefixes (shifted-in zeros
+    add exactly).  This is what makes oracle (pow2-of-d padding) and
+    engine (global dmax padding) factors bit-identical.
+    """
+    w = x.shape[0]
+    n2 = _next_pow2(w)
+    x = jnp.pad(x, (0, n2 - w))
+    k = 1
+    while k < n2:
+        x = x + jnp.pad(x[:-k], (k, 0))
+        k *= 2
+    return x[:w]
+
+
+def hs_suffix_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Suffix sums with index-from-the-right bracketing.  Width-independent
+    provided the *valid data is right-aligned* (padding on the left)."""
+    return hs_cumsum(x[::-1])[::-1]
+
+
+def column_uniforms(key: jax.Array, vertex: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Schedule-independent uniforms: slot i of vertex k depends only on
+    (key, k, i) — never on padding width or wavefront composition."""
+    kk = jax.random.fold_in(key, vertex)
+    slots = jnp.arange(width, dtype=jnp.int32)
+    return jax.vmap(lambda i: jax.random.uniform(jax.random.fold_in(kk, i)))(slots)
+
+
+def eliminate_column(ids: jnp.ndarray, ws: jnp.ndarray, valid: jnp.ndarray,
+                     u: jnp.ndarray) -> ColumnElim:
+    """Eliminate one vertex given its (padded) incident multi-edge list.
+
+    ids/ws/valid/u: int32[width], f32[width], bool[width], f32[width].
+    ``u[i]`` is the uniform for the i-th *logical* sampling slot.
+    """
+    width = ids.shape[0]
+    pos = jnp.arange(width, dtype=jnp.int32)
+    ids = jnp.where(valid, ids, INVALID_ID).astype(jnp.int32)
+    ws = jnp.where(valid, ws, jnp.zeros((), ws.dtype))
+
+    # ---- stage 1: merge multi-edges with equal neighbour id -------------
+    # sort by (id, w): valid ids ascending, INVALID_ID sentinels trailing
+    ids_s, ws_s = jax.lax.sort((ids, ws), num_keys=2)
+    is_start = jnp.concatenate([jnp.ones((1,), bool),
+                                ids_s[1:] != ids_s[:-1]])
+    is_start = is_start & (ids_s != INVALID_ID)
+    cs = hs_cumsum(ws_s)                       # width-independent prefixes
+    nvalid = jnp.sum(ids_s != INVALID_ID).astype(jnp.int32)
+    start_pos = jnp.where(is_start, pos, width)
+    rev_min = jax.lax.associative_scan(jnp.minimum, start_pos[::-1])[::-1]
+    nxt = jnp.concatenate([rev_min[1:], jnp.array([width])])
+    # clamp the last run's end to the last *valid* lane: prefix values at
+    # padding positions have width-dependent bracketing.
+    run_end = jnp.clip(nxt - 1, 0, jnp.maximum(nvalid - 1, 0))
+    prev_cs = jnp.where(pos > 0, cs[jnp.maximum(pos - 1, 0)], 0.0)
+    run_sum = cs[run_end] - prev_cs            # Σ of each id-run
+
+    merged_id = jnp.where(is_start, ids_s, INVALID_ID)
+    merged_w = jnp.where(is_start, run_sum, 0.0)
+    m = jnp.sum(is_start).astype(jnp.int32)
+    ell_kk = jnp.where(nvalid > 0, cs[jnp.maximum(nvalid - 1, 0)], 0.0)
+
+    # compact merged entries to the front (ids ascending already)
+    g_rows, g_vals_w = jax.lax.sort((merged_id, merged_w), num_keys=1)
+    safe_ell = jnp.where(ell_kk > 0, ell_kk, 1.0)
+    g_vals = jnp.where(g_rows != INVALID_ID, -g_vals_w / safe_ell, 0.0)
+
+    # ---- stage 2: sort by (w, id) ascending, RIGHT-aligned ---------------
+    # invalid lanes get a −inf key so they sort to the *front*; the valid
+    # ascending-by-weight run is right-aligned, making the suffix scan
+    # padding-invariant.
+    sort_w = jnp.where(g_rows != INVALID_ID, g_vals_w,
+                       jnp.asarray(_NEG_INF, g_vals_w.dtype))
+    sw, sid, sval = jax.lax.sort((sort_w, g_rows, g_vals_w), num_keys=2)
+    sval = jnp.where(sid != INVALID_ID, sval, 0.0)
+    S = hs_suffix_sum(sval)                     # S[p] = Σ_{q≥p} sval[q]
+    S1 = jnp.concatenate([S[1:], jnp.zeros((1,), S.dtype)])   # S1[p] = S[p+1]
+
+    # ---- stage 3: inverse-CDF spanning-tree sampling ---------------------
+    # valid sampling positions: p ∈ [width−m, width−1); logical slot
+    # i = p − (width − m) indexes the uniforms.
+    first = width - m
+    i_log = jnp.clip(pos - first, 0, width - 1)
+    up = u[i_log]
+    # thresh_p = S[p+1] − u·S[p+1]; partner j = smallest j > p with
+    # S[j+1] ≤ thresh (S1 non-increasing; leading lanes hold the full sum).
+    thresh = S1 - up * S1
+    rev = S1[::-1]
+    c = jnp.searchsorted(rev, thresh, side="right")
+    j_idx = jnp.minimum(jnp.maximum(pos + 1, width - c), width - 1)
+
+    e_valid = (pos >= first) & (pos < width - 1) & (m >= 2)
+    a = sid
+    b = sid[j_idx]
+    e_lo = jnp.where(e_valid, jnp.minimum(a, b), INVALID_ID).astype(jnp.int32)
+    e_hi = jnp.where(e_valid, jnp.maximum(a, b), INVALID_ID).astype(jnp.int32)
+    e_w = jnp.where(e_valid, S1 * sval / safe_ell, 0.0)
+
+    return ColumnElim(g_rows=g_rows.astype(jnp.int32), g_vals=g_vals,
+                      m=m, ell_kk=ell_kk,
+                      e_lo=e_lo, e_hi=e_hi, e_w=e_w, e_valid=e_valid)

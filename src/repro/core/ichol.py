@@ -1,0 +1,113 @@
+"""Incomplete-Cholesky baselines (paper Tables 2/3 comparisons).
+
+* ``ichol0`` — zero-fill IC on the matrix pattern (cuSPARSE csric02
+  analogue): fast construction, weaker preconditioner.
+* ``icholt`` — threshold-dropping IC (MATLAB ``ichol(...,'ict')``
+  analogue): drop |v| < τ·norm(col), like the paper's tuned-fill runs.
+
+Both operate on the (possibly grounded) Laplacian with a Manteuffel-style
+diagonal shift retry on breakdown — IC on a singular Laplacian needs it.
+Host-side sequential numpy: these are *quality baselines*, their
+construction cost is reported but not optimized (the paper's point is
+precisely that their parallel construction is the hard part).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import numpy as np
+import scipy.sparse as sp
+
+from .laplacian import Graph
+
+
+def _laplacian_csc(g: Graph, shift: float) -> sp.csc_matrix:
+    i = np.concatenate([g.src, g.dst, np.arange(g.n)])
+    j = np.concatenate([g.dst, g.src, np.arange(g.n)])
+    wd = g.weighted_degrees()
+    v = np.concatenate([-g.w, -g.w, wd * (1.0 + shift) + 1e-12])
+    return sp.coo_matrix((v, (i, j)), shape=(g.n, g.n)).tocsc()
+
+
+@dataclasses.dataclass
+class ICholFactor:
+    """L_ic lower-triangular CSC with explicit diagonal (A ≈ L Lᵀ)."""
+
+    L: sp.csc_matrix
+    shift: float
+
+    def apply(self, r: np.ndarray) -> np.ndarray:
+        y = sp.linalg.spsolve_triangular(self.L.tocsr(), r, lower=True)
+        return sp.linalg.spsolve_triangular(self.L.T.tocsr(), y, lower=False)
+
+    @property
+    def nnz(self) -> int:
+        return self.L.nnz
+
+
+def _ic_factor(A: sp.csc_matrix, droptol: float) -> sp.csc_matrix:
+    """Left-looking IC with threshold dropping (droptol=0 ⇒ IC(0) pattern)."""
+    n = A.shape[0]
+    A = A.tocsc()
+    cols_i: list = []
+    cols_v: list = []
+    # row-wise access to already-computed columns: store per-row lists
+    row_entries: list = [[] for _ in range(n)]  # (col, val)
+    pattern = [set(A.indices[A.indptr[k]:A.indptr[k + 1]]) for k in range(n)] \
+        if droptol == 0.0 else None
+    for k in range(n):
+        lo, hi = A.indptr[k], A.indptr[k + 1]
+        col = dict(zip(A.indices[lo:hi], A.data[lo:hi]))
+        # subtract L(k:,j) * L(k,j) for all j < k with L(k,j) != 0
+        for (j, lkj) in row_entries[k]:
+            for (i2, lij) in zip(cols_i[j], cols_v[j]):
+                if i2 >= k:
+                    col[i2] = col.get(i2, 0.0) - lij * lkj
+        dkk = col.pop(k, 0.0)
+        if dkk <= 0:
+            raise FloatingPointError(f"IC breakdown at column {k}")
+        lkk = np.sqrt(dkk)
+        ids, vals = [], []
+        if col:
+            items = [(i2, v / lkk) for i2, v in col.items() if i2 > k]
+            if droptol > 0.0:
+                nrm = np.sqrt(sum(v * v for _, v in items)) or 1.0
+                items = [(i2, v) for i2, v in items
+                         if abs(v) >= droptol * nrm]
+            else:
+                items = [(i2, v) for i2, v in items
+                         if i2 in pattern[k]]
+            items.sort()
+            ids = [i2 for i2, _ in items]
+            vals = [v for _, v in items]
+            for i2, v in zip(ids, vals):
+                row_entries[i2].append((k, v))
+        cols_i.append(np.array([k] + ids, np.int64))
+        cols_v.append(np.array([lkk] + vals, np.float64))
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum([c.size for c in cols_i], out=indptr[1:])
+    indices = np.concatenate(cols_i)
+    data = np.concatenate(cols_v)
+    return sp.csc_matrix((data, indices, indptr), shape=(n, n))
+
+
+def ichol(g: Graph, droptol: float = 0.0, max_shift_tries: int = 8) -> ICholFactor:
+    shift = 0.0
+    for _ in range(max_shift_tries):
+        try:
+            L = _ic_factor(_laplacian_csc(g, shift), droptol)
+            return ICholFactor(L=L, shift=shift)
+        except FloatingPointError:
+            shift = max(2 * shift, 1e-3)
+    raise RuntimeError("ichol breakdown even with diagonal shift")
+
+
+def jacobi_preconditioner(g: Graph) -> Callable:
+    wd = g.weighted_degrees()
+    dinv = np.where(wd > 0, 1.0 / np.maximum(wd, 1e-30), 0.0)
+
+    def apply(r: np.ndarray) -> np.ndarray:
+        return dinv * r
+
+    return apply

@@ -1,0 +1,144 @@
+"""Graph / Laplacian containers and basic linear-algebra helpers.
+
+The whole library works on *weighted undirected graphs* stored as an edge
+list with ``src < dst`` (one record per undirected edge).  The graph
+Laplacian is never materialised densely except in tests; all operators are
+edge-list (COO) based so they vectorise on TPU and shard trivially
+(edges are the natural data-parallel axis; see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Weighted undirected graph, one record per edge, ``src < dst``."""
+
+    n: int
+    src: np.ndarray  # int32[m]
+    dst: np.ndarray  # int32[m]
+    w: np.ndarray    # float[m], strictly positive
+
+    @property
+    def m(self) -> int:
+        return int(self.src.shape[0])
+
+    def validate(self) -> None:
+        assert self.src.shape == self.dst.shape == self.w.shape
+        assert np.all(self.src < self.dst), "edges must satisfy src < dst"
+        assert np.all(self.src >= 0) and np.all(self.dst < self.n)
+        assert np.all(self.w > 0), "edge weights must be positive"
+
+    def degrees(self) -> np.ndarray:
+        """Number of incident edges per vertex."""
+        deg = np.zeros(self.n, dtype=np.int64)
+        np.add.at(deg, self.src, 1)
+        np.add.at(deg, self.dst, 1)
+        return deg
+
+    def weighted_degrees(self) -> np.ndarray:
+        wd = np.zeros(self.n, dtype=np.float64)
+        np.add.at(wd, self.src, self.w)
+        np.add.at(wd, self.dst, self.w)
+        return wd
+
+    def coalesce(self) -> "Graph":
+        """Merge parallel edges (sum weights) and drop self loops."""
+        keep = self.src != self.dst
+        src, dst, w = self.src[keep], self.dst[keep], self.w[keep]
+        key = src.astype(np.int64) * self.n + dst
+        order = np.argsort(key, kind="stable")
+        key, src, dst, w = key[order], src[order], dst[order], w[order]
+        uniq, inv = np.unique(key, return_inverse=True)
+        wm = np.zeros(uniq.shape[0], dtype=w.dtype)
+        np.add.at(wm, inv, w)
+        first = np.searchsorted(uniq, key[np.searchsorted(key, uniq)])
+        del first
+        # representative src/dst per unique key
+        s = (uniq // self.n).astype(np.int32)
+        d = (uniq % self.n).astype(np.int32)
+        return Graph(self.n, s, d, wm)
+
+    def permute(self, perm: np.ndarray) -> "Graph":
+        """Relabel vertices: new label of old vertex v is ``perm[v]``.
+
+        The factorization eliminates vertices in new-label order, so
+        ``perm`` IS the elimination priority (position of each vertex).
+        """
+        ns = perm[self.src].astype(np.int32)
+        nd = perm[self.dst].astype(np.int32)
+        lo = np.minimum(ns, nd)
+        hi = np.maximum(ns, nd)
+        return Graph(self.n, lo, hi, self.w.copy())
+
+
+def laplacian_dense(g: Graph, dtype=np.float64) -> np.ndarray:
+    """Dense Laplacian — tests/small benchmarks only."""
+    L = np.zeros((g.n, g.n), dtype=dtype)
+    for s, d, w in zip(g.src, g.dst, g.w):
+        L[s, s] += w
+        L[d, d] += w
+        L[s, d] -= w
+        L[d, s] -= w
+    return L
+
+
+def laplacian_matvec_np(g: Graph, x: np.ndarray) -> np.ndarray:
+    """y = L x on host (numpy), edge-list formulation."""
+    diff = x[g.src] - x[g.dst]
+    y = np.zeros_like(x)
+    np.add.at(y, g.src, g.w * diff)
+    np.add.at(y, g.dst, -g.w * diff)
+    return y
+
+
+def laplacian_matvec(src: jnp.ndarray, dst: jnp.ndarray, w: jnp.ndarray,
+                     n: int, x: jnp.ndarray) -> jnp.ndarray:
+    """y = L x in JAX. ``L = Σ w_e (e_s - e_d)(e_s - e_d)ᵀ``.
+
+    Edge-parallel: gathers two endpoints, scatter-adds two contributions.
+    This is the SpMV that dominates PCG; the Pallas ELL kernel in
+    ``repro.kernels.spmv`` is the tiled version of the same contraction.
+    """
+    diff = w * (x[src] - x[dst])
+    y = jnp.zeros(n, dtype=x.dtype)
+    y = y.at[src].add(diff)
+    y = y.at[dst].add(-diff)
+    return y
+
+
+def project_mean_zero(x: jnp.ndarray) -> jnp.ndarray:
+    """Project onto 1⊥ — Laplacians are singular with nullspace = span(1)."""
+    return x - jnp.mean(x)
+
+
+# ---------------------------------------------------------------------------
+# SDD → Laplacian reduction (paper §1: "generalizes to SDD")
+# ---------------------------------------------------------------------------
+
+def sdd_to_grounded_laplacian(A_diag: np.ndarray, g: Graph) -> Graph:
+    """Reduce an SDD system ``A = L(g) + diag(surplus)`` to a Laplacian.
+
+    ``A_diag`` is the full diagonal of A; the surplus
+    ``s_v = A_vv - Σ_incident w`` must be ≥ 0 (diagonally dominant).
+    Standard grounding construction: add vertex ``n`` ("ground") with an
+    edge (v, n, s_v) for every v with s_v > 0.  Solving the grounded
+    Laplacian with rhs ``[b; -Σb]`` and grounding x_n = 0 solves A x = b.
+    """
+    wd = g.weighted_degrees()
+    surplus = np.asarray(A_diag, dtype=np.float64) - wd
+    if np.any(surplus < -1e-9 * np.abs(A_diag)):
+        raise ValueError("matrix is not diagonally dominant")
+    surplus = np.maximum(surplus, 0.0)
+    keep = surplus > 0
+    vs = np.nonzero(keep)[0].astype(np.int32)
+    gsrc = np.concatenate([g.src, vs])
+    gdst = np.concatenate([g.dst, np.full(vs.shape, g.n, dtype=np.int32)])
+    gw = np.concatenate([g.w, surplus[keep].astype(g.w.dtype)])
+    return Graph(g.n + 1, gsrc, gdst, gw)

@@ -1,0 +1,212 @@
+"""ParAC — bulk-synchronous wavefront randomized Cholesky (JAX).
+
+TPU-native adaptation of the paper's GPU persistent-kernel algorithm
+(Algorithm 4).  Each round:
+
+  1. the *ready set* (dep == 0, not eliminated) is an independent set of
+     the current multi-graph — take the ``chunk`` smallest labels;
+  2. gather their column slabs from the static edge pool, eliminate them
+     all at once (``vmap`` of the shared per-column math; the Pallas
+     ``sample_clique`` kernel is the tiled version of the same math);
+  3. write the normalized column back in place (the pool doubles as the
+     output factor, like the paper's array O);
+  4. bulk-scatter sampled spanning-tree edges to their owner column's
+     slab at sort-derived offsets (the barrier-free analogue of the
+     paper's ``hash(a) + fill_in_count(a)`` insertion);
+  5. update dependency counters with segment adds (the atomic-free
+     analogue of Algorithm 4 lines 21/24).
+
+Rounds iterate under ``lax.while_loop`` until every vertex is eliminated.
+The factor is bit-identical to the sequential oracle because per-vertex
+randomness is schedule independent (``column_math.column_uniforms``).
+
+Memory model (paper §5.1): one static pool sized ``m + n·fill_slack``;
+column k owns slab ``[col_base[k], col_base[k] + cap[k])``.  Overflowing
+sampled edges are dropped *and counted* — `strict=True` retries with a
+doubled slack instead (dynamic malloc is as ill-advised in XLA as in
+device code).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .laplacian import Graph
+from .column_math import eliminate_column, column_uniforms, INVALID_ID
+from .ref_ac import ACFactor
+
+
+class EngineState(NamedTuple):
+    pool_row: jnp.ndarray   # int32[P] — max-label endpoint / factor row id
+    pool_val: jnp.ndarray   # f32[P]   — alive: edge weight (>0); done: G value
+    col_fill: jnp.ndarray   # int32[n] — #entries in each column slab
+    dep: jnp.ndarray        # int32[n] — #alive multi-edges with max endpoint v
+    elim: jnp.ndarray       # bool[n]
+    D: jnp.ndarray          # f32[n]
+    n_elim: jnp.ndarray     # int32
+    n_rounds: jnp.ndarray   # int32
+    overflow: jnp.ndarray   # int32 — dropped sampled edges (0 in strict runs)
+
+
+@partial(jax.jit, static_argnames=("dmax", "chunk"))
+def _run_engine(pool_row, pool_val, col_fill, dep, col_base, cap, key,
+                *, dmax: int, chunk: int) -> EngineState:
+    n = col_fill.shape[0]
+    P = pool_row.shape[0]
+    labels = jnp.arange(n, dtype=jnp.int32)
+    offs = jnp.arange(dmax, dtype=jnp.int32)
+
+    state = EngineState(
+        pool_row=pool_row, pool_val=pool_val, col_fill=col_fill, dep=dep,
+        elim=jnp.zeros(n, bool), D=jnp.zeros(n, pool_val.dtype),
+        n_elim=jnp.int32(0), n_rounds=jnp.int32(0), overflow=jnp.int32(0))
+
+    def cond(s: EngineState):
+        return (s.n_elim < n) & (s.n_rounds <= n)
+
+    def body(s: EngineState) -> EngineState:
+        # -- 1. ready set: chunk smallest ready labels ---------------------
+        prio = jnp.where((~s.elim) & (s.dep == 0), labels, n)
+        _, cand = jax.lax.top_k(-prio, chunk)
+        cand = cand.astype(jnp.int32)
+        cand_ok = prio[cand] < n
+
+        # -- 2. gather column slabs + eliminate ----------------------------
+        base = col_base[cand]
+        fill = s.col_fill[cand]
+        slots = base[:, None] + offs[None, :]
+        sv = (offs[None, :] < fill[:, None]) & cand_ok[:, None]
+        slots_c = jnp.where(sv, slots, P)
+        ids = jnp.take(s.pool_row, slots_c, mode="fill",
+                       fill_value=INVALID_ID)
+        ws = jnp.take(s.pool_val, slots_c, mode="fill", fill_value=0.0)
+        u = jax.vmap(lambda v: column_uniforms(key, v, dmax))(cand)
+        res = jax.vmap(eliminate_column)(ids, ws, sv, u)
+
+        # -- 3. write factor columns in place ------------------------------
+        wmask = (offs[None, :] < res.m[:, None]) & cand_ok[:, None]
+        tgt = jnp.where(wmask, slots, P).ravel()
+        pool_row = s.pool_row.at[tgt].set(res.g_rows.ravel(), mode="drop")
+        pool_val = s.pool_val.at[tgt].set(res.g_vals.ravel(), mode="drop")
+        col_fill = s.col_fill.at[cand].set(
+            jnp.where(cand_ok, res.m, s.col_fill[cand]))
+        D = s.D.at[cand].set(jnp.where(cand_ok, res.ell_kk, s.D[cand]))
+        elim = s.elim.at[cand].set(cand_ok | s.elim[cand])
+
+        # -- 4. dep decrements for consumed multi-edges --------------------
+        dep = s.dep.at[jnp.where(sv, ids, n).ravel()].add(-1, mode="drop")
+
+        # -- 5. scatter sampled edges to owner slabs -----------------------
+        e_valid = (res.e_valid & cand_ok[:, None]).ravel()
+        e_lo = jnp.where(e_valid, res.e_lo.ravel(), n)
+        e_hi = res.e_hi.ravel()
+        e_w = res.e_w.ravel()
+        order = jnp.argsort(e_lo, stable=True)
+        so, sh, sw2 = e_lo[order], e_hi[order], e_w[order]
+        E = so.shape[0]
+        eidx = jnp.arange(E, dtype=jnp.int32)
+        is_start = jnp.concatenate([jnp.ones((1,), bool), so[1:] != so[:-1]])
+        run_start = jax.lax.associative_scan(
+            jnp.maximum, jnp.where(is_start, eidx, 0))
+        rank = eidx - run_start
+        valid_e = so < n
+        dst_fill = jnp.take(col_fill, jnp.minimum(so, n - 1))
+        slot = jnp.take(col_base, jnp.minimum(so, n - 1)) + dst_fill + rank
+        fits = valid_e & (dst_fill + rank < jnp.take(cap, jnp.minimum(so, n - 1)))
+        overflow = s.overflow + jnp.sum(valid_e & ~fits)
+        tgt_e = jnp.where(fits, slot, P)
+        pool_row = pool_row.at[tgt_e].set(sh, mode="drop")
+        pool_val = pool_val.at[tgt_e].set(sw2, mode="drop")
+        col_fill = col_fill.at[jnp.where(fits, so, n)].add(1, mode="drop")
+        dep = dep.at[jnp.where(fits, sh, n)].add(1, mode="drop")
+
+        return EngineState(
+            pool_row=pool_row, pool_val=pool_val, col_fill=col_fill,
+            dep=dep, elim=elim, D=D,
+            n_elim=s.n_elim + jnp.sum(cand_ok).astype(jnp.int32),
+            n_rounds=s.n_rounds + 1, overflow=overflow)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def _build_pool(g: Graph, fill_slack: int, dtype):
+    """Static slab layout: cap_k = owned-initial-degree + fill_slack."""
+    n = g.n
+    owned = np.zeros(n, np.int64)
+    np.add.at(owned, g.src, 1)
+    cap = owned + fill_slack
+    col_base = np.zeros(n + 1, np.int64)
+    np.cumsum(cap, out=col_base[1:])
+    P = int(col_base[-1])
+    pool_row = np.full(P, INVALID_ID, np.int32)
+    pool_val = np.zeros(P, dtype)
+    fill = np.zeros(n, np.int64)
+    # place initial edges at the head of their owner slab
+    idx = col_base[g.src] + _cumcount(g.src, n)
+    pool_row[idx] = g.dst
+    pool_val[idx] = g.w.astype(dtype)
+    fill[: n] = owned
+    dep = np.zeros(n, np.int64)
+    np.add.at(dep, g.dst, 1)
+    dmax = int(cap.max()) if n else 1
+    return (pool_row, pool_val, fill.astype(np.int32), dep.astype(np.int32),
+            col_base.astype(np.int32), cap.astype(np.int32), P, dmax)
+
+
+def _cumcount(keys: np.ndarray, n: int) -> np.ndarray:
+    """Occurrence rank of each element within its key group (keys arbitrary order)."""
+    order = np.argsort(keys, kind="stable")
+    sk = keys[order]
+    start = np.concatenate([[True], sk[1:] != sk[:-1]])
+    run_start = np.maximum.accumulate(np.where(start, np.arange(sk.size), 0))
+    rank_sorted = np.arange(sk.size) - run_start
+    rank = np.empty_like(rank_sorted)
+    rank[order] = rank_sorted
+    return rank
+
+
+def factorize_wavefront(g: Graph, key: jax.Array, *, chunk: int = 64,
+                        fill_slack: int = 32, strict: bool = True,
+                        max_retries: int = 3,
+                        dtype=np.float32) -> ACFactor:
+    """Parallel ParAC factorization.  Returns the same ``ACFactor`` as the
+    sequential oracle (bit-identical for the same key when no overflow)."""
+    n = g.n
+    slack = fill_slack
+    for attempt in range(max_retries + 1):
+        (pool_row, pool_val, fill, dep, col_base, cap, P, dmax) = \
+            _build_pool(g, slack, dtype)
+        final = _run_engine(
+            jnp.asarray(pool_row), jnp.asarray(pool_val), jnp.asarray(fill),
+            jnp.asarray(dep), jnp.asarray(col_base), jnp.asarray(cap), key,
+            dmax=dmax, chunk=min(chunk, max(n, 1)))
+        ovf = int(final.overflow)
+        if ovf == 0 or not strict or attempt == max_retries:
+            break
+        slack *= 2
+    if int(final.n_elim) != n:
+        raise RuntimeError(
+            f"engine stalled: {int(final.n_elim)}/{n} eliminated "
+            f"(overflow={ovf})")
+
+    pool_row_h = np.asarray(final.pool_row)
+    pool_val_h = np.asarray(final.pool_val)
+    fill_h = np.asarray(final.col_fill)
+    lens = fill_h.astype(np.int64)
+    col_ptr = np.zeros(n + 1, np.int64)
+    np.cumsum(lens, out=col_ptr[1:])
+    rows = np.empty(col_ptr[-1], np.int32)
+    vals = np.empty(col_ptr[-1], dtype)
+    for k in range(n):  # host-side CSC compaction
+        b = col_base[k]
+        rows[col_ptr[k]:col_ptr[k + 1]] = pool_row_h[b:b + fill_h[k]]
+        vals[col_ptr[k]:col_ptr[k + 1]] = pool_val_h[b:b + fill_h[k]]
+    stats = dict(rounds=int(final.n_rounds), overflow=ovf,
+                 chunk=chunk, fill_slack=slack, pool_size=P, dmax=dmax)
+    return ACFactor(n=n, col_ptr=col_ptr, rows=rows, vals=vals,
+                    D=np.asarray(final.D), stats=stats)

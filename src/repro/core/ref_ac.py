@@ -1,0 +1,125 @@
+"""Sequential randomized-Cholesky oracle (paper Algorithms 1 + 2).
+
+Right-looking, eager, one vertex at a time in label order — the reference
+against which the parallel wavefront engine must match *bit-exactly*
+(same per-vertex uniforms ⇒ same factor; DESIGN.md §2).
+
+Data layout mirrors the classic formulation: the current graph's edges are
+bucketed by their *min-label* endpoint ("owner column").  Because an edge's
+min endpoint is always eliminated first (an alive edge (j,k), j<k keeps
+dep[k] > 0), the owner bucket of vertex k holds exactly L(:,k)'s
+off-diagonal entries when k's turn arrives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .laplacian import Graph
+from .column_math import eliminate_column, column_uniforms, INVALID_ID
+
+
+@dataclasses.dataclass
+class ACFactor:
+    """L ≈ G D Gᵀ with G unit-lower-triangular in elimination order.
+
+    CSC arrays over *relabeled* vertex positions (0..n-1 = elimination
+    order).  ``perm`` maps original vertex -> position; ``iperm`` inverse.
+    """
+
+    n: int
+    col_ptr: np.ndarray   # int64[n+1]
+    rows: np.ndarray      # int32[nnz]  (strictly > column index)
+    vals: np.ndarray      # f32[nnz]    (G off-diagonal values, typically < 0)
+    D: np.ndarray         # f32[n]
+    perm: Optional[np.ndarray] = None   # original id -> position
+    stats: Optional[dict] = None
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.shape[0])
+
+    def fill_ratio(self, g: Graph) -> float:
+        """Paper Fig. 4 metric: 2·nnz(G) / nnz(L)."""
+        nnz_L = 2 * g.m + g.n
+        nnz_G = 2 * (self.nnz + self.n) - self.n
+        return nnz_G / nnz_L
+
+    def dense_G(self) -> np.ndarray:
+        G = np.eye(self.n, dtype=np.float64)
+        for c in range(self.n):
+            lo, hi = self.col_ptr[c], self.col_ptr[c + 1]
+            G[self.rows[lo:hi], c] = self.vals[lo:hi]
+        return G
+
+    def dense_M(self) -> np.ndarray:
+        """Dense preconditioner matrix G D Gᵀ (tests only)."""
+        G = self.dense_G()
+        return (G * self.D[None, :].astype(np.float64)) @ G.T
+
+
+def _next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+@partial(jax.jit, static_argnums=(4,))
+def _elim_padded(ids, ws, valid, u, width):
+    return eliminate_column(ids, ws, valid, u)
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _uniforms(key, vertex, width):
+    return column_uniforms(key, vertex, width)
+
+
+def factorize_sequential(g: Graph, key: jax.Array,
+                         dtype=np.float32) -> ACFactor:
+    """Run AC sequentially in label order (labels = elimination order)."""
+    n = g.n
+    cols: List[List] = [[] for _ in range(n)]
+    for s, d, w in zip(g.src, g.dst, g.w.astype(dtype)):
+        cols[int(s)].append((int(d), dtype(w)))
+
+    col_rows, col_vals = [], []
+    D = np.zeros(n, dtype=dtype)
+    for k in range(n):
+        entries = cols[k]
+        cols[k] = None  # free
+        d = len(entries)
+        if d == 0:
+            col_rows.append(np.zeros(0, np.int32))
+            col_vals.append(np.zeros(0, dtype))
+            continue
+        width = _next_pow2(d)
+        ids = np.full(width, INVALID_ID, np.int32)
+        ws = np.zeros(width, dtype)
+        ids[:d] = [e[0] for e in entries]
+        ws[:d] = [e[1] for e in entries]
+        valid = np.zeros(width, bool)
+        valid[:d] = True
+        u = _uniforms(key, jnp.int32(k), width)
+        res = _elim_padded(jnp.asarray(ids), jnp.asarray(ws),
+                           jnp.asarray(valid), u, width)
+        m = int(res.m)
+        D[k] = np.asarray(res.ell_kk)
+        col_rows.append(np.asarray(res.g_rows[:m]))
+        col_vals.append(np.asarray(res.g_vals[:m]))
+        ev = np.asarray(res.e_valid)
+        e_lo = np.asarray(res.e_lo)[ev]
+        e_hi = np.asarray(res.e_hi)[ev]
+        e_w = np.asarray(res.e_w)[ev]
+        for lo, hi, w in zip(e_lo, e_hi, e_w):
+            cols[int(lo)].append((int(hi), dtype(w)))
+
+    lens = np.array([r.shape[0] for r in col_rows], dtype=np.int64)
+    col_ptr = np.zeros(n + 1, np.int64)
+    np.cumsum(lens, out=col_ptr[1:])
+    rows = (np.concatenate(col_rows) if col_ptr[-1] else np.zeros(0, np.int32))
+    vals = (np.concatenate(col_vals) if col_ptr[-1] else np.zeros(0, dtype))
+    return ACFactor(n=n, col_ptr=col_ptr, rows=rows.astype(np.int32),
+                    vals=vals.astype(dtype), D=D)

@@ -1,0 +1,2 @@
+from .steps import (make_train_step, make_prefill, make_decode_step,  # noqa: F401
+                    train_state_specs, batch_axes_for, cache_pspecs)

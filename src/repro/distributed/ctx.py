@@ -1,0 +1,66 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the step builders install the active mesh
+here and layers pin their big intermediates with ``constrain(x, ...)``
+(logical axis names, same vocabulary as the param rules).  Without a
+mesh installed (unit tests, examples on one device) ``constrain`` is the
+identity.  Axes whose dimension does not divide the mesh extent are
+silently dropped (e.g. batch=1 long-decode replicates batch).
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE: Dict[str, Any] = {"mesh": None, "rules": None, "batch_axes": None}
+
+
+def install(mesh, rules: Dict[str, Any], batch_axes: Sequence[str]):
+    _STATE.update(mesh=mesh, rules=dict(rules), batch_axes=tuple(batch_axes))
+
+
+def clear():
+    _STATE.update(mesh=None, rules=None, batch_axes=None)
+
+
+@contextmanager
+def use(mesh, rules, batch_axes):
+    old = dict(_STATE)
+    install(mesh, rules, batch_axes)
+    try:
+        yield
+    finally:
+        _STATE.update(old)
+
+
+def constrain(x, *axes: Optional[str]):
+    """axes: one logical name (or None) per dim of x; 'batch' maps to the
+    installed batch mesh axes."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    rules = _STATE["rules"]
+    parts = []
+    used = set()
+    for i, a in enumerate(axes):
+        if a is None:
+            parts.append(None)
+            continue
+        m = _STATE["batch_axes"] if a == "batch" else rules.get(a)
+        if m is None or m == ():
+            parts.append(None)
+            continue
+        names = tuple(n for n in ((m,) if isinstance(m, str) else tuple(m))
+                      if n not in used)
+        size = math.prod(mesh.shape[n] for n in names)
+        if not names or size <= 1 or x.shape[i] % size != 0:
+            parts.append(None)
+        else:
+            used.update(names)
+            parts.append(names[0] if len(names) == 1 else names)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))

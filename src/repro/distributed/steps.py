@@ -1,0 +1,262 @@
+"""Distributed train / prefill / decode step builders.
+
+Sharding summary (baseline layout; EXPERIMENTS.md §Perf iterates on it):
+
+  params      TP on ``model`` (heads / mlp / experts / vocab) and
+              FSDP on ``data`` (the ``embed`` logical axis) — ZeRO-3-style;
+              XLA SPMD inserts the weight all-gathers at use sites.
+  activations batch -> ("pod", "data"); features unsharded between ops
+              (XLA propagates TP shardings through the layer body).
+  kv caches   batch -> ("pod","data") when divisible, kv_seq -> "model"
+              (+ any batch-unused data axes) — the flash-decoding layout.
+  opt state   same tree/specs as params (fully sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as tf
+from repro.models.common import (abstract_params, init_params, param_pspecs,
+                                 rules_for_mesh)
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update, OptState
+from repro.configs.shapes import ShapeCell
+from repro.distributed import ctx
+
+
+# ---------------------------------------------------------------------------
+# batch / cache sharding helpers
+# ---------------------------------------------------------------------------
+
+def batch_axes_for(mesh, batch: int) -> Tuple[str, ...]:
+    """Greedy assignment of (pod, data) mesh axes to the batch dim."""
+    axes = []
+    rem = batch
+    for a in ("pod", "data"):
+        if a in mesh.axis_names and rem % mesh.shape[a] == 0:
+            axes.append(a)
+            rem //= mesh.shape[a]
+    return tuple(axes)
+
+
+def kv_seq_axes(mesh, batch: int):
+    baxes = batch_axes_for(mesh, batch)
+    return ["model"] + [a for a in ("pod", "data")
+                        if a in mesh.axis_names and a not in baxes]
+
+
+def cache_pspecs(cfg: ModelConfig, mesh, batch: int, seq_len: int):
+    """PartitionSpecs for decode-cache pytrees."""
+    baxes = batch_axes_for(mesh, batch)
+    b = tuple(baxes) or None
+    seq_axes = kv_seq_axes(mesh, batch)
+
+    def seq_spec(length: int):
+        axes = []
+        rem_axes = list(seq_axes)
+        size = 1
+        for a in rem_axes:
+            if length % (size * mesh.shape[a]) == 0:
+                axes.append(a)
+                size *= mesh.shape[a]
+        return tuple(axes) or None
+
+    def one(kind: str):
+        if kind in ("attn", "local"):
+            L = min(seq_len, cfg.local_window) if (
+                kind == "local" and cfg.local_window) else seq_len
+            kv = {"k": P(b, seq_spec(L), None, None),
+                  "v": P(b, seq_spec(L), None, None)}
+            return kv
+        if kind == "ssm":
+            return {"h": P(b, "model", None, None),
+                    "conv": {"x": P(b, None, "model"),
+                             "B": P(b, None, None),
+                             "C": P(b, None, None)}}
+        if kind == "rglru":
+            return {"h": P(b, "model"), "conv": P(b, None, "model")}
+        raise ValueError(kind)
+
+    n_periods, rem = tf._split_layers(cfg)   # honors force_unroll/enc-dec
+    specs: Dict[str, Any] = {}
+    if n_periods:
+        specs["scan"] = {}
+        for t, kind in enumerate(cfg.pattern):
+            one_spec = one(kind)
+            specs["scan"][f"pos{t}"] = jax.tree.map(
+                lambda s: P(None, *s), one_spec,
+                is_leaf=lambda x: isinstance(x, P))
+    specs["rem"] = [one(cfg.layer_kinds[n_periods * len(cfg.pattern) + t])
+                    for t in range(rem)]
+    return specs
+
+
+def _data_pspec(mesh, batch: int, extra_dims: int = 1):
+    b = batch_axes_for(mesh, batch)
+    return P(b or None, *([None] * extra_dims))
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def train_state_specs(cfg: ModelConfig, mesh, fsdp: bool = True):
+    rules = rules_for_mesh(mesh)
+    if not fsdp:
+        rules["embed"] = None          # replicate weights over "data"
+    pspecs = param_pspecs(tf.pdefs(cfg), rules, mesh)
+    opt_specs = OptState(mu=pspecs, nu=pspecs, count=P())
+    return pspecs, opt_specs
+
+
+def make_train_step(cfg: ModelConfig, mesh, cell: ShapeCell, *,
+                    lr: float = 3e-4, grad_accum: int = 8,
+                    fsdp: bool = True, moe_weight_gather: bool = False,
+                    donate: bool = True):
+    """Returns (step_fn, in_shardings, out_shardings) ready for jax.jit.
+
+    ``grad_accum`` splits the global batch into sequential microbatches
+    with fp32 (sharded) gradient accumulation — the standard trick that
+    brings per-device activation footprint down to HBM size at global
+    batch 256 × 4k while keeping the optimizer math identical.
+    """
+    pspecs, opt_specs = train_state_specs(cfg, mesh, fsdp=fsdp)
+    tok_spec = _data_pspec(mesh, cell.global_batch)
+    b_axes = batch_axes_for(mesh, cell.global_batch)
+    rules = rules_for_mesh(mesh)
+    if not fsdp:
+        rules["embed"] = None
+    if moe_weight_gather:
+        # keep MoE token buffers batch-sharded only; the expert GEMM then
+        # all-gathers expert *weights* over `model` instead of
+        # all-reducing token buffers (EXPERIMENTS.md §Perf cell B)
+        rules["experts"] = None
+    A = grad_accum
+    while cell.global_batch % A or (cell.global_batch // A) % max(
+            1, __import__("math").prod(mesh.shape[a] for a in b_axes)):
+        A -= 1   # largest accum factor keeping microbatches shardable
+    mb = cell.global_batch // A
+
+    def step(params, opt, tokens, targets, enc_frames=None):
+        with ctx.use(mesh, rules, b_axes):
+            def lf(p, tok, tgt, enc):
+                return tf.loss_fn(p, cfg, tok, tgt, enc)
+
+            def micro(carry, xs):
+                g_acc, l_acc, ce_acc, aux_acc = carry
+                tok, tgt = xs[0], xs[1]
+                enc = xs[2] if enc_frames is not None else None
+                (loss, (cel, aux)), g = jax.value_and_grad(
+                    lf, has_aux=True)(params, tok, tgt, enc)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss, ce_acc + cel,
+                        aux_acc + aux), ()
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            z = jnp.zeros((), jnp.float32)
+            xs = (tokens.reshape(A, mb, -1), targets.reshape(A, mb, -1))
+            if enc_frames is not None:
+                xs = xs + (enc_frames.reshape((A, mb) + enc_frames.shape[1:]),)
+            (grads, loss, cel, aux), _ = jax.lax.scan(
+                micro, (g0, z, z, z), xs)
+            grads = jax.tree.map(lambda g: g / A, grads)
+            params2, opt2, gnorm = adamw_update(grads, opt, params, lr=lr)
+        metrics = {"loss": loss / A, "ce": cel / A, "aux": aux / A,
+                   "gnorm": gnorm}
+        return params2, opt2, metrics
+
+    ns = lambda s: NamedSharding(mesh, s)
+    in_sh = (jax.tree.map(ns, pspecs),
+             jax.tree.map(ns, opt_specs),
+             ns(tok_spec), ns(tok_spec))
+    if cfg.is_encoder_decoder:
+        in_sh = in_sh + (ns(P(b_axes or None, None, None)),)
+    out_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, opt_specs),
+              {k: ns(P()) for k in ("loss", "ce", "aux", "gnorm")})
+    return step, in_sh, out_sh
+
+
+def make_prefill(cfg: ModelConfig, mesh, cell: ShapeCell):
+    pspecs, _ = train_state_specs(cfg, mesh)
+    tok_spec = _data_pspec(mesh, cell.global_batch)
+    cspecs = cache_pspecs(cfg, mesh, cell.global_batch, cell.seq_len)
+    ns = lambda s: NamedSharding(mesh, s)
+
+    rules = rules_for_mesh(mesh)
+    b_axes = batch_axes_for(mesh, cell.global_batch)
+
+    def fn(params, tokens, enc_frames=None):
+        with ctx.use(mesh, rules, b_axes):
+            logits, caches = tf.prefill(params, cfg, tokens, cell.seq_len,
+                                        enc_frames=enc_frames)
+        return logits, caches
+
+    in_sh = (jax.tree.map(ns, pspecs), ns(tok_spec))
+    if cfg.is_encoder_decoder:
+        in_sh = in_sh + (ns(P(b_axes or None, None, None)),)
+    out_sh = (ns(_data_pspec(mesh, cell.global_batch, 2)),
+              jax.tree.map(ns, cspecs, is_leaf=lambda x: isinstance(x, P)))
+    return fn, in_sh, out_sh
+
+
+def make_decode_step(cfg: ModelConfig, mesh, cell: ShapeCell, *,
+                     feature_shard=None, fsdp: bool = True):
+    pspecs, _ = train_state_specs(cfg, mesh, fsdp=fsdp)
+    cspecs = cache_pspecs(cfg, mesh, cell.global_batch, cell.seq_len)
+    tok_spec = _data_pspec(mesh, cell.global_batch)
+    b_axes = batch_axes_for(mesh, cell.global_batch)
+    ns = lambda s: NamedSharding(mesh, s)
+
+    rules = rules_for_mesh(mesh)
+    rules["kv_seq"] = tuple(kv_seq_axes(mesh, cell.global_batch))
+    if feature_shard is None:
+        # auto: single-stream decode leaves "data" idle for batch — use it
+        # for activation features (adopted in §Perf cell A: 3.1× memory)
+        feature_shard = "data" not in batch_axes_for(mesh, cell.global_batch)
+    if feature_shard:
+        # single-stream decode: batch can't use "data" — shard activation
+        # features on it instead (2D TP; weights stay 2D-sharded)
+        rules["act_embed"] = "data"
+
+    def fn(params, caches, tokens, cache_pos, enc_out=None):
+        with ctx.use(mesh, rules, b_axes):
+            logits, new_caches = tf.decode_step(params, cfg, caches, tokens,
+                                                cache_pos, enc_out=enc_out)
+        return logits, new_caches
+
+    cache_sh = jax.tree.map(ns, cspecs, is_leaf=lambda x: isinstance(x, P))
+    in_sh = (jax.tree.map(ns, pspecs), cache_sh, ns(tok_spec), ns(P()))
+    if cfg.is_encoder_decoder:
+        in_sh = in_sh + (ns(P(b_axes or None, None, None)),)
+    out_sh = (ns(P(b_axes or None, "model")), cache_sh)
+    return fn, in_sh, out_sh
+
+
+def make_abstract_inputs(cfg: ModelConfig, mesh, cell: ShapeCell,
+                         dtype=jnp.bfloat16):
+    """Abstract (params, opt, inputs) for .lower() — no allocation."""
+    params = abstract_params(tf.pdefs(cfg), dtype)
+    if cell.kind == "train":
+        opt = OptState(
+            mu=jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape,
+                                                           jnp.float32),
+                            params),
+            nu=jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape,
+                                                           jnp.float32),
+                            params),
+            count=jax.ShapeDtypeStruct((), jnp.int32))
+        return params, opt
+    if cell.kind == "decode":
+        caches = jax.eval_shape(
+            lambda: tf.init_caches(cfg, cell.global_batch, cell.seq_len,
+                                   dtype))
+        return params, caches
+    return (params,)

@@ -1,0 +1,108 @@
+"""Jit'd public wrappers around the Pallas kernels: padding, layout
+conversion, and level-scheduled triangular solve built on the SpMV
+kernel.  ``interpret=True`` everywhere on CPU (the container target);
+on TPU hardware the same calls lower natively.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .sample_clique import sample_clique_pallas, INVALID_ID
+from .spmv import ell_spmv_pallas
+from . import ref as kref
+
+
+def _next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+@partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def sample_clique(ids, ws, fill, u, *, interpret: bool = True,
+                  block_rows: int = 8):
+    """Batched vertex elimination.  ids/ws/u: [R, W]; fill: [R].
+    Pads W to a power of two and dispatches to the Pallas kernel."""
+    R, W = ids.shape
+    W2 = max(_next_pow2(W), 2)
+    if W2 != W:
+        pad = ((0, 0), (0, W2 - W))
+        ids = jnp.pad(ids, pad, constant_values=INVALID_ID)
+        ws = jnp.pad(ws, pad)
+        u = jnp.pad(u, pad, constant_values=0.5)
+    return sample_clique_pallas(ids, ws, fill, u, block_rows=block_rows,
+                                interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ell_spmv(cols, vals, x, *, interpret: bool = True):
+    return ell_spmv_pallas(cols, vals, x, interpret=interpret)
+
+
+def graph_to_ell(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
+                 n: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Laplacian rows in ELL layout (diagonal + negated off-diagonals)."""
+    deg = np.zeros(n, np.int64)
+    np.add.at(deg, src, 1)
+    np.add.at(deg, dst, 1)
+    K = int(deg.max()) + 1                       # +1 for the diagonal
+    cols = np.zeros((n, K), np.int32)
+    vals = np.zeros((n, K), np.float32)
+    fill = np.ones(n, np.int64)                  # slot 0 = diagonal
+    cols[:, 0] = np.arange(n)
+    for s, d, ww in zip(src, dst, w):
+        vals[s, 0] += ww
+        vals[d, 0] += ww
+        cols[s, fill[s]] = d
+        vals[s, fill[s]] = -ww
+        fill[s] += 1
+        cols[d, fill[d]] = s
+        vals[d, fill[d]] = -ww
+        fill[d] += 1
+    return cols, vals
+
+
+def schedule_to_ell(sched) -> Tuple[np.ndarray, ...]:
+    """Pad a trisolve LevelSchedule into per-level ELL rows.
+
+    Returns (row_ids, cols, vals, level_ptr) with rows grouped by level;
+    each row padded to the level's max in-degree.
+    """
+    rows_all, cols_all, vals_all, ptr = [], [], [], [0]
+    for lv in range(sched.n_levels):
+        lo, hi = int(sched.level_ptr[lv]), int(sched.level_ptr[lv + 1])
+        if hi == lo:
+            ptr.append(ptr[-1])
+            continue
+        dst = sched.e_dst[lo:hi]
+        uniq, inv = np.unique(dst, return_inverse=True)
+        counts = np.bincount(inv)
+        K = int(counts.max())
+        cols = np.zeros((uniq.size, K), np.int32)
+        vals = np.zeros((uniq.size, K), np.float32)
+        fill = np.zeros(uniq.size, np.int64)
+        for e in range(lo, hi):
+            r = inv[e - lo]
+            cols[r, fill[r]] = sched.e_src[e]
+            vals[r, fill[r]] = sched.e_val[e]
+            fill[r] += 1
+        rows_all.append(uniq.astype(np.int32))
+        cols_all.append(cols)
+        vals_all.append(vals)
+        ptr.append(ptr[-1] + uniq.size)
+    return rows_all, cols_all, vals_all, np.asarray(ptr)
+
+
+def trisolve_levels(level_rows, level_cols, level_vals, b, flip: bool = False,
+                    interpret: bool = True):
+    """Level-scheduled unit-triangular solve driven by the SpMV kernel."""
+    y = jnp.asarray(b[::-1] if flip else b)
+    for rows, cols, vals in zip(level_rows, level_cols, level_vals):
+        rows = jnp.asarray(rows)
+        upd = y[rows] - ell_spmv(jnp.asarray(cols), jnp.asarray(vals), y,
+                                 interpret=interpret)
+        y = y.at[rows].set(upd)
+    return y[::-1] if flip else y

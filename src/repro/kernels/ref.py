@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every kernel (the allclose/bit-exact baselines).
+
+``sample_clique_ref`` IS the shared column math used by both the
+sequential oracle and the wavefront engine — the kernel must match it
+bit-for-bit (same Hillis-Steele bracketing by construction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.column_math import eliminate_column
+
+
+def sample_clique_ref(ids, ws, fill, u):
+    """Vectorized reference over rows.  Same outputs as the kernel."""
+    W = ids.shape[1]
+    valid = jax.lax.broadcasted_iota(jnp.int32, ids.shape, 1) < fill[:, None]
+    res = jax.vmap(eliminate_column)(ids, ws, valid, u)
+    return (res.g_rows, res.g_vals, res.m[:, None], res.ell_kk[:, None],
+            res.e_lo, res.e_hi, res.e_w, res.e_valid)
+
+
+def ell_spmv_ref(cols, vals, x):
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def trisolve_level_ref(cols, vals, b_rows, y):
+    """One level of the unit-lower solve: y_rows = b_rows − Σ v·y[col]."""
+    return b_rows - jnp.sum(vals * y[cols], axis=1)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Plain softmax attention oracle.  q,k,v: [B,H,S,d]."""
+    import math
+    S = q.shape[2]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,53 @@
+"""Pallas ELL-format SpMV — the PCG solve-phase hot loop (paper §6:
+both the randomized factor application and CG's matvec are
+bandwidth-bound; ELL padding makes the access pattern rectangular, the
+TPU-friendly replacement for cuSPARSE's CSR vector kernels).
+
+Layout: rows padded to a fixed ``K`` nonzeros (ELLPACK).  The dense
+vector x lives wholly in VMEM (fits for n ≤ ~2M fp32 — the laptop-scale
+regime; beyond that rows are bucketed into column-sliced panels, same
+kernel per panel).  Each grid step processes a (Rb, K) row tile:
+gather x at the tile's column indices, multiply by the tile's values,
+reduce along K.
+
+The same kernel executes the *level-scheduled triangular solve* step:
+``y_level = b_level − ELL_rows_level @ y`` (ops.trisolve_levels), which
+is how the paper's critical-path analysis (Fig. 4) maps onto TPU.
+
+Validated in interpret mode; on real TPU the x-gather lowers via
+dynamic-slice loops (small K) — noted in DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(cols_ref, vals_ref, x_ref, y_ref):
+    cols = cols_ref[...]                 # (Rb, K) int32, padded with 0
+    vals = vals_ref[...]                 # (Rb, K) f32, padded with 0.0
+    x = x_ref[...]                       # (n,) f32 — whole vector in VMEM
+    contrib = vals * x[cols]
+    y_ref[...] = jnp.sum(contrib, axis=1, keepdims=True)
+
+
+def ell_spmv_pallas(cols, vals, x, *, block_rows: int = 256,
+                    interpret: bool = True):
+    """y[i] = Σ_k vals[i,k] · x[cols[i,k]].  cols/vals: [R, K]; x: [n]."""
+    R, K = cols.shape
+    n = x.shape[0]
+    Rb = max(1, min(block_rows, R))
+    while R % Rb:
+        Rb -= 1
+    grid = (R // Rb,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((Rb, K), lambda r: (r, 0)),
+                  pl.BlockSpec((Rb, K), lambda r: (r, 0)),
+                  pl.BlockSpec((n,), lambda r: (0,))],
+        out_specs=pl.BlockSpec((Rb, 1), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, 1), vals.dtype),
+        interpret=interpret,
+    )(cols, vals, x)[:, 0]

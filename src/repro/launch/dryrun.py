@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import — jax locks the
+device count at first init.  This module is the ONLY place that sets it;
+tests and benchmarks see the real single device.
+
+Per cell:
+  1. build the production config (padded heads/vocab) and the mesh
+     (16×16 single-pod or 2×16×16 multi-pod),
+  2. jit the cell's step (train_step / prefill / serve decode) with
+     explicit in/out shardings, ``.lower()`` on ShapeDtypeStructs,
+     ``.compile()``,
+  3. record memory_analysis(), cost_analysis(), and the collective
+     schedule parsed from the optimized HLO,
+  4. compile two unrolled probe programs (1 and 2 pattern periods) and
+     extrapolate per-layer costs (see launch/roofline.py for why).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-probes]
+  python -m repro.launch.dryrun --arch qwen3-14b --all-shapes --multi-pod
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+
+def _build_step(cfg, mesh, cell, probe: bool = False, variant=None):
+    from repro.distributed.steps import (make_train_step, make_prefill,
+                                         make_decode_step,
+                                         make_abstract_inputs)
+    from repro.configs.shapes import input_specs
+
+    v = variant or {}
+    specs = input_specs(cfg, cell)
+    if cell.kind == "train":
+        # probes lower without the microbatch scan so HloCostAnalysis sees
+        # the whole step's layer work (the scan body is counted once)
+        step, in_sh, out_sh = make_train_step(
+            cfg, mesh, cell, grad_accum=1 if probe else
+            v.get("grad_accum", 8), fsdp=v.get("fsdp", True),
+            moe_weight_gather=v.get("moe_weight_gather", False))
+        params, opt = make_abstract_inputs(cfg, mesh, cell)
+        args = (params, opt, specs["tokens"], specs["targets"])
+        if cfg.is_encoder_decoder:
+            args = args + (specs["enc_frames"],)
+    elif cell.kind == "prefill":
+        step, in_sh, out_sh = make_prefill(cfg, mesh, cell)
+        (params,) = make_abstract_inputs(cfg, mesh, cell)
+        args = (params, specs["tokens"])
+        if cfg.is_encoder_decoder:
+            args = args + (specs["enc_frames"],)
+    else:
+        step, in_sh, out_sh = make_decode_step(
+            cfg, mesh, cell, feature_shard=v.get("feature_shard", None),
+            fsdp=v.get("fsdp", True))
+        params, caches = make_abstract_inputs(cfg, mesh, cell)
+        args = (params, caches, specs["tokens"], specs["cache_pos"])
+        if cfg.is_encoder_decoder:
+            args = args + (specs["enc_out"],)
+    return step, in_sh, out_sh, args
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, probes: bool = True,
+             verbose: bool = True, variant=None, cfg_override=None):
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES, cell_applicable
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import roofline as rl
+
+    cell = SHAPES[shape]
+    cfg = get_config(arch, production=True)
+    if cfg_override:
+        cfg = dataclasses.replace(cfg, **cfg_override)
+    ok, why = cell_applicable(cfg, cell)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "applicable": ok, "note": why}
+    if not ok:
+        rec["status"] = "skipped"
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 512 if multi_pod else 256
+
+    def compile_cfg(c, tag):
+        step, in_sh, out_sh, args = _build_step(
+            c, mesh, cell, probe=tag.startswith("probe"), variant=variant)
+        t0 = time.time()
+        donate = tuple(range(2)) if cell.kind == "train" else ()
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        if verbose:
+            print(f"  [{tag}] lower {t1-t0:.1f}s compile {t2-t1:.1f}s",
+                  flush=True)
+        return compiled, t2 - t0
+
+    try:
+        compiled, secs = compile_cfg(cfg, "full")
+        ma = compiled.memory_analysis()
+        rec.update(status="ok", compile_s=round(secs, 1), mem={
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "peak_bytes": int(ma.argument_size_in_bytes
+                              + ma.temp_size_in_bytes),
+        })
+        full_cost = rl.cost_point(compiled)
+        rec["cost_full_scanbody_once"] = dataclasses.asdict(full_cost)
+
+        if probes:
+            period = len(cfg.pattern)
+            p1 = dataclasses.replace(cfg, n_layers=period, force_unroll=True)
+            p2 = dataclasses.replace(cfg, n_layers=2 * period,
+                                     force_unroll=True)
+            c1, _ = compile_cfg(p1, "probe1")
+            c2, _ = compile_cfg(p2, "probe2")
+            cp1, cp2 = rl.cost_point(c1), rl.cost_point(c2)
+            cost = rl.extrapolate(cp1, cp2, cfg.n_layers, period)
+            rec["cost"] = dataclasses.asdict(cost)
+            terms = rl.roofline_terms(cost)
+            mf = rl.model_flops(cfg, cell, chips)
+            terms["model_flops_per_dev"] = mf
+            terms["useful_fraction"] = mf / cost.flops if cost.flops else 0.0
+            rec["roofline"] = terms
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--all-shapes", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-probes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import list_archs
+    from repro.configs.shapes import SHAPES
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.all_shapes or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+                fp = outdir / f"{tag}.json"
+                if fp.exists():
+                    print(f"skip (exists): {tag}", flush=True)
+                    continue
+                print(f"=== {tag}", flush=True)
+                t0 = time.time()
+                rec = run_cell(arch, shape, mp, probes=not args.skip_probes)
+                rec["wall_s"] = round(time.time() - t0, 1)
+                fp.write_text(json.dumps(rec, indent=1))
+                print(f"  -> {rec['status']} ({rec['wall_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

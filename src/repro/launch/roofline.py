@@ -1,0 +1,142 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link.  Terms are computed from *per-device* HLO quantities (XLA
+compiles one SPMD program per device):
+
+    compute_s    = flops_per_device    / PEAK_FLOPS
+    memory_s     = bytes_per_device    / HBM_BW
+    collective_s = coll_bytes_per_dev  / LINK_BW
+
+Methodology note (documented in EXPERIMENTS.md §Roofline): XLA's
+HloCostAnalysis counts a ``while`` (lax.scan) body ONCE, not
+trip_count times.  We therefore compile two *unrolled probe* programs
+with 1 and 2 pattern-periods of layers and extrapolate:
+
+    total(L) = probe1 + (L - period) / period * (probe2 - probe1)
+
+which is exact for homogeneous periods (all ten archs).  The full-depth
+program is still lowered + compiled — that is the dry-run pass/fail and
+the source of memory_analysis() — only flops/bytes/collective-bytes come
+from the probes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*[^=]*?\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[tok_dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in (post-SPMD) HLO text."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        op = m.group(1)
+        # operands live inside the outermost parens after the op name
+        start = line.index("(", m.start())
+        depth, end = 0, len(line)
+        for i in range(start, len(line)):
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args = line[start:end]
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(args))
+        out[op] = out.get(op, 0) + nbytes
+    return out
+
+
+@dataclasses.dataclass
+class CostPoint:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    coll_by_op: Dict[str, int]
+
+
+def cost_point(compiled) -> CostPoint:
+    ca = compiled.cost_analysis()
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    return CostPoint(flops=float(ca.get("flops", 0.0)),
+                     bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+                     coll_bytes=float(sum(coll.values())),
+                     coll_by_op=coll)
+
+
+def extrapolate(probe1: CostPoint, probe2: CostPoint, n_layers: int,
+                period: int) -> CostPoint:
+    k = (n_layers - period) / period
+
+    def ex(a, b):
+        return a + k * (b - a)
+
+    ops = set(probe1.coll_by_op) | set(probe2.coll_by_op)
+    coll = {o: int(ex(probe1.coll_by_op.get(o, 0),
+                      probe2.coll_by_op.get(o, 0))) for o in ops}
+    return CostPoint(flops=ex(probe1.flops, probe2.flops),
+                     bytes_accessed=ex(probe1.bytes_accessed,
+                                       probe2.bytes_accessed),
+                     coll_bytes=ex(probe1.coll_bytes, probe2.coll_bytes),
+                     coll_by_op=coll)
+
+
+def roofline_terms(cost: CostPoint) -> Dict[str, float]:
+    compute_s = cost.flops / PEAK_FLOPS
+    memory_s = cost.bytes_accessed / HBM_BW
+    collective_s = cost.coll_bytes / LINK_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    total = max(compute_s, memory_s, collective_s)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": total,
+        "roofline_fraction": compute_s / total if total > 0 else 0.0,
+    }
+
+
+def model_flops(cfg, cell, chips: int) -> float:
+    """Analytic MODEL_FLOPS per device: 6·N_active·tokens (train) or
+    2·N_active·tokens (inference) — the 'useful compute' yardstick."""
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens / chips
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens / chips
+    tokens = cell.global_batch  # one step
+    return 2.0 * n_active * tokens / chips

@@ -1,0 +1,47 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b \
+        --steps 100 --smoke            # reduced config, host devices
+
+On a real cluster the same entrypoint runs under
+``jax.distributed.initialize`` with the production mesh; here the
+--smoke path exercises the identical Trainer/step code on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.configs.shapes import ShapeCell
+    from repro.launch.mesh import make_host_mesh
+    from repro.train import Trainer, TrainConfig
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh(1, 1)
+    cell = ShapeCell("cli", "train", args.seq, args.batch)
+    tcfg = TrainConfig(steps=args.steps, ckpt_every=max(args.steps // 2, 1),
+                       ckpt_dir=args.ckpt_dir, lr=args.lr,
+                       grad_accum=args.grad_accum, log_every=10)
+    tr = Trainer(cfg, mesh, cell, tcfg)
+    resumed = tr.init_or_restore()
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"resumed={resumed} start_step={tr.step}")
+    tr.run(on_step=lambda s, m: print(m))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+"""Grouped-query attention: train/prefill and cached decode paths.
+
+Sharding layout (DESIGN.md, EXPERIMENTS.md §Dry-run):
+
+* q heads are padded to ``cfg.padded_heads`` and sharded on the ``model``
+  mesh axis; padded heads have zero o-proj rows so outputs (and gradients
+  into real weights) are unaffected.
+* kv heads are *replicated* over ``model`` (they rarely divide 16) and
+  expanded per-device to the local q heads with a static gather.
+* decode caches are laid out ``[batch, kv_seq, kv_heads, head_dim]`` with
+  ``batch -> (pod, data)`` and ``kv_seq -> model``: the flash-decoding
+  split-KV schedule then *emerges from XLA SPMD* — softmax over the
+  sharded kv_seq axis lowers to tiny all-reduces of per-shard max/sum
+  followed by a psum of the weighted values.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import PDef, rms_norm, rope, softcap
+from .config import ModelConfig
+from repro.distributed.ctx import constrain
+
+NEG_INF = -2.0e38
+
+
+def attn_pdefs(cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KV = cfg.padded_heads, cfg.n_kv_heads
+    p = {
+        "wq": PDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": PDef((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": PDef((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": PDef((H, hd, d), ("heads", "head_dim", "embed"),
+                   init="zeros" if H != cfg.n_heads else "normal"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = PDef((H, hd), ("heads", "head_dim"), init="zeros")
+        p["bk"] = PDef((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = PDef((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = PDef((hd,), ("head_dim",), init="zeros")
+        p["k_norm"] = PDef((hd,), ("head_dim",), init="zeros")
+    return p
+
+
+def _grouped_ok(cfg: ModelConfig) -> bool:
+    """Grouped (expansion-free) GQA path: only when heads need no padding
+    and divide evenly into kv groups."""
+    return (cfg.padded_heads == cfg.n_heads
+            and cfg.n_heads % max(cfg.n_kv_heads, 1) == 0)
+
+
+def _q_to_kv_map(cfg: ModelConfig) -> np.ndarray:
+    """Padded q-head index -> kv-head index (real heads keep GQA groups)."""
+    group = cfg.n_heads // cfg.n_kv_heads
+    m = np.zeros(cfg.padded_heads, np.int32)
+    m[: cfg.n_heads] = np.arange(cfg.n_heads) // group
+    return m  # padded heads point at kv 0; their wo rows are zero
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _banded_local_attn(qg, k, v, scale: float, window: int, softcap_v):
+    """Exact sliding-window attention over diagonal bands: each W-sized
+    query block attends to its own and the previous key block only —
+    score bytes drop from O(S*S) to O(S*2W) (EXPERIMENTS.md §Perf).
+
+    qg: [B,S,KV,G,hd]; k,v: [B,S,KV,hd]; requires S % window == 0.
+    """
+    B, S, KV, G, hd = qg.shape
+    W = window
+    nb = S // W
+    qb = qg.reshape(B, nb, W, KV, G, hd)
+    kb = k.reshape(B, nb, W, KV, hd)
+    vb = v.reshape(B, nb, W, KV, hd)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    kcat = jnp.concatenate([kprev, kb], axis=2)       # [B,nb,2W,KV,hd]
+    vcat = jnp.concatenate([vprev, vb], axis=2)
+    logits = jnp.einsum("bnwKGh,bnuKh->bnKGwu", qb * scale, kcat,
+                        preferred_element_type=jnp.float32)
+    logits = softcap_v(logits)
+    bidx = jnp.arange(nb, dtype=jnp.int32)[:, None, None]
+    ipos = bidx * W + jnp.arange(W, dtype=jnp.int32)[None, :, None]
+    jpos = (bidx - 1) * W + jnp.arange(2 * W, dtype=jnp.int32)[None, None, :]
+    mask = (jpos >= 0) & (jpos <= ipos) & (ipos - jpos < W)
+    logits = jnp.where(mask[None, :, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(qg.dtype)
+    out = jnp.einsum("bnKGwu,bnuKh->bnwKGh", probs, vcat)
+    return out.reshape(B, S, KV, G, hd)
+
+
+def attn_fwd(p, cfg: ModelConfig, x, *, local: bool,
+             positions: Optional[jnp.ndarray] = None,
+             kv_mask: Optional[jnp.ndarray] = None,
+             return_cache: bool = False):
+    """Full-sequence (train / prefill) attention.  x: [B, S, D]."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    q = constrain(q, "batch", None, "heads", None)
+    scale = cfg.head_dim ** -0.5
+    # banded path: exact sliding window over diagonal blocks (no S*S scores)
+    banded = (local and cfg.local_window and S % cfg.local_window == 0
+              and S > cfg.local_window and kv_mask is None)
+    if banded:
+        H, hd = q.shape[2], q.shape[3]
+        sc = lambda l: softcap(l, cfg.attn_softcap)
+        if _grouped_ok(cfg):
+            KV = cfg.n_kv_heads
+            qg = q.reshape(B, S, KV, H // KV, hd)
+            out = _banded_local_attn(qg, k, v, scale, cfg.local_window, sc)
+        else:
+            kmap = jnp.asarray(_q_to_kv_map(cfg))
+            ke = jnp.take(k, kmap, axis=2)
+            ve = jnp.take(v, kmap, axis=2)
+            qg = q.reshape(B, S, H, 1, hd)
+            out = _banded_local_attn(qg, ke, ve, scale, cfg.local_window, sc)
+        out = out.reshape(B, S, H, hd)
+        out = constrain(out, "batch", None, "heads", None)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        y = constrain(y, "batch", None, "act_embed")
+        if return_cache:
+            return y, {"k": k, "v": v}
+        return y
+    i = positions[:, None, :, None]
+    j = positions[:, None, None, :]
+    mask = j <= i
+    if local and cfg.local_window:
+        mask &= (i - j) < cfg.local_window
+    if kv_mask is not None:
+        mask &= kv_mask[:, None, None, :]
+    if _grouped_ok(cfg):
+        # no head padding: grouped einsum, no KV expansion copy
+        B, S, H, hd = q.shape
+        KV = cfg.n_kv_heads
+        G = H // KV
+        qg = q.reshape(B, S, KV, G, hd)
+        logits = jnp.einsum("bsKGh,btKh->bKGst", qg * scale, k,
+                            preferred_element_type=jnp.float32)
+        logits = softcap(logits, cfg.attn_softcap)
+        logits = jnp.where(mask[:, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bKGst,btKh->bsKGh", probs, v).reshape(B, S, H, hd)
+    else:
+        kmap = jnp.asarray(_q_to_kv_map(cfg))
+        ke = constrain(jnp.take(k, kmap, axis=2),
+                       "batch", None, "heads", None)
+        ve = constrain(jnp.take(v, kmap, axis=2),
+                       "batch", None, "heads", None)
+        logits = jnp.einsum("bshk,bthk->bhst", q * scale, ke,
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, "batch", "heads", None, None)
+        logits = softcap(logits, cfg.attn_softcap)
+        logits = jnp.where(mask, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthk->bshk", probs, ve)
+    out = constrain(out, "batch", None, "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    y = constrain(y, "batch", None, "act_embed")
+    if return_cache:
+        return y, {"k": k, "v": v}
+    return y
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    hd, KV = cfg.head_dim, cfg.n_kv_heads
+    return {
+        "k": jnp.zeros((batch, max_len, KV, hd), dtype),
+        "v": jnp.zeros((batch, max_len, KV, hd), dtype),
+    }
+
+
+def attn_decode(p, cfg: ModelConfig, x, cache, cache_pos, *, local: bool):
+    """Single-token cached decode.  x: [B, 1, D]; cache_pos: the *true*
+    sequence position (scalar int).
+
+    Local layers use a rolling buffer of length ``local_window``: position
+    p lives at slot p % window, k/v are stored pre-rotated at absolute
+    positions, and the buffer membership itself enforces the window (every
+    resident entry is within the last ``window`` positions).  Global
+    layers write at slot ``cache_pos`` directly.  With kv_seq sharded on
+    ``model``, XLA lowers the softmax to the split-KV (flash-decoding)
+    schedule.
+    """
+    B = x.shape[0]
+    rolling = bool(local and cfg.local_window)
+    L = cache["k"].shape[1]
+    slot = (cache_pos % L) if rolling else cache_pos
+    positions = jnp.full((B, 1), cache_pos, jnp.int32)  # true pos for rope
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    scale = cfg.head_dim ** -0.5
+    t = jnp.arange(L, dtype=jnp.int32)
+    # slots written so far: t <= cache_pos covers warm-up; once the rolling
+    # buffer has wrapped every slot is valid and in-window by construction.
+    mask = t[None, None, None, :] <= cache_pos
+    if _grouped_ok(cfg):
+        B_, S_, H_, hd_ = q.shape
+        KV = cfg.n_kv_heads
+        G = H_ // KV
+        kc = constrain(k, "batch", "kv_seq", None, None)
+        vc = constrain(v, "batch", "kv_seq", None, None)
+        qg = q.reshape(B_, S_, KV, G, hd_)
+        logits = jnp.einsum("bsKGh,btKh->bKGst", qg * scale, kc,
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, "batch", None, None, None, "kv_seq")
+        logits = softcap(logits, cfg.attn_softcap)
+        logits = jnp.where(mask[:, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bKGst,btKh->bsKGh", probs, vc)             .reshape(B_, S_, H_, hd_)
+    else:
+        kmap = jnp.asarray(_q_to_kv_map(cfg))
+        ke = constrain(jnp.take(k, kmap, axis=2),
+                       "batch", "kv_seq", None, None)
+        ve = constrain(jnp.take(v, kmap, axis=2),
+                       "batch", "kv_seq", None, None)
+        logits = jnp.einsum("bshk,bthk->bhst", q * scale, ke,
+                            preferred_element_type=jnp.float32)  # [B,H,1,T]
+        logits = constrain(logits, "batch", None, None, "kv_seq")
+        logits = softcap(logits, cfg.attn_softcap)
+        logits = jnp.where(mask, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthk->bshk", probs, ve)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k, "v": v}
+
+
+def cross_attn_pdefs(cfg: ModelConfig) -> dict:
+    """Whisper-style cross attention (bias, no rope)."""
+    d, hd, H = cfg.d_model, cfg.head_dim, cfg.padded_heads
+    return {
+        "wq": PDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": PDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wv": PDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wo": PDef((H, hd, d), ("heads", "head_dim", "embed"),
+                   init="zeros" if H != cfg.n_heads else "normal"),
+        "bq": PDef((H, hd), ("heads", "head_dim"), init="zeros"),
+        "bv": PDef((H, hd), ("heads", "head_dim"), init="zeros"),
+    }
+
+
+def cross_attn_fwd(p, cfg: ModelConfig, x, enc_kv):
+    """x: [B, S, D] queries; enc_kv: dict(k, v) precomputed [B, T, H, hd]."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]) + p["bq"]
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bshk,bthk->bhst", q * scale, enc_kv["k"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", probs, enc_kv["v"])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def encode_cross_kv(p, cfg: ModelConfig, enc_out):
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"]) + p["bv"]
+    return {"k": k, "v": v}

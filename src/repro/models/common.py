@@ -1,0 +1,196 @@
+"""Parameter/spec system and shared numeric building blocks.
+
+Parameters are plain pytrees (nested dicts) of arrays.  Every leaf is
+declared as a :class:`PDef` carrying its shape, *logical* axis names and
+initializer.  Three interpreters walk the same declaration tree:
+
+  * ``abstract_params``  -> ShapeDtypeStruct leaves (dry-run, no memory)
+  * ``init_params``      -> materialized arrays (smoke tests, examples)
+  * ``param_pspecs``     -> PartitionSpec leaves via logical->mesh rules
+
+Logical axis names are mapped to mesh axes by :data:`DEFAULT_RULES`
+(MaxText-style).  Axes that do not divide the mesh axis size must be
+padded by the config (``pad_to``) — divisibility is validated at spec
+construction so a dry-run failure is an error in the config, not in XLA.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# parameter declarations
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis names per dim
+    init: str = "normal"                     # normal | zeros | ones | embed
+    scale: float = 1.0                       # fan-in style scale override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_init(key, pd: PDef, dtype):
+    if pd.init == "zeros":
+        return jnp.zeros(pd.shape, dtype)
+    if pd.init == "ones":
+        return jnp.ones(pd.shape, dtype)
+    fan_in = pd.shape[0] if len(pd.shape) > 1 else pd.shape[0]
+    std = pd.scale / math.sqrt(max(fan_in, 1))
+    if pd.init == "embed":
+        std = pd.scale
+    return (jax.random.normal(key, pd.shape, jnp.float32) * std).astype(dtype)
+
+
+def is_pdef(x) -> bool:
+    return isinstance(x, PDef)
+
+
+def abstract_params(tree, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, dtype), tree,
+        is_leaf=is_pdef)
+
+
+def init_params(tree, key, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_pdef)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_leaf_init(k, pd, dtype) for k, pd in zip(keys, leaves)])
+
+
+# ---------------------------------------------------------------------------
+# logical axis -> mesh axis rules
+# ---------------------------------------------------------------------------
+
+# mesh axes: ("pod", "data", "model").  Single-pod mesh omits "pod".
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,               # sequence kept local in the baseline layout
+    "kv_seq": "model",         # decode caches: overridden per-cell by
+                               # make_decode_step (model + unused batch axes)
+    "vocab": "model",
+    # FSDP/ZeRO-3: weight matrices are additionally sharded over "data"
+    # along their embed dim; XLA all-gathers them at use sites.
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "layers": None,
+    "state": None,             # ssm state dim
+    "ssm_heads": "model",
+    "rec": "model",            # rg-lru recurrence features
+    "conv": None,
+    # activation feature dims (residual stream).  None by default; the
+    # decode-step builder maps it to "data" for single-stream decode so
+    # weights stay 2D-sharded and matmuls run distributed (psum) instead
+    # of all-gathering weight shards (EXPERIMENTS.md §Perf).
+    "act_embed": None,
+}
+
+
+def rules_for_mesh(mesh) -> Dict[str, Any]:
+    """Drop mesh axes not present (e.g. 'pod' on the single-pod mesh)."""
+    names = set(mesh.axis_names)
+    out = {}
+    for k, v in DEFAULT_RULES.items():
+        if isinstance(v, tuple):
+            vv = tuple(a for a in v if a in names)
+            out[k] = vv if vv else None
+        else:
+            out[k] = v if v in names else None
+    return out
+
+
+# axes that silently fall back to replication when the dim does not divide
+# the mesh extent (kv heads are often < 16; the attention layout replicates
+# them and expands per-device — see models/attention.py)
+SOFT_AXES = frozenset({"kv_heads"})
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], rules: Dict[str, Any],
+                     shape: Optional[Sequence[int]] = None,
+                     mesh=None) -> P:
+    parts = []
+    for i, a in enumerate(axes):
+        m = rules.get(a) if a is not None else None
+        if m is not None and shape is not None and mesh is not None:
+            size = math.prod(mesh.shape[x] for x in
+                             ((m,) if isinstance(m, str) else m))
+            if shape[i] % size != 0:
+                if a in SOFT_AXES:
+                    m = None
+                else:
+                    raise ValueError(
+                        f"logical axis {a!r} (dim {shape[i]}) not divisible "
+                        f"by mesh extent {size}; pad the config (pad_to)")
+        parts.append(m)
+    return P(*parts)
+
+
+def param_pspecs(tree, rules: Dict[str, Any], mesh=None):
+    return jax.tree.map(
+        lambda pd: logical_to_pspec(pd.axes, rules, pd.shape, mesh), tree,
+        is_leaf=is_pdef)
+
+
+def pad_to(x: int, multiple: int) -> int:
+    return ((x + multiple - 1) // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# numeric building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma + beta).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 1e4):
+    """Rotary embedding.  x: [..., seq, heads, head_dim]; positions [..., seq]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, half]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits, cap: float):
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+ACT = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}

@@ -1,0 +1,135 @@
+"""Dense gated MLPs and token-choice MoE.
+
+MoE uses the permute -> grouped-GEMM -> unpermute formulation (sort-based
+dispatch with a static per-expert capacity) rather than GShard's
+``[groups, seq, experts, capacity]`` one-hot einsum — the one-hot dispatch
+tensor is O(S·E·C) and does not fit at seq_len 4096 with 64 experts.
+The rank-within-expert computation is the same sort + run-start trick the
+ParAC engine uses for slab scatters (repro.core.parac).
+
+Expert weights are sharded ``experts -> model`` (expert parallelism);
+the scatter into expert buffers lowers to the all-to-all-style collective
+permutes XLA SPMD chooses for the production mesh.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import PDef, ACT
+from .config import ModelConfig
+from repro.distributed.ctx import constrain
+
+
+def mlp_pdefs(cfg: ModelConfig, d_ff: int) -> dict:
+    d = cfg.d_model
+    return {
+        "w_gate": PDef((d, d_ff), ("embed", "mlp")),
+        "w_up": PDef((d, d_ff), ("embed", "mlp")),
+        "w_down": PDef((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_fwd(p, cfg: ModelConfig, x):
+    act = ACT[cfg.mlp_act]
+    h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) \
+        * jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = constrain(h, "batch", None, "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return constrain(y, "batch", None, "act_embed")
+
+
+def moe_pdefs(cfg: ModelConfig) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    p = {
+        "router": PDef((d, E), ("embed", None)),
+        "w_gate": PDef((E, d, f), ("experts", "embed", "expert_mlp")),
+        "w_up": PDef((E, d, f), ("experts", "embed", "expert_mlp")),
+        "w_down": PDef((E, f, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_pdefs(cfg, cfg.d_ff * cfg.n_shared_experts)
+    return p
+
+
+def _rank_in_group(keys: jnp.ndarray) -> jnp.ndarray:
+    """Occurrence rank of each element within its (sorted) key group."""
+    n = keys.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), keys[1:] != keys[:-1]])
+    run_start = jax.lax.associative_scan(jnp.maximum,
+                                         jnp.where(is_start, idx, 0))
+    return idx - run_start
+
+
+def moe_fwd(p, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output, aux_loss).  x: [B, S, D].
+
+    *Grouped* dispatch: each batch row is an independent routing group
+    (GShard-style groups == data shards), so the sort/scatter stays local
+    to the data shard and only the expert dimension moves across the
+    ``model`` axis (the all-to-all).  A global sort would destroy the
+    batch sharding and replicate token buffers on every device.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, K)                      # [B, S, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(eid[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- permute within each group: sort (B, S·K) by expert --------------
+    # capacity per (group, expert): cf·S·K/E, floored so that single-token
+    # decode groups are dropless (each expert gets ≤ 1 of a token's K).
+    C = min(S * K, max(int(cfg.capacity_factor * S * K / E), 4))
+    a_exp = eid.reshape(B, S * K).astype(jnp.int32)
+    a_gate = gate.reshape(B, S * K)
+    order = jnp.argsort(a_exp, axis=-1, stable=True)         # [B, S*K]
+    s_exp = jnp.take_along_axis(a_exp, order, axis=-1)
+    s_tok = order // K
+    s_gate = jnp.take_along_axis(a_gate, order, axis=-1)
+    idx = jnp.arange(S * K, dtype=jnp.int32)[None, :]
+    is_start = jnp.concatenate(
+        [jnp.ones((B, 1), bool), s_exp[:, 1:] != s_exp[:, :-1]], axis=1)
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, idx, 0), axis=1)
+    rank = idx - run_start
+    fits = rank < C
+    slot = jnp.where(fits, s_exp * C + rank, E * C)          # drop overflow
+    # all gathers/scatters are vmapped over the group dim so they lower
+    # with operand-batching dims — the SPMD partitioner then keeps them
+    # sharded on batch instead of falling back to replication.
+    gathered = jax.vmap(lambda xr, tr: xr[tr])(x, s_tok)     # [B,S*K,D]
+    buf = jax.vmap(
+        lambda sl, g: jnp.zeros((E * C, D), x.dtype).at[sl].set(
+            g, mode="drop"))(slot, gathered).reshape(B, E, C, D)
+    buf = constrain(buf, "batch", "experts", None, None)
+
+    # ---- grouped GEMMs (expert-parallel over 'model') --------------------
+    act = ACT[cfg.mlp_act]
+    h = act(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) \
+        * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    h = constrain(h, "batch", "experts", None, None)
+    y = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    y = constrain(y, "batch", "experts", None, None).reshape(B, E * C, D)
+
+    # ---- unpermute + combine ---------------------------------------------
+    contrib = jax.vmap(lambda yr, sl: yr[sl])(
+        y, jnp.minimum(slot, E * C - 1)) \
+        * s_gate[..., None].astype(x.dtype)
+    out = jax.vmap(
+        lambda st, cb: jnp.zeros((S, D), x.dtype).at[st].add(cb))(
+        s_tok, jnp.where(fits[..., None], contrib, 0))
+    out = constrain(out, "batch", None, None)
+    if cfg.n_shared_experts:
+        out = out + mlp_fwd(p["shared"], cfg, x)
+    return out, aux

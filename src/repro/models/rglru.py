@@ -1,0 +1,87 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+h_t = a_t · h_{t-1} + √(1 − a_t²) · (i_t ⊙ x_t),   a_t = a^(c·r_t)
+
+with a = sigmoid(Λ) per channel, r/i input-dependent sigmoid gates, c=8.
+Training uses an associative scan over time (affine recurrence); decode
+keeps an O(1) ``[B, rec_width]`` state — hence ``long_500k`` runs for
+this family.  The block is conv1d(k=4) -> RG-LRU -> gated output, as in
+the paper's recurrent block.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import PDef
+from .config import ModelConfig
+from repro.distributed.ctx import constrain
+
+_C = 8.0
+
+
+def rglru_pdefs(cfg: ModelConfig) -> dict:
+    d, r, K = cfg.d_model, cfg.rec_width, cfg.rglru_conv
+    return {
+        "w_in": PDef((d, r), ("embed", "rec")),
+        "w_gate": PDef((d, r), ("embed", "rec")),
+        "conv": PDef((K, r), ("conv", "rec"), init="normal", scale=0.5),
+        "w_r": PDef((r, r), ("embed", "rec")),
+        "w_i": PDef((r, r), ("embed", "rec")),
+        "lam": PDef((r,), ("rec",), init="ones", scale=1.0),
+        "w_out": PDef((r, d), ("rec", "embed")),
+    }
+
+
+def _conv_tail(x, w, tail):
+    K = w.shape[0]
+    pad = tail if tail is not None else jnp.zeros(
+        (x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out, xp[:, -(K - 1):, :]
+
+
+def rglru_fwd(p, cfg: ModelConfig, x, *, state=None,
+              return_state: bool = False):
+    """x: [B,S,D].  state: dict(h:[B,r], conv:[B,K-1,r])."""
+    xb = constrain(jnp.einsum("bsd,dr->bsr", x, p["w_in"]),
+                   "batch", None, "rec")
+    gate = constrain(jnp.einsum("bsd,dr->bsr", x, p["w_gate"]),
+                     "batch", None, "rec")
+    xc, tail = _conv_tail(xb, p["conv"],
+                          state["conv"] if state is not None else None)
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", xc, p["w_r"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", xc, p["w_i"])
+                       .astype(jnp.float32))
+    # log a_t = c · r_t · log sigmoid(Λ)  (≤ 0)
+    log_a = _C * r * jax.nn.log_sigmoid(8.0 * p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    v = mult * i * xc.astype(jnp.float32)
+    # affine scan h_t = a_t h_{t-1} + v_t
+    def combine(e1, e2):
+        a1, v1 = e1
+        a2, v2 = e2
+        return a1 * a2, v2 + a2 * v1
+    if state is not None:
+        v = v.at[:, 0, :].add(a[:, 0, :] * state["h"])
+    ascan, h = jax.lax.associative_scan(combine, (a, v), axis=1)
+    y = (h.astype(x.dtype) * jax.nn.gelu(gate, approximate=True))
+    out = jnp.einsum("bsr,rd->bsd", y, p["w_out"])
+    if return_state:
+        return out, {"h": h[:, -1, :], "conv": tail}
+    return out
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype):
+    r, K = cfg.rec_width, cfg.rglru_conv
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, K - 1, r), dtype)}
+
+
+def rglru_decode(p, cfg: ModelConfig, x, state):
+    return rglru_fwd(p, cfg, x, state=state, return_state=True)

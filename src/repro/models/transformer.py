@@ -1,0 +1,488 @@
+"""Unified pattern-interleaved decoder stack + whisper encoder-decoder.
+
+Layers follow ``cfg.pattern`` repeated over ``n_layers`` (e.g. gemma3 is
+``(local,)*5 + (attn,)`` and recurrentgemma ``(rglru, rglru, local)``).
+Whole periods are scanned (``lax.scan`` over stacked params — keeps the
+HLO small enough to compile 62-layer models against 512 devices); the
+remainder layers are unrolled.
+
+Public entry points (all pure functions of (params, inputs)):
+  * ``pdefs(cfg)``                   — parameter declaration tree
+  * ``fwd_train(params, cfg, tokens[, enc_frames])`` -> logits
+  * ``loss_fn``                      — CE + z-loss + MoE aux
+  * ``prefill`` / ``decode_step``    — cached serving paths
+  * ``init_caches``                  — decode cache pytrees
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import PDef, rms_norm, layer_norm, is_pdef
+from .config import ModelConfig
+from . import attention as attn
+from . import mlp as mlp_mod
+from . import ssm as ssm_mod
+from . import rglru as rglru_mod
+from repro.distributed.ctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# parameter declarations
+# ---------------------------------------------------------------------------
+
+def _norm_pdefs(cfg: ModelConfig) -> Dict[str, PDef]:
+    if cfg.use_layer_norm_bias:
+        return {"g": PDef((cfg.d_model,), (None,), init="ones"),
+                "b": PDef((cfg.d_model,), (None,), init="zeros")}
+    return {"g": PDef((cfg.d_model,), (None,), init="zeros")}
+
+
+def _apply_norm(p, cfg: ModelConfig, x):
+    if cfg.use_layer_norm_bias:
+        return layer_norm(x, p["g"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["g"], cfg.norm_eps)
+
+
+def _mixer_pdefs(cfg: ModelConfig, kind: str) -> dict:
+    if kind in ("attn", "local"):
+        return attn.attn_pdefs(cfg)
+    if kind == "ssm":
+        return ssm_mod.ssm_pdefs(cfg)
+    if kind == "rglru":
+        return rglru_mod.rglru_pdefs(cfg)
+    raise ValueError(kind)
+
+
+def _layer_pdefs(cfg: ModelConfig, kind: str) -> dict:
+    p = {"ln1": _norm_pdefs(cfg), "mixer": _mixer_pdefs(cfg, kind)}
+    if cfg.use_post_norm:
+        p["pn1"] = _norm_pdefs(cfg)
+    if cfg.n_experts:
+        p["ln2"] = _norm_pdefs(cfg)
+        p["mlp"] = mlp_mod.moe_pdefs(cfg)
+    elif cfg.d_ff:
+        p["ln2"] = _norm_pdefs(cfg)
+        p["mlp"] = mlp_mod.mlp_pdefs(cfg, cfg.d_ff)
+    if cfg.use_post_norm and "mlp" in p:
+        p["pn2"] = _norm_pdefs(cfg)
+    return p
+
+
+def _stack_pdefs(tree, n: int):
+    return jax.tree.map(
+        lambda pd: PDef((n,) + pd.shape, ("layers",) + pd.axes,
+                        init=pd.init, scale=pd.scale),
+        tree, is_leaf=is_pdef)
+
+
+def _split_layers(cfg: ModelConfig) -> Tuple[int, int]:
+    if cfg.is_encoder_decoder or cfg.force_unroll:
+        return 0, cfg.n_layers        # whisper/probes: fully unrolled
+    period = len(cfg.pattern)
+    return cfg.n_layers // period, cfg.n_layers % period
+
+
+def pdefs(cfg: ModelConfig) -> dict:
+    n_periods, rem = _split_layers(cfg)
+    d = cfg.d_model
+    p: Dict[str, Any] = {
+        "embed": PDef((cfg.padded_vocab, d), ("vocab", "embed"),
+                      init="embed", scale=0.02),
+        "final_norm": _norm_pdefs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = PDef((d, cfg.padded_vocab), ("embed", "vocab"))
+    if n_periods:
+        p["scan"] = {
+            f"pos{t}": _stack_pdefs(_layer_pdefs(cfg, kind), n_periods)
+            for t, kind in enumerate(cfg.pattern)}
+    base = n_periods * len(cfg.pattern)
+    p["rem"] = [_layer_pdefs(cfg, cfg.layer_kinds[base + t])
+                for t in range(rem)]
+    if cfg.is_encoder_decoder:
+        p["enc"] = {
+            "layers": [
+                {"ln1": _norm_pdefs(cfg), "attn": attn.attn_pdefs(cfg),
+                 "ln2": _norm_pdefs(cfg),
+                 "mlp": mlp_mod.mlp_pdefs(cfg, cfg.d_ff)}
+                for _ in range(cfg.n_encoder_layers)],
+            "final_norm": _norm_pdefs(cfg),
+        }
+        p["cross"] = [
+            {"ln": _norm_pdefs(cfg), "attn": attn.cross_attn_pdefs(cfg)}
+            for _ in range(cfg.n_layers)]
+    return p
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _block_train(p, cfg: ModelConfig, kind: str, x, aux):
+    h = _apply_norm(p["ln1"], cfg, x)
+    if kind in ("attn", "local"):
+        h = attn.attn_fwd(p["mixer"], cfg, h, local=(kind == "local"))
+    elif kind == "ssm":
+        h = ssm_mod.ssm_fwd(p["mixer"], cfg, h)
+    elif kind == "rglru":
+        h = rglru_mod.rglru_fwd(p["mixer"], cfg, h)
+    if cfg.use_post_norm:
+        h = _apply_norm(p["pn1"], cfg, h)
+    x = x + h
+    if "mlp" in p:
+        h = _apply_norm(p["ln2"], cfg, x)
+        if cfg.n_experts:
+            h, a = mlp_mod.moe_fwd(p["mlp"], cfg, h)
+            aux = aux + a
+        else:
+            h = mlp_mod.mlp_fwd(p["mlp"], cfg, h)
+        if cfg.use_post_norm:
+            h = _apply_norm(p["pn2"], cfg, h)
+        x = x + h
+    return x, aux
+
+
+def _block_decode(p, cfg: ModelConfig, kind: str, x, cache, cache_pos):
+    h = _apply_norm(p["ln1"], cfg, x)
+    if kind in ("attn", "local"):
+        h, cache = attn.attn_decode(p["mixer"], cfg, h, cache, cache_pos,
+                                    local=(kind == "local"))
+    elif kind == "ssm":
+        h, cache = ssm_mod.ssm_decode(p["mixer"], cfg, h, cache)
+    elif kind == "rglru":
+        h, cache = rglru_mod.rglru_decode(p["mixer"], cfg, h, cache)
+    if cfg.use_post_norm:
+        h = _apply_norm(p["pn1"], cfg, h)
+    x = x + h
+    if "mlp" in p:
+        h = _apply_norm(p["ln2"], cfg, x)
+        if cfg.n_experts:
+            h, _ = mlp_mod.moe_fwd(p["mlp"], cfg, h)
+        else:
+            h = mlp_mod.mlp_fwd(p["mlp"], cfg, h)
+        if cfg.use_post_norm:
+            h = _apply_norm(p["pn2"], cfg, h)
+        x = x + h
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: ModelConfig, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return constrain(x, "batch", None, "act_embed")
+
+
+def _logits(params, cfg: ModelConfig, x):
+    x = _apply_norm(params["final_norm"], cfg, x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    return constrain(logits.astype(jnp.float32), "batch", None, "vocab")
+
+
+def _run_stack(params, cfg: ModelConfig, x, train: bool):
+    aux = jnp.zeros((), jnp.float32)
+    n_periods, rem = _split_layers(cfg)
+
+    def period_fn(carry, pslice):
+        xx, aa = carry
+        for t, kind in enumerate(cfg.pattern):
+            xx, aa = _block_train(pslice[f"pos{t}"], cfg, kind, xx, aa)
+        return (xx, aa), ()
+
+    if n_periods:
+        fn = jax.checkpoint(period_fn) if (cfg.remat and train) else period_fn
+        (x, aux), _ = jax.lax.scan(fn, (x, aux), params["scan"])
+    base = n_periods * len(cfg.pattern)
+    blk = jax.checkpoint(_block_train, static_argnums=(1, 2)) \
+        if (cfg.remat and train) else _block_train
+    for t in range(rem):
+        x, aux = blk(params["rem"][t], cfg, cfg.layer_kinds[base + t], x, aux)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, enc_frames):
+    """Whisper encoder over precomputed frame embeddings [B, T, D]."""
+    T = enc_frames.shape[1]
+    pos = _sinusoid(T, cfg.d_model, enc_frames.dtype)
+    x = enc_frames + pos[None]
+    for lp in params["enc"]["layers"]:
+        h = _apply_norm(lp["ln1"], cfg, x)
+        h = attn.attn_fwd(lp["attn"], cfg, h, local=False,
+                          kv_mask=None, positions=jnp.zeros(
+                              (x.shape[0], T), jnp.int32))  # no-rope: pos 0
+        x = x + h
+        h = _apply_norm(lp["ln2"], cfg, x)
+        x = x + mlp_mod.mlp_fwd(lp["mlp"], cfg, h)
+    return _apply_norm(params["enc"]["final_norm"], cfg, x)
+
+
+def _sinusoid(T: int, d: int, dtype):
+    pos = jnp.arange(T, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (math.log(10000.0) / d))[None, :]
+    pe = jnp.concatenate([jnp.sin(pos * div), jnp.cos(pos * div)], axis=-1)
+    return pe[:, :d].astype(dtype)
+
+
+def fwd_train(params, cfg: ModelConfig, tokens,
+              enc_frames: Optional[jnp.ndarray] = None):
+    """Teacher-forced forward -> (logits [B,S,Vp], aux_loss)."""
+    x = _embed(params, cfg, tokens)
+    if cfg.is_encoder_decoder:
+        x = x + _sinusoid(tokens.shape[1], cfg.d_model, x.dtype)[None]
+        enc_out = encode(params, cfg, enc_frames)
+        aux = jnp.zeros((), jnp.float32)
+        for li in range(cfg.n_layers):
+            x, aux = _block_train(_get_layer(params, cfg, li), cfg,
+                                  cfg.layer_kinds[li], x, aux)
+            cp = params["cross"][li]
+            x = x + attn.cross_attn_fwd(
+                cp["attn"], cfg, _apply_norm(cp["ln"], cfg, x),
+                attn.encode_cross_kv(cp["attn"], cfg, enc_out))
+        return _logits(params, cfg, x), aux
+    x, aux = _run_stack(params, cfg, x, train=True)
+    return _logits(params, cfg, x), aux
+
+
+def _get_layer(params, cfg: ModelConfig, li: int):
+    n_periods, rem = _split_layers(cfg)
+    period = len(cfg.pattern)
+    if li < n_periods * period:
+        c, t = divmod(li, period)
+        return jax.tree.map(lambda a: a[c], params["scan"][f"pos{t}"])
+    return params["rem"][li - n_periods * period]
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, targets,
+            enc_frames: Optional[jnp.ndarray] = None):
+    logits, aux = fwd_train(params, cfg, tokens, enc_frames)
+    # all vocab-length ops stay elementwise over the vocab-sharded logits:
+    # a take_along_axis gather here would force an unsharded fp32 copy
+    # (~40 GB/device at 152k vocab) — use an iota-mask reduction instead.
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    if cfg.padded_vocab != cfg.vocab:
+        logits = jnp.where(iota < cfg.vocab, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.sum(jnp.where(iota == targets[..., None], logits, 0.0),
+                   axis=-1)
+    ce = jnp.mean(lse - gold)
+    zloss = 1e-4 * jnp.mean(jnp.square(lse))
+    return ce + zloss + cfg.router_aux_weight * aux, (ce, aux)
+
+
+# ---------------------------------------------------------------------------
+# serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind in ("attn", "local"):
+        length = min(max_len, cfg.local_window) if (
+            kind == "local" and cfg.local_window) else max_len
+        return attn.init_cache(cfg, batch, length, dtype)
+    if kind == "ssm":
+        return ssm_mod.ssm_init_state(cfg, batch, dtype)
+    if kind == "rglru":
+        return rglru_mod.rglru_init_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    n_periods, rem = _split_layers(cfg)
+    caches: Dict[str, Any] = {}
+    if n_periods:
+        caches["scan"] = {}
+        for t, kind in enumerate(cfg.pattern):
+            one = _layer_cache(cfg, kind, batch, max_len, dtype)
+            caches["scan"][f"pos{t}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_periods,) + a.shape),
+                one)
+    base = n_periods * len(cfg.pattern)
+    caches["rem"] = [_layer_cache(cfg, cfg.layer_kinds[base + t], batch,
+                                  max_len, dtype) for t in range(rem)]
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, cache_pos,
+                enc_out: Optional[jnp.ndarray] = None):
+    """One decode step.  tokens: [B, 1] int32; cache_pos: scalar int32.
+
+    Local-attention caches are rolling buffers of ``local_window``;
+    positions are taken modulo the buffer length for those layers.
+    """
+    x = _embed(params, cfg, tokens)
+    if cfg.is_encoder_decoder:
+        x = x + _sinusoid_at(cache_pos, cfg.d_model, x.dtype)
+        new_rem = []
+        for li in range(cfg.n_layers):
+            c, nc = _decode_one(params, cfg, li, x, caches["rem"][li],
+                                cache_pos)
+            x = c
+            # cross attention after self-attn block
+            cp = params["cross"][li]
+            x = x + attn.cross_attn_fwd(
+                cp["attn"], cfg, _apply_norm(cp["ln"], cfg, x),
+                attn.encode_cross_kv(cp["attn"], cfg, enc_out))
+            new_rem.append(nc)
+        logits = _logits(params, cfg, x)[:, 0]
+        return logits, {"rem": new_rem}
+
+    n_periods, rem = _split_layers(cfg)
+    new_caches: Dict[str, Any] = {}
+    if n_periods:
+        def period_fn(carry, slices):
+            xx, = carry
+            pslice, cslice = slices
+            ncs = {}
+            for t, kind in enumerate(cfg.pattern):
+                xx, nc = _block_decode(pslice[f"pos{t}"], cfg, kind, xx,
+                                       cslice[f"pos{t}"], cache_pos)
+                ncs[f"pos{t}"] = nc
+            return (xx,), ncs
+        (x,), new_scan = jax.lax.scan(
+            period_fn, (x,), (params["scan"], caches["scan"]))
+        new_caches["scan"] = new_scan
+    new_caches["rem"] = []
+    base = n_periods * len(cfg.pattern)
+    for t in range(rem):
+        x, nc = _block_decode(params["rem"][t], cfg,
+                              cfg.layer_kinds[base + t], x,
+                              caches["rem"][t], cache_pos)
+        new_caches["rem"].append(nc)
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, new_caches
+
+
+def _decode_one(params, cfg, li, x, cache, cache_pos):
+    kind = cfg.layer_kinds[li]
+    return _block_decode(_get_layer(params, cfg, li), cfg, kind, x,
+                         cache, cache_pos)
+
+
+def _sinusoid_at(pos, d: int, dtype):
+    div = jnp.exp(-jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (math.log(10000.0) / d))
+    ang = pos.astype(jnp.float32) * div
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[:d]
+    return pe.astype(dtype)[None, None, :]
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int,
+            enc_frames: Optional[jnp.ndarray] = None, dtype=jnp.bfloat16):
+    """Full-sequence forward that also fills decode caches.
+
+    Returns (logits [B,S,Vp], caches).  For recurrent blocks the state
+    after the last position is stored; for attention the K/V of all
+    positions are written into buffers of length ``max_len``.
+    """
+    B, S = tokens.shape
+    x = _embed(params, cfg, tokens)
+    if cfg.is_encoder_decoder:
+        # whisper: encode once, run decoder layers filling self-attn caches
+        x = x + _sinusoid(S, cfg.d_model, x.dtype)[None]
+        enc_out = encode(params, cfg, enc_frames)
+        caches = init_caches(cfg, B, max_len, dtype)
+        for li in range(cfg.n_layers):
+            p = params["rem"][li]
+            h = _apply_norm(p["ln1"], cfg, x)
+            h, kv = attn.attn_fwd(p["mixer"], cfg, h, local=False,
+                                  return_cache=True)
+            cache = caches["rem"][li]
+            caches["rem"][li] = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], kv["k"].astype(cache["k"].dtype),
+                    (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], kv["v"].astype(cache["v"].dtype),
+                    (0, 0, 0, 0))}
+            x = x + h
+            cp = params["cross"][li]
+            x = x + attn.cross_attn_fwd(
+                cp["attn"], cfg, _apply_norm(cp["ln"], cfg, x),
+                attn.encode_cross_kv(cp["attn"], cfg, enc_out))
+            if "mlp" in p:
+                h = _apply_norm(p["ln2"], cfg, x)
+                x = x + mlp_mod.mlp_fwd(p["mlp"], cfg, h)
+        return _logits(params, cfg, x), caches
+    caches = init_caches(cfg, B, max_len, dtype)
+    n_periods, rem = _split_layers(cfg)
+
+    def apply_block_prefill(p, kind, xx, cache):
+        h = _apply_norm(p["ln1"], cfg, xx)
+        if kind in ("attn", "local"):
+            h, kv = attn.attn_fwd(p["mixer"], cfg, h,
+                                  local=(kind == "local"), return_cache=True)
+            L = cache["k"].shape[1]
+            if kind == "local" and cfg.local_window and S > L:
+                # keep the last window, aligned to position mod window
+                ks, vs = kv["k"][:, -L:], kv["v"][:, -L:]
+                shift = S % L
+                ks = jnp.roll(ks, shift, axis=1)
+                vs = jnp.roll(vs, shift, axis=1)
+                cache = {"k": ks.astype(cache["k"].dtype),
+                         "v": vs.astype(cache["v"].dtype)}
+            else:
+                cache = {
+                    "k": jax.lax.dynamic_update_slice(
+                        cache["k"], kv["k"].astype(cache["k"].dtype),
+                        (0, 0, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(
+                        cache["v"], kv["v"].astype(cache["v"].dtype),
+                        (0, 0, 0, 0)),
+                }
+        elif kind == "ssm":
+            h, cache = ssm_mod.ssm_fwd(p["mixer"], cfg, h, return_state=True)
+        elif kind == "rglru":
+            h, cache = rglru_mod.rglru_fwd(p["mixer"], cfg, h,
+                                           return_state=True)
+        if cfg.use_post_norm:
+            h = _apply_norm(p["pn1"], cfg, h)
+        xx = xx + h
+        if "mlp" in p:
+            h = _apply_norm(p["ln2"], cfg, xx)
+            if cfg.n_experts:
+                h, _ = mlp_mod.moe_fwd(p["mlp"], cfg, h)
+            else:
+                h = mlp_mod.mlp_fwd(p["mlp"], cfg, h)
+            if cfg.use_post_norm:
+                h = _apply_norm(p["pn2"], cfg, h)
+            xx = xx + h
+        return xx, cache
+
+    if n_periods:
+        def period_fn(carry, slices):
+            xx, = carry
+            pslice, cslice = slices
+            ncs = {}
+            for t, kind in enumerate(cfg.pattern):
+                xx, nc = apply_block_prefill(pslice[f"pos{t}"], kind, xx,
+                                             cslice[f"pos{t}"])
+                ncs[f"pos{t}"] = nc
+            return (xx,), ncs
+        (x,), new_scan = jax.lax.scan(
+            period_fn, (x,), (params["scan"], caches["scan"]))
+        caches["scan"] = new_scan
+    base = n_periods * len(cfg.pattern)
+    for t in range(rem):
+        x, nc = apply_block_prefill(params["rem"][t],
+                                    cfg.layer_kinds[base + t], x,
+                                    caches["rem"][t])
+        caches["rem"][t] = nc
+    return _logits(params, cfg, x), caches

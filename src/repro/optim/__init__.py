@@ -1,0 +1,2 @@
+from .adamw import adamw_init, adamw_update, OptState          # noqa: F401
+from .schedule import wsd_schedule, cosine_schedule            # noqa: F401

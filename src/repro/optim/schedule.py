@@ -1,0 +1,25 @@
+"""LR schedules: cosine and warmup-stable-decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac * peak_lr + (1 - final_frac) * peak_lr \
+        * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.2):
+    s = step.astype(jnp.float32)
+    decay_start = total * (1 - decay_frac)
+    warm = peak_lr * s / max(warmup, 1)
+    dec = peak_lr * jnp.clip((total - s) / max(total - decay_start, 1),
+                             0.0, 1.0)
+    return jnp.where(s < warmup, warm,
+                     jnp.where(s < decay_start, peak_lr, dec))

@@ -1,0 +1,118 @@
+"""Fault-tolerant training loop.
+
+Responsibilities:
+  * build the jitted train step (sharded per distributed.steps),
+  * deterministic data (stateless per-step addressing -> elastic restart),
+  * periodic preemption-safe checkpoints + automatic resume,
+  * simple straggler/failure handling for the single-controller setting:
+    every step is idempotent (step index -> batch), so a crashed run
+    resumes from the last published checkpoint and replays identically
+    (resume determinism is asserted in tests/test_substrates.py).
+
+On a real multi-pod deployment the same loop runs under
+``jax.distributed.initialize`` with one process per host; device failure
+surfaces as a process exit -> the cluster manager restarts the job and
+this loop resumes from ``latest_step``.  Elastic scaling = restart with
+a different mesh: checkpoints are mesh-agnostic (full arrays resharded
+on restore by ``jax.device_put`` against the new specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.shapes import ShapeCell
+from repro.data.tokens import SyntheticTokens
+from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.distributed.steps import make_train_step, train_state_specs
+from repro.models import transformer as tf
+from repro.models.common import init_params
+from repro.optim import adamw_init
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    lr: float = 3e-4
+    grad_accum: int = 1
+    seed: int = 0
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, model_cfg, mesh, cell: ShapeCell, tcfg: TrainConfig,
+                 param_dtype=jnp.float32):
+        self.cfg = model_cfg
+        self.mesh = mesh
+        self.cell = cell
+        self.tcfg = tcfg
+        step_fn, in_sh, out_sh = make_train_step(
+            model_cfg, mesh, cell, lr=tcfg.lr, grad_accum=tcfg.grad_accum)
+        self.step_fn = jax.jit(step_fn, in_shardings=in_sh,
+                               out_shardings=out_sh,
+                               donate_argnums=(0, 1))
+        pspecs, opt_specs = train_state_specs(model_cfg, mesh)
+        self._pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+        self._oshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                    opt_specs)
+        self.data = SyntheticTokens(model_cfg.vocab, cell.seq_len,
+                                    cell.global_batch, seed=tcfg.seed)
+        self.params = None
+        self.opt = None
+        self.step = 0
+
+    def init_or_restore(self) -> bool:
+        """Resume from the latest checkpoint if one exists (fault
+        tolerance: a restarted job lands here and replays identically)."""
+        if self.tcfg.ckpt_dir and latest_step(self.tcfg.ckpt_dir) is not None:
+            like = jax.eval_shape(
+                lambda: init_params(tf.pdefs(self.cfg), jax.random.key(0),
+                                    jnp.float32))
+            like_opt = jax.eval_shape(adamw_init, like)
+            (params, opt, step), _ = restore_checkpoint(
+                self.tcfg.ckpt_dir, (like, like_opt, 0))
+            self.params = jax.device_put(params, self._pshard)
+            self.opt = jax.device_put(opt, self._oshard)
+            self.step = int(step)
+            return True
+        key = jax.random.key(self.tcfg.seed)
+        params = init_params(tf.pdefs(self.cfg), key, jnp.float32)
+        self.params = jax.device_put(params, self._pshard)
+        self.opt = jax.device_put(adamw_init(self.params), self._oshard)
+        self.step = 0
+        return False
+
+    def _host_batch(self, step: int):
+        tokens, targets = self.data.batch_at(step)
+        return (jnp.asarray(tokens), jnp.asarray(targets))
+
+    def run(self, on_step: Optional[Callable[[int, Dict], None]] = None):
+        metrics_hist = []
+        t0 = time.time()
+        while self.step < self.tcfg.steps:
+            tokens, targets = self._host_batch(self.step)
+            self.params, self.opt, m = self.step_fn(
+                self.params, self.opt, tokens, targets)
+            self.step += 1
+            if self.step % self.tcfg.log_every == 0 or \
+                    self.step == self.tcfg.steps:
+                m = {k: float(v) for k, v in m.items()}
+                m["step"] = self.step
+                m["wall_s"] = round(time.time() - t0, 2)
+                metrics_hist.append(m)
+                if on_step:
+                    on_step(self.step, m)
+            if self.tcfg.ckpt_dir and (
+                    self.step % self.tcfg.ckpt_every == 0
+                    or self.step == self.tcfg.steps):
+                save_checkpoint(self.tcfg.ckpt_dir, self.step,
+                                (self.params, self.opt, self.step))
+        return metrics_hist

@@ -1,0 +1,115 @@
+"""Attention path coverage: grouped (no padding) vs padded-head layouts,
+rolling local windows, GQA mapping."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as tf
+from repro.models import attention as attn
+from repro.models.common import init_params
+
+
+def _cfg(**kw):
+    base = get_smoke_config("qwen3-14b")
+    return dataclasses.replace(base, **kw)
+
+
+def test_q_to_kv_map_groups():
+    cfg = _cfg(n_heads=6, n_kv_heads=2, pad_heads_multiple=4)  # pad to 8
+    m = attn._q_to_kv_map(cfg)
+    assert m.shape == (8,)
+    assert list(m[:6]) == [0, 0, 0, 1, 1, 1]
+    assert not attn._grouped_ok(cfg)
+    cfg2 = _cfg(n_heads=6, n_kv_heads=2, pad_heads_multiple=1)
+    assert attn._grouped_ok(cfg2)
+
+
+def test_padded_path_forward_and_grad_finite():
+    """The padded-head path (production layout) must run and train."""
+    cfg = _cfg(n_layers=2, n_heads=6, n_kv_heads=2, head_dim=16,
+               d_model=48, d_ff=96, vocab=128, pad_heads_multiple=4,
+               remat=False)
+    assert cfg.padded_heads == 8
+    params = init_params(tf.pdefs(cfg), jax.random.key(0), jnp.float32)
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+    targets = jnp.roll(tokens, -1, 1)
+    loss, _ = tf.loss_fn(params, cfg, tokens, targets)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: tf.loss_fn(p, cfg, tokens, targets)[0])(params)
+    assert all(np.isfinite(np.asarray(x, np.float32)).all()
+               for x in jax.tree.leaves(g))
+
+
+def test_grouped_vs_padded_same_when_pad_is_noop():
+    """pad multiple that divides n_heads exactly: both paths must agree
+    (same weights, padded==n_heads so only the einsum layout differs)."""
+    cfg_g = _cfg(n_layers=1, n_heads=4, n_kv_heads=2, head_dim=16,
+                 d_model=32, d_ff=64, vocab=64, pad_heads_multiple=1,
+                 remat=False)
+    cfg_p = dataclasses.replace(cfg_g, pad_heads_multiple=2)  # 4 -> 4
+    assert attn._grouped_ok(cfg_g) and attn._grouped_ok(cfg_p)
+    params = init_params(tf.pdefs(cfg_g), jax.random.key(0), jnp.float32)
+    tokens = jax.random.randint(jax.random.key(1), (1, 8), 0, 64)
+    a, _ = tf.fwd_train(params, cfg_g, tokens)
+    b, _ = tf.fwd_train(params, cfg_p, tokens)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_forced_expansion_path_matches_grouped():
+    """Force the kmap-expansion path on a config where grouped is valid:
+    results must match the grouped einsum (same math, different layout)."""
+    cfg = _cfg(n_layers=1, n_heads=4, n_kv_heads=2, head_dim=16,
+               d_model=32, d_ff=64, vocab=64, remat=False)
+    params = init_params(tf.pdefs(cfg), jax.random.key(2), jnp.float32)
+    tokens = jax.random.randint(jax.random.key(3), (2, 12), 0, 64)
+    out_grouped, _ = tf.fwd_train(params, cfg, tokens)
+    try:
+        attn._grouped_ok_orig = attn._grouped_ok
+        attn._grouped_ok = lambda c: False
+        out_expand, _ = tf.fwd_train(params, cfg, tokens)
+    finally:
+        attn._grouped_ok = attn._grouped_ok_orig
+    np.testing.assert_allclose(np.asarray(out_grouped),
+                               np.asarray(out_expand),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_local_rolling_buffer_long_decode():
+    """Decode far past the window: rolling buffer must keep exactly the
+    last `window` positions (compare against full-context forward)."""
+    cfg = _cfg(n_layers=2, n_heads=4, n_kv_heads=2, head_dim=16,
+               d_model=32, d_ff=64, vocab=64, local_window=8,
+               pattern=("local",), remat=False)
+    params = init_params(tf.pdefs(cfg), jax.random.key(4), jnp.float32)
+    S = 24
+    tokens = jax.random.randint(jax.random.key(5), (1, S + 1), 0, 64)
+    full, _ = tf.fwd_train(params, cfg, tokens)
+    # drive the decode path across 3 window wraps
+    caches = tf.init_caches(cfg, 1, 64, jnp.float32)
+    for t in range(S):
+        logits, caches = tf.decode_step(params, cfg, caches,
+                                        tokens[:, t:t + 1], jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full[:, S - 1]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_banded_local_equals_full_masked():
+    """Banded sliding-window path must equal the full-S² masked path."""
+    cfg = _cfg(n_layers=1, n_heads=4, n_kv_heads=2, head_dim=16,
+               d_model=32, d_ff=64, vocab=64, local_window=8,
+               pattern=("local",), remat=False)
+    params = init_params(tf.pdefs(cfg), jax.random.key(8), jnp.float32)
+    x = jax.random.normal(jax.random.key(9), (2, 32, 32), jnp.float32)
+    lp = params["scan"]["pos0"]
+    mix = jax.tree.map(lambda a: a[0], lp["mixer"])
+    banded = attn.attn_fwd(mix, cfg, x, local=True)
+    # kv_mask disables the banded fast path -> full masked attention
+    full = attn.attn_fwd(mix, cfg, x, local=True,
+                         kv_mask=jnp.ones((2, 32), bool))
+    np.testing.assert_allclose(np.asarray(banded), np.asarray(full),
+                               rtol=2e-5, atol=2e-5)

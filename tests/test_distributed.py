@@ -1,0 +1,103 @@
+"""Structural tests for the sharding layer (no compilation needed):
+spec trees must match value trees for every arch × cell, divisibility
+rules must hold on the production mesh shapes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import list_archs, get_config
+from repro.configs.shapes import SHAPES, cell_applicable
+from repro.models import transformer as tf
+from repro.models.common import (abstract_params, param_pspecs,
+                                 rules_for_mesh, DEFAULT_RULES)
+from repro.distributed.steps import (cache_pspecs, batch_axes_for,
+                                     kv_seq_axes)
+
+
+class FakeMesh:
+    """Mesh stand-in: shape dict + axis names (no devices needed)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESHES = {
+    "16x16": FakeMesh({"data": 16, "model": 16}),
+    "2x16x16": FakeMesh({"pod": 2, "data": 16, "model": 16}),
+}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+def test_param_spec_tree_matches(arch, mesh_name):
+    mesh = MESHES[mesh_name]
+    cfg = get_config(arch, production=True)
+    params = abstract_params(tf.pdefs(cfg))
+    specs = param_pspecs(tf.pdefs(cfg), rules_for_mesh(mesh), mesh)
+    assert jax.tree.structure(params) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("cellname", ["decode_32k", "long_500k"])
+def test_cache_spec_tree_matches(arch, cellname):
+    mesh = MESHES["16x16"]
+    cfg = get_config(arch, production=True)
+    cell = SHAPES[cellname]
+    ok, _ = cell_applicable(cfg, cell)
+    if not ok:
+        pytest.skip("cell not applicable")
+    caches = jax.eval_shape(
+        lambda: tf.init_caches(cfg, cell.global_batch, cell.seq_len,
+                               jnp.bfloat16))
+    specs = cache_pspecs(cfg, mesh, cell.global_batch, cell.seq_len)
+    assert jax.tree.structure(caches) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_probe_cfg_cache_spec_tree_matches(arch):
+    """The dry-run probe configs (force_unroll) must also line up —
+    regression test for the probe pytree bug."""
+    mesh = MESHES["16x16"]
+    cfg = get_config(arch, production=True)
+    period = len(cfg.pattern)
+    probe = dataclasses.replace(cfg, n_layers=period, force_unroll=True)
+    cell = SHAPES["decode_32k"]
+    caches = jax.eval_shape(
+        lambda: tf.init_caches(probe, cell.global_batch, cell.seq_len,
+                               jnp.bfloat16))
+    specs = cache_pspecs(probe, mesh, cell.global_batch, cell.seq_len)
+    assert jax.tree.structure(caches) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_batch_axes_assignment():
+    m1, m2 = MESHES["16x16"], MESHES["2x16x16"]
+    assert batch_axes_for(m1, 256) == ("data",)
+    assert batch_axes_for(m2, 256) == ("pod", "data")
+    assert batch_axes_for(m1, 1) == ()
+    assert batch_axes_for(m2, 32) == ("pod", "data")
+    assert batch_axes_for(m2, 2) == ("pod",)
+
+
+def test_kv_seq_axes_avoid_batch_axes():
+    m = MESHES["2x16x16"]
+    assert kv_seq_axes(m, 128) == ["model"]          # batch takes pod+data
+    assert kv_seq_axes(m, 1) == ["model", "pod", "data"]
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_production_divisibility(arch):
+    """Every padded production config must shard cleanly on both meshes
+    (hard axes raise; kv_heads is soft)."""
+    cfg = get_config(arch, production=True)
+    for mesh in MESHES.values():
+        param_pspecs(tf.pdefs(cfg), rules_for_mesh(mesh), mesh)
+    assert cfg.padded_vocab % 256 == 0
+    if cfg.n_heads:
+        assert cfg.padded_heads % 16 == 0
