@@ -1,10 +1,18 @@
 """Paper Table 3 analogue: end-to-end jitted pipeline timings —
-factor (wavefront engine, jit) + level-scheduled triangular-solve apply
-+ PCG iterations, on the JAX production path (CPU backend here; the
-same program lowers to TPU).
+factor (wavefront engine + device compaction) + device schedule build +
+PCG solves through the ``Solver`` API, single-rhs and batched multi-rhs
+(the factor-once / serve-many shape).  CPU backend here; the same
+program lowers to TPU.
+
+CLI (used by the CI smoke job):
+
+    PYTHONPATH=src python -m benchmarks.bench_solve_pipeline \
+        --suite tiny --json bench_solve_pipeline.json
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -12,52 +20,103 @@ import jax
 import jax.numpy as jnp
 
 from repro.data import graphs
-from repro.core.parac import factorize_wavefront
-from repro.core.trisolve import make_preconditioner
-from repro.core.pcg import laplacian_pcg_jax
+from repro.core.solver import Solver
 from repro.core.ordering import ORDERINGS
 
 from .common import emit
 
 
-def run(suite=None, tol=1e-6, maxiter=500):
-    suite = suite or {k: graphs.SUITE[k] for k in
-                      ("grid2d_64", "grid3d_contrast_16", "powerlaw_4k",
-                       "delaunay_4k")}
+DEFAULT_SUITE = ("grid2d_64", "grid3d_contrast_16", "powerlaw_4k",
+                 "delaunay_4k")
+
+
+def tiny_suite():
+    """Sub-second graphs for the CI smoke job."""
+    return {"grid2d_tiny": lambda: graphs.grid2d(12, 12, seed=3),
+            "powerlaw_tiny": lambda: graphs.powerlaw(300, 5, seed=3)}
+
+
+def run(suite=None, tol=1e-6, maxiter=500, nrhs=8, records=None):
+    suite = suite or {k: graphs.SUITE[k] for k in DEFAULT_SUITE}
     key = jax.random.key(0)
     rng = np.random.default_rng(0)
+    records = records if records is not None else []
     for name, make in suite.items():
         g = make()
         perm = ORDERINGS["nnz-sort"](g, seed=1)
         gp = g.permute(perm).coalesce()
+        solver = Solver(chunk=256, fill_slack=32, strict=False)
 
         t0 = time.perf_counter()
-        f = factorize_wavefront(gp, key, chunk=256, fill_slack=32,
-                                strict=False)
+        handle = solver.factor(gp, key)
+        jax.block_until_ready(handle.factor.device.vals)
         t_factor = time.perf_counter() - t0
 
-        t0 = time.perf_counter()
-        precond = make_preconditioner(f)
         b = rng.normal(size=g.n).astype(np.float32)
         b -= b.mean()
-        bp = jnp.asarray(b[np.argsort(perm)])  # permuted rhs
-        solve = jax.jit(lambda bb: laplacian_pcg_jax(
-            gp, precond, bb, tol=tol, maxiter=maxiter))
-        res = solve(bp)   # includes trisolve-schedule compile
+        bp = jnp.asarray(b[np.argsort(perm)])
+
+        t0 = time.perf_counter()
+        res = solver.solve(bp, tol=tol, maxiter=maxiter)  # + compile
         jax.block_until_ready(res.x)
         t_first = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        res = solve(bp)
+        res = solver.solve(bp, tol=tol, maxiter=maxiter)
         jax.block_until_ready(res.x)
         t_solve = time.perf_counter() - t0
 
+        B = rng.normal(size=(nrhs, g.n)).astype(np.float32)
+        B -= B.mean(axis=1, keepdims=True)
+        Bp = jnp.asarray(B[:, np.argsort(perm)])
+        resB = solver.solve(Bp, tol=tol, maxiter=maxiter)  # compile
+        jax.block_until_ready(resB.x)
+        t0 = time.perf_counter()
+        resB = solver.solve(Bp, tol=tol, maxiter=maxiter)
+        jax.block_until_ready(resB.x)
+        t_batch = time.perf_counter() - t0
+
         emit(f"table3/{name}/factor_s", t_factor * 1e6,
-             f"rounds={f.stats['rounds']}")
+             f"rounds={handle.factor.stats['rounds']};"
+             f"levels={handle.fwd.n_levels}")
         emit(f"table3/{name}/solve_s", t_solve * 1e6,
              f"iters={int(res.iters)};relres={float(res.relres):.2e};"
              f"first_call_s={t_first:.2f}")
+        emit(f"table3/{name}/batch{nrhs}_solve_s", t_batch * 1e6,
+             f"iters_max={int(np.asarray(resB.iters).max())};"
+             f"per_rhs_s={t_batch / nrhs:.4f}")
+        records.append(dict(
+            graph=name, n=g.n, m=g.m, nrhs=nrhs,
+            factor_s=t_factor, solve_s=t_solve, first_call_s=t_first,
+            batch_solve_s=t_batch, per_rhs_s=t_batch / nrhs,
+            iters=int(res.iters), relres=float(res.relres),
+            converged=bool(res.converged),
+            batch_converged=bool(np.all(np.asarray(resB.converged))),
+            rounds=int(handle.factor.stats["rounds"]),
+            n_levels=int(handle.fwd.n_levels)))
+    return records
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="default",
+                    choices=["default", "tiny"],
+                    help="'tiny' = sub-second graphs for CI smoke")
+    ap.add_argument("--nrhs", type=int, default=8)
+    ap.add_argument("--tol", type=float, default=1e-6)
+    ap.add_argument("--maxiter", type=int, default=500)
+    ap.add_argument("--json", default=None,
+                    help="write timing records to this JSON file "
+                         "(uploaded as a CI artifact)")
+    args = ap.parse_args()
+    suite = tiny_suite() if args.suite == "tiny" else None
+    records = run(suite=suite, tol=args.tol, maxiter=args.maxiter,
+                  nrhs=args.nrhs)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(records, fh, indent=2)
+        print(f"wrote {args.json} ({len(records)} records)")
 
 
 if __name__ == "__main__":
-    run()
+    main()

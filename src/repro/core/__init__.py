@@ -2,8 +2,12 @@
 # (AC) factorization of graph Laplacians with bulk-synchronous parallel
 # construction (ParAC), plus the solver stack built on it.
 from .laplacian import Graph, laplacian_matvec, laplacian_matvec_np  # noqa: F401
-from .ref_ac import ACFactor, factorize_sequential                   # noqa: F401
+from .ref_ac import ACFactor, DeviceFactor, factorize_sequential     # noqa: F401
 from .parac import factorize_wavefront                               # noqa: F401
-from .trisolve import make_preconditioner, precond_apply_np          # noqa: F401
-from .pcg import pcg_jax, pcg_np, laplacian_pcg_jax, laplacian_pcg_np  # noqa: F401
+from .trisolve import (make_preconditioner, precond_apply_np,        # noqa: F401
+                       build_schedules_device)
+from .pcg import (pcg_jax, pcg_jax_batched, pcg_np,                  # noqa: F401
+                  laplacian_pcg_jax, laplacian_pcg_jax_batched,
+                  laplacian_pcg_np)
+from .solver import Solver, FactorHandle                             # noqa: F401
 from .ordering import ORDERINGS                                      # noqa: F401

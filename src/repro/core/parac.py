@@ -38,7 +38,7 @@ import jax.numpy as jnp
 
 from .laplacian import Graph
 from .column_math import eliminate_column, column_uniforms, INVALID_ID
-from .ref_ac import ACFactor
+from .ref_ac import ACFactor, DeviceFactor
 
 
 class EngineState(NamedTuple):
@@ -134,6 +134,32 @@ def _run_engine(pool_row, pool_val, col_fill, dep, col_base, cap, key,
     return jax.lax.while_loop(cond, body, state)
 
 
+@jax.jit
+def _compact_pool(pool_row, pool_val, col_fill, col_base):
+    """Device-side CSC compaction: squeeze each column's live slab prefix
+    into contiguous CSC order.  One vectorized pass (ownership lookup via
+    searchsorted over slab bases + masked scatter) — the jit replacement
+    for the old ``for k in range(n)`` host loop.
+
+    Returns pool-sized ``rows_c``/``vals_c`` whose first ``col_ptr[-1]``
+    entries are the compact factor, plus ``col_ptr`` (int32[n+1]).
+    """
+    P = pool_row.shape[0]
+    slot = jnp.arange(P, dtype=jnp.int32)
+    # owner column of each pool slot (zero-cap slabs are skipped because
+    # consecutive equal bases collapse under side="right")
+    owner = (jnp.searchsorted(col_base, slot, side="right") - 1).astype(
+        jnp.int32)
+    off = slot - col_base[owner]
+    keep = off < col_fill[owner]
+    col_ptr = jnp.concatenate([
+        jnp.zeros(1, jnp.int32), jnp.cumsum(col_fill, dtype=jnp.int32)])
+    dest = jnp.where(keep, col_ptr[owner] + off, P)
+    rows_c = jnp.zeros(P, pool_row.dtype).at[dest].set(pool_row, mode="drop")
+    vals_c = jnp.zeros(P, pool_val.dtype).at[dest].set(pool_val, mode="drop")
+    return rows_c, vals_c, col_ptr
+
+
 def _build_pool(g: Graph, fill_slack: int, dtype):
     """Static slab layout: cap_k = owned-initial-degree + fill_slack."""
     n = g.n
@@ -194,19 +220,18 @@ def factorize_wavefront(g: Graph, key: jax.Array, *, chunk: int = 64,
             f"engine stalled: {int(final.n_elim)}/{n} eliminated "
             f"(overflow={ovf})")
 
-    pool_row_h = np.asarray(final.pool_row)
-    pool_val_h = np.asarray(final.pool_val)
-    fill_h = np.asarray(final.col_fill)
-    lens = fill_h.astype(np.int64)
-    col_ptr = np.zeros(n + 1, np.int64)
-    np.cumsum(lens, out=col_ptr[1:])
-    rows = np.empty(col_ptr[-1], np.int32)
-    vals = np.empty(col_ptr[-1], dtype)
-    for k in range(n):  # host-side CSC compaction
-        b = col_base[k]
-        rows[col_ptr[k]:col_ptr[k + 1]] = pool_row_h[b:b + fill_h[k]]
-        vals[col_ptr[k]:col_ptr[k + 1]] = pool_val_h[b:b + fill_h[k]]
+    # device-side compaction: no per-column host loop; the factor stays
+    # resident on device (DeviceFactor) for the trisolve schedule builder.
+    rows_c, vals_c, col_ptr_d = _compact_pool(
+        final.pool_row, final.pool_val, final.col_fill,
+        jnp.asarray(col_base))
+    nnz = int(col_ptr_d[-1])
+    rows_dev = jax.lax.slice(rows_c, (0,), (nnz,))
+    vals_dev = jax.lax.slice(vals_c, (0,), (nnz,))
+    dev = DeviceFactor(col_ptr=col_ptr_d, rows=rows_dev, vals=vals_dev,
+                       D=final.D)
     stats = dict(rounds=int(final.n_rounds), overflow=ovf,
                  chunk=chunk, fill_slack=slack, pool_size=P, dmax=dmax)
-    return ACFactor(n=n, col_ptr=col_ptr, rows=rows, vals=vals,
-                    D=np.asarray(final.D), stats=stats)
+    return ACFactor(n=n, col_ptr=np.asarray(col_ptr_d).astype(np.int64),
+                    rows=np.asarray(rows_dev), vals=np.asarray(vals_dev),
+                    D=np.asarray(final.D), stats=stats, device=dev)

@@ -65,6 +65,67 @@ def pcg_jax(matvec: Callable, precond: Callable, b: jnp.ndarray, *,
     return PCGResult(x=x, iters=it, relres=relres, converged=relres <= tol)
 
 
+def pcg_jax_batched(matvec: Callable, precond: Callable, B: jnp.ndarray, *,
+                    tol: float = 1e-6, maxiter: int = 1000,
+                    project: bool = True) -> PCGResult:
+    """Batched multi-RHS PCG: one ``while_loop`` drives every column of
+    ``B`` (shape ``(nrhs, n)``) against the same operator/preconditioner.
+
+    ``matvec``/``precond`` take and return ``(nrhs, n)`` blocks (vmap a
+    single-vector closure, or pass a block closure that fuses the rhs
+    axis, e.g. the multi-rhs ELL trisolve).  Converged columns are frozen
+    by an active mask, so each column takes exactly the iterates of its
+    independent single-rhs solve — results match ``pcg_jax`` per column
+    instead of drifting while slow columns finish.
+    """
+    if project:
+        B = B - jnp.mean(B, axis=1, keepdims=True)
+    bnorm = jnp.linalg.norm(B, axis=1)
+    bnorm = jnp.where(bnorm > 0, bnorm, 1.0)
+    nrhs = B.shape[0]
+
+    def _proj(Z):
+        return Z - jnp.mean(Z, axis=1, keepdims=True) if project else Z
+
+    X0 = jnp.zeros_like(B)
+    R0 = B
+    Z0 = _proj(precond(R0))
+    P0 = Z0
+    rz0 = jnp.sum(R0 * Z0, axis=1)
+    act0 = (jnp.linalg.norm(B, axis=1) / bnorm) > tol
+    it0 = jnp.zeros(nrhs, jnp.int32)
+
+    def cond(c):
+        return jnp.any(c[6])
+
+    def body(c):
+        X, R, Z, P, rz, it, active = c
+        AP = matvec(P)
+        pAp = jnp.sum(P * AP, axis=1)
+        alpha = jnp.where(active, rz / jnp.where(pAp != 0, pAp, 1.0), 0.0)
+        Xn = X + alpha[:, None] * P
+        Rn = R - alpha[:, None] * AP
+        Zn = _proj(precond(Rn))
+        rz_new = jnp.sum(Rn * Zn, axis=1)
+        beta = jnp.where(active, rz_new / jnp.where(rz != 0, rz, 1.0), 0.0)
+        Pn = Zn + beta[:, None] * P
+        m = active[:, None]
+        X = jnp.where(m, Xn, X)
+        R = jnp.where(m, Rn, R)
+        Z = jnp.where(m, Zn, Z)
+        P = jnp.where(m, Pn, P)
+        rz = jnp.where(active, rz_new, rz)
+        it = it + active.astype(jnp.int32)
+        relres = jnp.linalg.norm(R, axis=1) / bnorm
+        active = active & (relres > tol) & (it < maxiter)
+        return (X, R, Z, P, rz, it, active)
+
+    X, R, Z, P, rz, it, active = jax.lax.while_loop(
+        cond, body, (X0, R0, Z0, P0, rz0, it0, act0))
+    relres = jnp.linalg.norm(R, axis=1) / bnorm
+    return PCGResult(x=X, iters=it, relres=relres, converged=relres <= tol)
+
+
 def pcg_np(matvec: Callable, precond: Callable, b: np.ndarray, *,
            tol: float = 1e-6, maxiter: int = 1000,
            project: bool = True) -> PCGResult:
@@ -107,6 +168,16 @@ def laplacian_pcg_jax(g: Graph, precond: Callable, b: jnp.ndarray,
     w = jnp.asarray(g.w, dtype=b.dtype)
     mv = partial(laplacian_matvec, src, dst, w, g.n)
     return pcg_jax(mv, precond, b, **kw)
+
+
+def laplacian_pcg_jax_batched(g: Graph, precond: Callable, B: jnp.ndarray,
+                              **kw) -> PCGResult:
+    """Batched Laplacian PCG; ``precond`` takes an ``(nrhs, n)`` block."""
+    src = jnp.asarray(g.src)
+    dst = jnp.asarray(g.dst)
+    w = jnp.asarray(g.w, dtype=B.dtype)
+    mv = jax.vmap(partial(laplacian_matvec, src, dst, w, g.n))
+    return pcg_jax_batched(mv, precond, B, **kw)
 
 
 def laplacian_pcg_np(g: Graph, precond: Callable, b: np.ndarray,

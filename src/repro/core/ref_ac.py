@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import List, Optional
+from typing import List, NamedTuple, Optional
 
 import numpy as np
 import jax
@@ -22,6 +22,28 @@ import jax.numpy as jnp
 
 from .laplacian import Graph
 from .column_math import eliminate_column, column_uniforms, INVALID_ID
+
+
+class DeviceFactor(NamedTuple):
+    """Device-resident view of an ``ACFactor`` — the handoff currency of
+    the factor→solve pipeline.  The wavefront engine emits one directly
+    (its compaction already runs on device); host-built factors upload
+    lazily via ``ACFactor.to_device()``.  All consumers downstream of the
+    factorization (schedule builder, preconditioner, PCG) read these
+    arrays, so the hot path never round-trips through numpy."""
+
+    col_ptr: jnp.ndarray  # int32[n+1]
+    rows: jnp.ndarray     # int32[nnz]
+    vals: jnp.ndarray     # f32[nnz]
+    D: jnp.ndarray        # f32[n]
+
+    @property
+    def n(self) -> int:
+        return int(self.D.shape[0])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.shape[0])
 
 
 @dataclasses.dataclass
@@ -39,10 +61,26 @@ class ACFactor:
     D: np.ndarray         # f32[n]
     perm: Optional[np.ndarray] = None   # original id -> position
     stats: Optional[dict] = None
+    device: Optional[DeviceFactor] = None  # device-resident view (cached)
 
     @property
     def nnz(self) -> int:
         return int(self.rows.shape[0])
+
+    def to_device(self) -> DeviceFactor:
+        """Device-resident view; cached so repeated schedule builds and
+        preconditioner constructions share one upload (or none at all
+        when the factor came off the wavefront engine)."""
+        if self.device is None:
+            # stay eager even under an outer jit trace: the cached view
+            # must hold real device buffers, never tracers
+            with jax.ensure_compile_time_eval():
+                self.device = DeviceFactor(
+                    col_ptr=jnp.asarray(self.col_ptr, jnp.int32),
+                    rows=jnp.asarray(self.rows, jnp.int32),
+                    vals=jnp.asarray(self.vals),
+                    D=jnp.asarray(self.D))
+        return self.device
 
     def fill_ratio(self, g: Graph) -> float:
         """Paper Fig. 4 metric: 2·nnz(G) / nnz(L)."""

@@ -1,0 +1,135 @@
+"""``Solver`` — the device-resident factor→solve pipeline as an API.
+
+The paper's production shape is *factor once, serve many solves*: the
+randomized construction is cheap (little pre-processing, §4) and the
+short-critical-path factor (§6.2) then amortizes over every rhs that
+arrives.  ``Solver`` packages that lifecycle:
+
+    solver = Solver(chunk=256, fill_slack=32)
+    handle = solver.factor(graph, jax.random.key(0))   # device-resident
+    res = solver.solve(b)            # single rhs, jitted PCG
+    res = solver.solve(B)            # (nrhs, n) block → batched PCG
+
+``factor`` runs the wavefront engine, compacts the factor on device and
+derives both triangular level schedules on device (``trisolve.
+build_schedules_device``) — the handle caches the jitted preconditioner
+and one jitted PCG per rhs-batch shape, so repeated solves against the
+same factor pay zero rebuild cost.  Batched solves share the factor
+through a fused multi-rhs trisolve (one gather-multiply-reduce per level
+for the whole block), not nrhs sequential applies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .laplacian import Graph, laplacian_matvec
+from .ref_ac import ACFactor
+from .parac import factorize_wavefront
+from .trisolve import (DeviceSchedule, build_schedules_device,
+                       make_preconditioner_from_schedules)
+from .pcg import PCGResult, pcg_jax, pcg_jax_batched
+
+
+@dataclasses.dataclass
+class FactorHandle:
+    """A factored graph ready to serve solves.  Everything needed on the
+    hot path (schedules, D⁻¹, edge arrays) is device-resident; jitted
+    solve closures are cached per rhs-batch shape."""
+
+    graph: Graph
+    factor: ACFactor
+    fwd: DeviceSchedule
+    bwd: DeviceSchedule
+    precondition: callable            # r (n,) or (n, nrhs) -> M⁺ r
+    _src: jnp.ndarray
+    _dst: jnp.ndarray
+    _w: jnp.ndarray
+    _cache: Dict[Tuple, callable] = dataclasses.field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        return self.graph.n
+
+    def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
+        return laplacian_matvec(self._src, self._dst, self._w, self.n, x)
+
+    def solve(self, B, *, tol: float = 1e-6, maxiter: int = 1000,
+              project: bool = True) -> PCGResult:
+        """PCG-solve ``L x = b``.  ``B``: ``(n,)`` for one rhs or
+        ``(nrhs, n)`` for a batch (all columns share this factor)."""
+        B = jnp.asarray(B)
+        if B.ndim not in (1, 2) or B.shape[-1] != self.n:
+            raise ValueError(
+                f"rhs must be (n,) or (nrhs, n) with n={self.n}, "
+                f"got {B.shape}")
+        key = (B.shape, str(B.dtype), float(tol), int(maxiter), project)
+        fn = self._cache.get(key)
+        if fn is None:
+            fn = jax.jit(self._build_solve(B.ndim, tol, maxiter, project))
+            self._cache[key] = fn
+        return fn(B)
+
+    def _build_solve(self, ndim: int, tol: float, maxiter: int,
+                     project: bool):
+        mv = self.matvec
+        pc = self.precondition
+        if ndim == 1:
+            return lambda b: pcg_jax(mv, pc, b, tol=tol, maxiter=maxiter,
+                                     project=project)
+        # batched: matvec vmaps over the rhs axis; the preconditioner
+        # consumes the whole (n, nrhs) block in one fused trisolve.
+        bmv = jax.vmap(mv)
+
+        def bpc(R):
+            return pc(R.T).T
+
+        return lambda B: pcg_jax_batched(bmv, bpc, B, tol=tol,
+                                         maxiter=maxiter, project=project)
+
+
+class Solver:
+    """Factor-once / solve-many frontend over the wavefront engine.
+
+    Construction options are fixed per ``Solver``; each ``factor`` call
+    produces (and remembers) a :class:`FactorHandle`, and ``solve``
+    forwards to the most recent one.
+    """
+
+    def __init__(self, *, chunk: int = 64, fill_slack: int = 32,
+                 strict: bool = True, max_retries: int = 3,
+                 dtype=np.float32):
+        self.chunk = chunk
+        self.fill_slack = fill_slack
+        self.strict = strict
+        self.max_retries = max_retries
+        self.dtype = dtype
+        self.handle: Optional[FactorHandle] = None
+
+    def factor(self, g: Graph, key: jax.Array) -> FactorHandle:
+        f = factorize_wavefront(
+            g, key, chunk=self.chunk, fill_slack=self.fill_slack,
+            strict=self.strict, max_retries=self.max_retries,
+            dtype=self.dtype)
+        return self.attach(g, f)
+
+    def attach(self, g: Graph, f: ACFactor) -> FactorHandle:
+        """Wrap an existing factor (e.g. from the sequential oracle) in a
+        solve handle — same lifecycle, no re-factorization."""
+        fwd, bwd = build_schedules_device(f)
+        self.handle = FactorHandle(
+            graph=g, factor=f, fwd=fwd, bwd=bwd,
+            precondition=make_preconditioner_from_schedules(
+                fwd, bwd, f.to_device().D),
+            _src=jnp.asarray(g.src), _dst=jnp.asarray(g.dst),
+            _w=jnp.asarray(g.w, dtype=jnp.asarray(f.vals).dtype))
+        return self.handle
+
+    def solve(self, B, **kw) -> PCGResult:
+        if self.handle is None:
+            raise RuntimeError("Solver.solve before Solver.factor")
+        return self.handle.solve(B, **kw)

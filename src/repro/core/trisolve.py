@@ -5,9 +5,17 @@ not raw nnz — governs parallel triangular-solve performance, and that
 randomized factors have dramatically shorter critical paths than classical
 ones (Fig. 4).  We exploit exactly that: rows are grouped by dependency
 level (level(i) = 1 + max level over in-neighbours), and each level is one
-data-parallel segment-reduce.  Level construction is a single host pass;
-the solve itself is pure JAX (and the per-level gather-multiply-scatter is
-the Pallas ``trisolve`` kernel's job on TPU).
+data-parallel segment-reduce.
+
+Two schedule builders live here:
+
+* ``build_schedules`` / ``_levels_from_edges`` — the original host
+  (numpy) construction, kept as the test oracle;
+* ``build_schedules_device`` — the production path: level propagation
+  runs on device under ``lax.while_loop`` and the per-level panels come
+  out directly in the ELL layout consumed by ``repro.kernels.spmv``, so
+  the factor→preconditioner handoff never round-trips through numpy
+  (the wavefront engine already leaves the factor on device).
 """
 from __future__ import annotations
 
@@ -18,7 +26,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .ref_ac import ACFactor
+from .ref_ac import ACFactor, DeviceFactor
 
 
 @dataclasses.dataclass
@@ -123,20 +131,183 @@ def make_jax_solver(sched: LevelSchedule, flip: bool = False):
     return solve
 
 
-def make_preconditioner(f: ACFactor):
-    """jit-able ``r -> (G D Gᵀ)⁺ r`` via two level-scheduled solves."""
-    fwd, bwd = build_schedules(f)
-    fsolve = make_jax_solver(fwd)
-    bsolve = make_jax_solver(bwd, flip=True)
-    D = jnp.asarray(f.D)
-    dinv = jnp.where(D > 0, 1.0 / jnp.where(D > 0, D, 1.0), 0.0)
+# ---------------------------------------------------------------------------
+# Device-side schedule construction (production path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DeviceSchedule:
+    """Level schedule with rows pre-packed into ELL panels, built on
+    device.  ``row_ids`` lists rows sorted by level; level ``lv`` owns
+    rows ``row_ids[row_ptr[lv]:row_ptr[lv+1]]`` and the matching slabs of
+    ``cols``/``vals`` — each slab is exactly the (rows, K) tile layout
+    ``kernels.spmv.ell_spmv_pallas`` consumes.  Only ``row_ptr`` and
+    ``n_levels`` live on host (loop bounds must be static); the data
+    arrays are device-resident."""
+
+    n: int
+    n_levels: int
+    K: int                  # panel width = max in-degree (≥ 1)
+    row_ids: jnp.ndarray    # int32[n] — rows sorted by (level, row)
+    row_ptr: np.ndarray     # int64[n_levels+1] into row_ids/cols/vals
+    cols: jnp.ndarray       # int32[n, K] — in-edge sources, 0-padded
+    vals: jnp.ndarray       # f32[n, K]   — in-edge values, 0-padded
+    level_of: jnp.ndarray   # int32[n]
+
+
+def _propagate_levels(dst, src, *, n: int):
+    """Longest-path levels by iterative relaxation under ``while_loop`` —
+    converges in (#levels) passes, all on device.
+
+    Deliberately NOT ``@jax.jit``-wrapped: it always runs on concrete
+    arrays under ``ensure_compile_time_eval`` (schedule construction is
+    compile-time work), and jax 0.4.x mis-tracks inner-jit argument
+    tracers in that nesting (jit → ensure_compile_time_eval → jit with a
+    ``while_loop``), raising ``UnexpectedTracerError``.  Eager dispatch
+    costs one primitive per line, once per factor."""
+    def cond(c):
+        return c[1]
+
+    def body(c):
+        level, _ = c
+        cand = jnp.zeros(n, jnp.int32).at[dst].max(level[src] + 1,
+                                                   mode="drop")
+        new = jnp.maximum(level, cand)
+        return new, jnp.any(new != level)
+
+    level, _ = jax.lax.while_loop(
+        cond, body, (jnp.zeros(n, jnp.int32), jnp.bool_(True)))
+    return level
+
+
+def _pack_ell_panels(dst, src, val, level, *, n: int, K: int):
+    """Scatter solve edges into level-sorted ELL panels, one pass:
+    rows sorted by level, each row's in-edges packed into its K-slot.
+    Eager on purpose — see ``_propagate_levels``."""
+    E = dst.shape[0]
+    row_ids = jnp.argsort(level, stable=True).astype(jnp.int32)
+    row_rank = jnp.zeros(n, jnp.int32).at[row_ids].set(
+        jnp.arange(n, dtype=jnp.int32))
+    eorder = jnp.argsort(dst, stable=True)
+    sd, ss, swv = dst[eorder], src[eorder], val[eorder]
+    eidx = jnp.arange(E, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), sd[1:] != sd[:-1]])
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, eidx, 0))
+    rank = eidx - run_start
+    dest = row_rank[sd] * K + rank
+    cols = jnp.zeros(n * K, jnp.int32).at[dest].set(ss).reshape(n, K)
+    vals = jnp.zeros(n * K, val.dtype).at[dest].set(swv).reshape(n, K)
+    return row_ids, cols, vals
+
+
+def _schedule_from_edges_device(n: int, dst: jnp.ndarray, src: jnp.ndarray,
+                                val: jnp.ndarray) -> DeviceSchedule:
+    """Device schedule from COO solve edges (dst reads src).  Host work
+    is limited to O(n_levels) slicing metadata — no per-edge loops.
+
+    Schedule construction needs concrete metadata (panel width, level
+    count), so it always runs at trace/compile time — callers may build
+    preconditioners inside an outer ``jit`` (``ensure_compile_time_eval``
+    keeps the concrete-array maths eager there).
+    """
+    if dst.shape[0] == 0:
+        return DeviceSchedule(
+            n=n, n_levels=1, K=1,
+            row_ids=jnp.arange(n, dtype=jnp.int32),
+            row_ptr=np.array([0, n], np.int64),
+            cols=jnp.zeros((n, 1), jnp.int32),
+            vals=jnp.zeros((n, 1), jnp.float32),
+            level_of=jnp.zeros(n, jnp.int32))
+    with jax.ensure_compile_time_eval():
+        level = _propagate_levels(dst, src, n=n)
+        indeg = jnp.zeros(n, jnp.int32).at[dst].add(1)
+        K = max(int(indeg.max()), 1)
+        row_ids, cols, vals = _pack_ell_panels(dst, src, val, level,
+                                               n=n, K=K)
+        level_h = np.asarray(level)        # O(n) metadata copy, no loop
+    n_levels = int(level_h.max()) + 1
+    row_ptr = np.searchsorted(np.sort(level_h),
+                              np.arange(n_levels + 1)).astype(np.int64)
+    return DeviceSchedule(n=n, n_levels=n_levels, K=K, row_ids=row_ids,
+                          row_ptr=row_ptr, cols=cols, vals=vals,
+                          level_of=level)
+
+
+def build_schedules_device(
+        f: ACFactor | DeviceFactor) -> Tuple[DeviceSchedule, DeviceSchedule]:
+    """Forward/backward device schedules straight from the (device) factor.
+
+    Edge derivation mirrors ``build_schedules``: CSC entry (i ∈ col k) is
+    forward edge dst=i/src=k; the backward solve runs in flipped index
+    space so ascending indices stay topological.
+    """
+    dev = f if isinstance(f, DeviceFactor) else f.to_device()
+    n, nnz = dev.n, dev.nnz
+    with jax.ensure_compile_time_eval():
+        counts = jnp.diff(dev.col_ptr)
+        cols_of = jnp.repeat(jnp.arange(n, dtype=jnp.int32), counts,
+                             total_repeat_length=nnz)
+        bsrc = (n - 1) - dev.rows
+        bdst = (n - 1) - cols_of
+    fwd = _schedule_from_edges_device(n, dev.rows, cols_of, dev.vals)
+    bwd = _schedule_from_edges_device(n, bdst, bsrc, dev.vals)
+    return fwd, bwd
+
+
+def make_ell_solver(sched: DeviceSchedule, flip: bool = False):
+    """jit-able unit-triangular solve over ELL panels; accepts a single
+    rhs ``(n,)`` or a multi-rhs block ``(n, nrhs)`` (one fused gather-
+    multiply-reduce per level for the whole block)."""
+    panels = []
+    with jax.ensure_compile_time_eval():
+        for lv in range(1, sched.n_levels):  # level-0 rows lack in-edges
+            lo, hi = int(sched.row_ptr[lv]), int(sched.row_ptr[lv + 1])
+            if hi == lo:
+                continue
+            panels.append(
+                (jax.lax.slice(sched.row_ids, (lo,), (hi,)),
+                 jax.lax.slice(sched.cols, (lo, 0), (hi, sched.K)),
+                 jax.lax.slice(sched.vals, (lo, 0), (hi, sched.K))))
+
+    def solve(b: jnp.ndarray) -> jnp.ndarray:
+        y = jnp.flip(b, axis=0) if flip else b
+        for rows, cols, vals in panels:
+            gathered = y[cols]                       # (R, K[, nrhs])
+            v = vals if y.ndim == 1 else vals[:, :, None]
+            contrib = jnp.sum(v * gathered, axis=1)
+            y = y.at[rows].add(-contrib)             # rows touched once
+        return jnp.flip(y, axis=0) if flip else y
+
+    return solve
+
+
+def make_preconditioner_from_schedules(fwd: DeviceSchedule,
+                                       bwd: DeviceSchedule, D: jnp.ndarray):
+    """``r -> (G D Gᵀ)⁺ r`` from pre-built device schedules (the Solver
+    path: schedules are built once per factor and shared)."""
+    fsolve = make_ell_solver(fwd)
+    bsolve = make_ell_solver(bwd, flip=True)
+    with jax.ensure_compile_time_eval():
+        dinv = jnp.where(D > 0, 1.0 / jnp.where(D > 0, D, 1.0), 0.0)
 
     def apply(r: jnp.ndarray) -> jnp.ndarray:
         y = fsolve(r)
-        z = y * dinv
+        z = y * (dinv if y.ndim == 1 else dinv[:, None])
         return bsolve(z)
 
     return apply
+
+
+def make_preconditioner(f: ACFactor | DeviceFactor):
+    """jit-able ``r -> (G D Gᵀ)⁺ r`` via two level-scheduled solves.
+
+    Built from the device schedules (no numpy round-trip); supports a
+    single rhs ``(n,)`` or a multi-rhs block ``(n, nrhs)``.
+    """
+    fwd, bwd = build_schedules_device(f)
+    dev = f if isinstance(f, DeviceFactor) else f.to_device()
+    return make_preconditioner_from_schedules(fwd, bwd, dev.D)
 
 
 def precond_apply_np(f: ACFactor, r: np.ndarray) -> np.ndarray:

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from .sample_clique import sample_clique_pallas, INVALID_ID
-from .spmv import ell_spmv_pallas
+from .spmv import ell_spmv_pallas, ell_spmv_multi_pallas
 from . import ref as kref
 
 
@@ -40,6 +40,12 @@ def sample_clique(ids, ws, fill, u, *, interpret: bool = True,
 @partial(jax.jit, static_argnames=("interpret",))
 def ell_spmv(cols, vals, x, *, interpret: bool = True):
     return ell_spmv_pallas(cols, vals, x, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ell_spmv_multi(cols, vals, x, *, interpret: bool = True):
+    """Multi-rhs ELL SpMV; x: [n, B] → y: [R, B]."""
+    return ell_spmv_multi_pallas(cols, vals, x, interpret=interpret)
 
 
 def graph_to_ell(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
@@ -69,7 +75,8 @@ def schedule_to_ell(sched) -> Tuple[np.ndarray, ...]:
     """Pad a trisolve LevelSchedule into per-level ELL rows.
 
     Returns (row_ids, cols, vals, level_ptr) with rows grouped by level;
-    each row padded to the level's max in-degree.
+    each row padded to the level's max in-degree.  Vectorized: per-level
+    packing is a stable sort + rank scatter, no per-edge Python loop.
     """
     rows_all, cols_all, vals_all, ptr = [], [], [], [0]
     for lv in range(sched.n_levels):
@@ -81,14 +88,16 @@ def schedule_to_ell(sched) -> Tuple[np.ndarray, ...]:
         uniq, inv = np.unique(dst, return_inverse=True)
         counts = np.bincount(inv)
         K = int(counts.max())
+        # rank of each edge within its dst group (edges already grouped
+        # arbitrarily; stable sort by inv gives contiguous groups)
+        order = np.argsort(inv, kind="stable")
+        starts = np.zeros(uniq.size + 1, np.int64)
+        np.cumsum(counts, out=starts[1:])
+        rank = np.arange(hi - lo) - np.repeat(starts[:-1], counts)
         cols = np.zeros((uniq.size, K), np.int32)
         vals = np.zeros((uniq.size, K), np.float32)
-        fill = np.zeros(uniq.size, np.int64)
-        for e in range(lo, hi):
-            r = inv[e - lo]
-            cols[r, fill[r]] = sched.e_src[e]
-            vals[r, fill[r]] = sched.e_val[e]
-            fill[r] += 1
+        cols[inv[order], rank] = sched.e_src[lo:hi][order]
+        vals[inv[order], rank] = sched.e_val[lo:hi][order]
         rows_all.append(uniq.astype(np.int32))
         cols_all.append(cols)
         vals_all.append(vals)
@@ -106,3 +115,22 @@ def trisolve_levels(level_rows, level_cols, level_vals, b, flip: bool = False,
                                  interpret=interpret)
         y = y.at[rows].set(upd)
     return y[::-1] if flip else y
+
+
+def trisolve_panels(sched, b, flip: bool = False, interpret: bool = True):
+    """Unit-triangular solve over a ``trisolve.DeviceSchedule``'s ELL
+    panels, driven by the Pallas SpMV kernels — the device-built panels
+    are consumed as-is (same (rows, K) tiles, no repacking).  ``b`` may
+    be ``(n,)`` or ``(n, B)``; the multi-rhs kernel serves a whole block
+    per level."""
+    y = jnp.flip(jnp.asarray(b), axis=0) if flip else jnp.asarray(b)
+    kernel = ell_spmv if y.ndim == 1 else ell_spmv_multi
+    for lv in range(1, sched.n_levels):   # level-0 rows have no in-edges
+        lo, hi = int(sched.row_ptr[lv]), int(sched.row_ptr[lv + 1])
+        if hi == lo:
+            continue
+        rows = jax.lax.slice(sched.row_ids, (lo,), (hi,))
+        cols = jax.lax.slice(sched.cols, (lo, 0), (hi, sched.K))
+        vals = jax.lax.slice(sched.vals, (lo, 0), (hi, sched.K))
+        y = y.at[rows].add(-kernel(cols, vals, y, interpret=interpret))
+    return jnp.flip(y, axis=0) if flip else y

@@ -32,14 +32,20 @@ def _spmv_kernel(cols_ref, vals_ref, x_ref, y_ref):
     y_ref[...] = jnp.sum(contrib, axis=1, keepdims=True)
 
 
+def _pick_block_rows(R: int, block_rows: int) -> int:
+    """Largest divisor of R that is ≤ block_rows (grid must tile R)."""
+    Rb = max(1, min(block_rows, R))
+    while R % Rb:
+        Rb -= 1
+    return Rb
+
+
 def ell_spmv_pallas(cols, vals, x, *, block_rows: int = 256,
                     interpret: bool = True):
     """y[i] = Σ_k vals[i,k] · x[cols[i,k]].  cols/vals: [R, K]; x: [n]."""
     R, K = cols.shape
     n = x.shape[0]
-    Rb = max(1, min(block_rows, R))
-    while R % Rb:
-        Rb -= 1
+    Rb = _pick_block_rows(R, block_rows)
     grid = (R // Rb,)
     return pl.pallas_call(
         _spmv_kernel,
@@ -51,3 +57,37 @@ def ell_spmv_pallas(cols, vals, x, *, block_rows: int = 256,
         out_shape=jax.ShapeDtypeStruct((R, 1), vals.dtype),
         interpret=interpret,
     )(cols, vals, x)[:, 0]
+
+
+def _spmv_multi_kernel(cols_ref, vals_ref, x_ref, y_ref):
+    cols = cols_ref[...]                 # (Rb, K) int32, padded with 0
+    vals = vals_ref[...]                 # (Rb, K) f32, padded with 0.0
+    x = x_ref[...]                       # (n, B) f32 — rhs block in VMEM
+    contrib = vals[:, :, None] * x[cols]         # (Rb, K, B)
+    y_ref[...] = jnp.sum(contrib, axis=1)
+
+
+def ell_spmv_multi_pallas(cols, vals, x, *, block_rows: int = 256,
+                          interpret: bool = True):
+    """Multi-rhs ELL SpMV: Y[i, b] = Σ_k vals[i,k] · x[cols[i,k], b].
+
+    cols/vals: [R, K]; x: [n, B].  One kernel pass serves the whole rhs
+    block — the solve-phase shape of the Solver's batched PCG, where the
+    factor (and its level panels) are shared across B simultaneous
+    systems.  Bandwidth per row is amortized: the (Rb, K) index/value
+    tiles are read once for all B columns.
+    """
+    R, K = cols.shape
+    n, B = x.shape
+    Rb = _pick_block_rows(R, block_rows)
+    grid = (R // Rb,)
+    return pl.pallas_call(
+        _spmv_multi_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((Rb, K), lambda r: (r, 0)),
+                  pl.BlockSpec((Rb, K), lambda r: (r, 0)),
+                  pl.BlockSpec((n, B), lambda r: (0, 0))],
+        out_specs=pl.BlockSpec((Rb, B), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, B), vals.dtype),
+        interpret=interpret,
+    )(cols, vals, x)

@@ -26,14 +26,16 @@ def main():
     ap.add_argument("--chunk", type=int, default=256)
     ap.add_argument("--batch", type=int, default=0,
                     help="factorize N seeded replicas concurrently")
+    ap.add_argument("--nrhs", type=int, default=1,
+                    help="solve N right-hand sides in one batched PCG "
+                         "sharing the factor")
     args = ap.parse_args()
 
     import jax
     import jax.numpy as jnp
     from repro.data import graphs
     from repro.core.parac import factorize_wavefront
-    from repro.core.trisolve import make_preconditioner
-    from repro.core.pcg import laplacian_pcg_jax
+    from repro.core.solver import Solver
     from repro.core.ordering import ORDERINGS
     from repro.core import etree
 
@@ -55,20 +57,37 @@ def main():
               f"({(time.time()-t0)/args.batch:.3f}s each)")
         return
 
+    solver = Solver(chunk=args.chunk)
     t0 = time.time()
-    f = factorize_wavefront(gp, jax.random.key(0), chunk=args.chunk)
+    handle = solver.factor(gp, jax.random.key(0))
+    f = handle.factor
     print(f"factor: {time.time()-t0:.2f}s nnz={f.nnz} "
           f"fill={f.fill_ratio(g):.2f} rounds={f.stats['rounds']} "
-          f"height={etree.actual_etree_height(f)}")
+          f"height={etree.actual_etree_height(f)} "
+          f"levels={handle.fwd.n_levels}")
 
     rng = np.random.default_rng(0)
+    iperm = np.argsort(perm)
+    if args.nrhs > 1:
+        B = rng.normal(size=(args.nrhs, g.n))
+        B -= B.mean(axis=1, keepdims=True)
+        Bp = jnp.asarray(B[:, iperm], jnp.float32)
+        t0 = time.time()
+        res = solver.solve(Bp, tol=args.tol, maxiter=args.maxiter)
+        jax.block_until_ready(res.x)
+        it = np.asarray(res.iters)
+        rr = np.asarray(res.relres)
+        print(f"batched solve: {time.time()-t0:.2f}s nrhs={args.nrhs} "
+              f"iters={it.min()}..{it.max()} max_relres={rr.max():.2e} "
+              f"converged={bool(np.all(np.asarray(res.converged)))}")
+        return
+
     b = rng.normal(size=g.n)
     b -= b.mean()
-    bp = jnp.asarray(b[np.argsort(perm)], jnp.float32)
+    bp = jnp.asarray(b[iperm], jnp.float32)
     t0 = time.time()
-    res = jax.jit(lambda bb: laplacian_pcg_jax(
-        gp, make_preconditioner(f), bb, tol=args.tol,
-        maxiter=args.maxiter))(bp)
+    res = solver.solve(bp, tol=args.tol, maxiter=args.maxiter)
+    jax.block_until_ready(res.x)
     print(f"solve: {time.time()-t0:.2f}s iters={int(res.iters)} "
           f"relres={float(res.relres):.2e} converged={bool(res.converged)}")
 

@@ -5,7 +5,29 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is a dev-only extra; property tests skip without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def given(**kw):            # noqa: D103 — stand-in decorator: the
+        def deco(fn):           # decorated test becomes a skip marker
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped():
+                pass
+            skipped.__name__ = fn.__name__
+            return skipped
+        return deco
+
+    def settings(**kw):
+        return lambda fn: fn
+
+    class st:  # noqa: N801
+        @staticmethod
+        def integers(*a, **kw):
+            return None
 
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref

@@ -1,0 +1,255 @@
+"""Device-resident factor→solve pipeline: compaction, device schedules,
+batched multi-RHS PCG, and the ``Solver`` lifecycle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.laplacian import laplacian_matvec_np
+from repro.core.ref_ac import factorize_sequential
+from repro.core.parac import factorize_wavefront, _build_pool, _compact_pool
+from repro.core.trisolve import (build_schedules, build_schedules_device,
+                                 solve_levels_np, make_ell_solver,
+                                 make_preconditioner)
+from repro.core.pcg import laplacian_pcg_jax, laplacian_pcg_jax_batched
+from repro.core.solver import Solver
+from repro.kernels import ops as kops
+from repro.data import graphs
+
+
+KEY = jax.random.key(7)
+
+
+@pytest.fixture(scope="module")
+def g_small():
+    return graphs.grid2d(12, 12, seed=3)
+
+
+@pytest.fixture(scope="module")
+def handle(g_small):
+    return Solver(chunk=32, fill_slack=64).factor(g_small, KEY)
+
+
+# ---------------------------------------------------------------------------
+# Device compaction == old host loop
+# ---------------------------------------------------------------------------
+
+def _host_compact(pool_row, pool_val, col_fill, col_base, dtype):
+    """The pre-refactor per-column host loop, kept as the oracle."""
+    n = col_fill.shape[0]
+    lens = col_fill.astype(np.int64)
+    col_ptr = np.zeros(n + 1, np.int64)
+    np.cumsum(lens, out=col_ptr[1:])
+    rows = np.empty(col_ptr[-1], np.int32)
+    vals = np.empty(col_ptr[-1], dtype)
+    for k in range(n):
+        b = col_base[k]
+        rows[col_ptr[k]:col_ptr[k + 1]] = pool_row[b:b + col_fill[k]]
+        vals[col_ptr[k]:col_ptr[k + 1]] = pool_val[b:b + col_fill[k]]
+    return col_ptr, rows, vals
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_device_compaction_matches_host_loop(seed):
+    rng = np.random.default_rng(seed)
+    g = graphs.powerlaw(120 + 30 * seed, 4, seed=seed)
+    pool_row, pool_val, fill, dep, col_base, cap, P, dmax = \
+        _build_pool(g, 8, np.float32)
+    # scramble fills to exercise ragged slabs (any fill <= cap is legal)
+    fill = rng.integers(0, cap + 1).astype(np.int32)
+    rows_c, vals_c, col_ptr_d = _compact_pool(
+        jnp.asarray(pool_row), jnp.asarray(pool_val), jnp.asarray(fill),
+        jnp.asarray(col_base))
+    nnz = int(col_ptr_d[-1])
+    ref_ptr, ref_rows, ref_vals = _host_compact(
+        pool_row, pool_val, fill, col_base, np.float32)
+    assert np.array_equal(np.asarray(col_ptr_d).astype(np.int64), ref_ptr)
+    assert np.array_equal(np.asarray(rows_c)[:nnz], ref_rows)
+    assert np.array_equal(np.asarray(vals_c)[:nnz], ref_vals)
+
+
+def test_wavefront_factor_is_device_resident(g_small):
+    f = factorize_wavefront(g_small, KEY, fill_slack=64)
+    assert f.device is not None
+    assert isinstance(f.device.rows, jax.Array)
+    assert np.array_equal(np.asarray(f.device.rows), f.rows)
+    assert np.array_equal(np.asarray(f.device.col_ptr), f.col_ptr)
+    assert np.array_equal(np.asarray(f.device.vals), f.vals)
+
+
+# ---------------------------------------------------------------------------
+# Device level schedule == host oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("maker", [
+    lambda: graphs.grid2d(10, 11, seed=1),
+    lambda: graphs.powerlaw(300, 5, seed=3),
+    lambda: graphs.road_like(12, seed=4),
+])
+def test_device_levels_match_host_oracle(maker):
+    g = maker()
+    f = factorize_sequential(g, KEY)
+    fwd_h, bwd_h = build_schedules(f)       # host _levels_from_edges path
+    fwd_d, bwd_d = build_schedules_device(f)
+    for h, d in ((fwd_h, fwd_d), (bwd_h, bwd_d)):
+        assert d.n_levels == h.n_levels
+        assert np.array_equal(np.asarray(d.level_of), h.level_of)
+        # same rows per level (row_ids sorted by level, ties by index)
+        lv_of_sorted = np.asarray(d.level_of)[np.asarray(d.row_ids)]
+        assert np.all(np.diff(lv_of_sorted) >= 0)
+        counts_d = np.diff(d.row_ptr)
+        counts_h = np.bincount(h.level_of, minlength=h.n_levels)
+        assert np.array_equal(counts_d, counts_h)
+
+
+def test_ell_solver_matches_host_solve(g_small):
+    f = factorize_sequential(g_small, KEY)
+    fwd_h, bwd_h = build_schedules(f)
+    fwd_d, bwd_d = build_schedules_device(f)
+    b = np.random.default_rng(2).normal(size=f.n).astype(np.float32)
+    yd = jax.jit(make_ell_solver(fwd_d))(jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(yd), solve_levels_np(fwd_h, b),
+                               rtol=2e-4, atol=2e-4)
+    xd = jax.jit(make_ell_solver(bwd_d, flip=True))(jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(xd),
+                               solve_levels_np(bwd_h, b, flip=True),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ell_solver_multi_rhs_matches_single(g_small):
+    f = factorize_sequential(g_small, KEY)
+    fwd_d, _ = build_schedules_device(f)
+    solve = jax.jit(make_ell_solver(fwd_d))
+    B = np.random.default_rng(3).normal(size=(f.n, 5)).astype(np.float32)
+    YB = np.asarray(solve(jnp.asarray(B)))
+    for j in range(5):
+        yj = np.asarray(solve(jnp.asarray(B[:, j])))
+        np.testing.assert_allclose(YB[:, j], yj, rtol=1e-6, atol=1e-7)
+
+
+def test_pallas_panel_trisolve_matches_host(g_small):
+    f = factorize_sequential(g_small, KEY)
+    fwd_h, bwd_h = build_schedules(f)
+    fwd_d, bwd_d = build_schedules_device(f)
+    b = np.random.default_rng(4).normal(size=f.n).astype(np.float32)
+    yp = np.asarray(kops.trisolve_panels(fwd_d, b))
+    np.testing.assert_allclose(yp, solve_levels_np(fwd_h, b),
+                               rtol=3e-4, atol=3e-4)
+    B = np.random.default_rng(5).normal(size=(f.n, 3)).astype(np.float32)
+    YP = np.asarray(kops.trisolve_panels(bwd_d, B, flip=True))
+    for j in range(3):
+        np.testing.assert_allclose(
+            YP[:, j], solve_levels_np(bwd_h, B[:, j], flip=True),
+            rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-RHS PCG == independent single solves
+# ---------------------------------------------------------------------------
+
+def test_batched_pcg_matches_independent_solves(g_small, handle):
+    g = g_small
+    tol, maxiter = 1e-6, 300
+    rng = np.random.default_rng(0)
+    B = rng.normal(size=(8, g.n)).astype(np.float32)
+    B -= B.mean(axis=1, keepdims=True)
+    resB = handle.solve(jnp.asarray(B), tol=tol, maxiter=maxiter)
+    assert bool(np.all(np.asarray(resB.converged)))
+    for i in range(8):
+        r1 = laplacian_pcg_jax(g, handle.precondition, jnp.asarray(B[i]),
+                               tol=tol, maxiter=maxiter)
+        # frozen-column batching keeps per-column trajectories independent;
+        # batched reductions round differently, so a column sitting on the
+        # tol boundary may stop one iteration apart — no more.
+        assert abs(int(resB.iters[i]) - int(r1.iters)) <= 1
+        assert float(resB.relres[i]) <= tol and float(r1.relres) <= tol
+        assert abs(float(resB.relres[i]) - float(r1.relres)) < tol
+        xb, x1 = np.asarray(resB.x[i], np.float64), np.asarray(r1.x,
+                                                               np.float64)
+        assert (np.linalg.norm(xb - x1) / np.linalg.norm(x1)) < 1e-2
+
+
+def test_batched_pcg_heterogeneous_convergence(g_small, handle):
+    """Columns with very different difficulty: easy ones freeze early."""
+    g = g_small
+    rng = np.random.default_rng(1)
+    hard = rng.normal(size=g.n).astype(np.float32)
+    hard -= hard.mean()
+    easy = np.asarray(
+        laplacian_matvec_np(g, rng.normal(size=g.n) * 1e-3)).astype(
+        np.float32)
+    easy -= easy.mean()
+    B = jnp.asarray(np.stack([hard, easy * 0, easy]))
+    res = handle.solve(B, tol=1e-6, maxiter=300)
+    it = np.asarray(res.iters)
+    assert it[1] == 0                     # zero rhs converges immediately
+    assert bool(np.all(np.asarray(res.relres) <= 1e-6))
+
+
+def test_batched_pcg_function_api(g_small):
+    """laplacian_pcg_jax_batched with a vmapped preconditioner closure."""
+    g = g_small
+    f = factorize_wavefront(g, KEY, fill_slack=64)
+    apply1 = make_preconditioner(f)
+    B = np.random.default_rng(2).normal(size=(4, g.n)).astype(np.float32)
+    B -= B.mean(axis=1, keepdims=True)
+    res = laplacian_pcg_jax_batched(g, jax.vmap(apply1), jnp.asarray(B),
+                                    tol=1e-6, maxiter=300)
+    assert bool(np.all(np.asarray(res.converged)))
+    for i in range(4):
+        x = np.asarray(res.x[i], np.float64)
+        r = B[i] - laplacian_matvec_np(g, x)
+        assert np.linalg.norm(r) / np.linalg.norm(B[i]) < 5e-5
+
+
+# ---------------------------------------------------------------------------
+# Solver lifecycle
+# ---------------------------------------------------------------------------
+
+def test_solver_factor_solve_roundtrip(g_small, handle):
+    g = g_small
+    b = np.random.default_rng(3).normal(size=g.n).astype(np.float32)
+    b -= b.mean()
+    res = handle.solve(jnp.asarray(b), tol=1e-6, maxiter=300)
+    assert bool(res.converged)
+    x = np.asarray(res.x, np.float64)
+    r = b - laplacian_matvec_np(g, x)
+    assert np.linalg.norm(r) / np.linalg.norm(b) < 5e-5
+
+
+def test_solver_matches_oracle_factor(g_small):
+    s = Solver(chunk=32, fill_slack=64)
+    h = s.factor(g_small, KEY)
+    fs = factorize_sequential(g_small, KEY)
+    assert np.array_equal(h.factor.rows, fs.rows)
+    assert np.array_equal(h.factor.vals, fs.vals)
+
+
+def test_solver_caches_jitted_solves(g_small, handle):
+    handle._cache.clear()
+    b = jnp.asarray(np.random.default_rng(4).normal(size=g_small.n),
+                    jnp.float32)
+    handle.solve(b)
+    assert len(handle._cache) == 1
+    handle.solve(b * 2.0)                       # same shape → cache hit
+    assert len(handle._cache) == 1
+    handle.solve(jnp.stack([b, b]))             # new batch shape
+    assert len(handle._cache) == 2
+
+
+def test_solver_rejects_bad_shapes(g_small, handle):
+    with pytest.raises(ValueError):
+        handle.solve(jnp.zeros((3, g_small.n + 1)))
+    with pytest.raises(RuntimeError):
+        Solver().solve(jnp.zeros(4))
+
+
+def test_solver_attach_host_factor(g_small):
+    """attach() serves solves from a host-built (oracle) factor."""
+    f = factorize_sequential(g_small, KEY)
+    s = Solver()
+    h = s.attach(g_small, f)
+    b = np.random.default_rng(5).normal(size=g_small.n).astype(np.float32)
+    b -= b.mean()
+    res = h.solve(jnp.asarray(b), tol=1e-6, maxiter=300)
+    assert bool(res.converged)
