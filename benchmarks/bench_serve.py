@@ -1,0 +1,63 @@
+"""Solve-service benchmark: replay a mixed request trace through the
+continuous-batching :class:`SolveEngine` and report service-level
+numbers — requests/sec, rhs/sec, p50/p95 latency.
+
+First point of the serving perf trajectory; the CI smoke job runs
+
+    PYTHONPATH=src python -m benchmarks.bench_serve \
+        --suite tiny --json BENCH_serve.json
+
+and uploads the JSON as an artifact, so regressions show up as a
+time series across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.launch.serve import run_service
+
+from .common import emit
+
+
+def run(*, suite="tiny", requests=16, slots=8, iters_per_tick=8, seed=0,
+        warm=True):
+    """One warmup replay through the same engine (pays jit compiles),
+    then the measured replay."""
+    metrics, _ = run_service(
+        suite=suite, requests=requests, slots=slots,
+        iters_per_tick=iters_per_tick, seed=seed,
+        warmup_requests=requests if warm else 0)
+    emit(f"serve/{suite}/requests_per_s", metrics["requests_per_s"],
+         f"completed={metrics['completed']};rhs={metrics['rhs_total']}")
+    emit(f"serve/{suite}/latency_p50_us", metrics["latency_p50_s"] * 1e6,
+         f"p95_us={metrics['latency_p95_s']*1e6:.0f}")
+    emit(f"serve/{suite}/factor_batched_us", metrics["factor_s"] * 1e6,
+         f"graphs={metrics['graphs']}")
+    return metrics
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="tiny", choices=["tiny", "small"])
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--iters-per-tick", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-warm", action="store_true",
+                    help="skip the warmup replay (include compiles)")
+    ap.add_argument("--json", default=None,
+                    help="write service metrics to this JSON file "
+                         "(uploaded as a CI artifact)")
+    args = ap.parse_args()
+    metrics = run(suite=args.suite, requests=args.requests,
+                  slots=args.slots, iters_per_tick=args.iters_per_tick,
+                  seed=args.seed, warm=not args.no_warm)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(metrics, fh, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,9 +31,9 @@ DEFAULT_SUITE = ("grid2d_64", "grid3d_contrast_16", "powerlaw_4k",
 
 
 def tiny_suite():
-    """Sub-second graphs for the CI smoke job."""
-    return {"grid2d_tiny": lambda: graphs.grid2d(12, 12, seed=3),
-            "powerlaw_tiny": lambda: graphs.powerlaw(300, 5, seed=3)}
+    """Sub-second graphs for the CI smoke job (canonical registry)."""
+    return {k: graphs.SUITE_TINY[k]
+            for k in ("grid2d_tiny", "powerlaw_tiny")}
 
 
 def run(suite=None, tol=1e-6, maxiter=500, nrhs=8, records=None):

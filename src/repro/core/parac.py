@@ -20,17 +20,26 @@ Rounds iterate under ``lax.while_loop`` until every vertex is eliminated.
 The factor is bit-identical to the sequential oracle because per-vertex
 randomness is schedule independent (``column_math.column_uniforms``).
 
+The round is decomposed into pure stage functions (`_round_ready`,
+`_round_eliminate`, `_round_commit`, `_round_scatter`) composed by
+``_engine_round``; ``_run_engine`` drives one graph and
+``_run_engine_batched`` ``vmap``s the same round over a padded fleet —
+``factorize_batched`` factors B Laplacians in one XLA program and is
+bit-identical to per-graph ``factorize_wavefront`` because the factor is
+schedule- and padding-width-independent (phantom vertices start
+eliminated; phantom pool slots belong to zero-capacity columns).
+
 Memory model (paper §5.1): one static pool sized ``m + n·fill_slack``;
 column k owns slab ``[col_base[k], col_base[k] + cap[k])``.  Overflowing
 sampled edges are dropped *and counted* — `strict=True` retries with a
 doubled slack instead (dynamic malloc is as ill-advised in XLA as in
-device code).
+device code).  In the batched path only the overflowing graphs re-run
+(masked re-runs at doubled slack); converged graphs keep their result.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import List, NamedTuple, Optional, Sequence
 
 import numpy as np
 import jax
@@ -53,85 +62,157 @@ class EngineState(NamedTuple):
     overflow: jnp.ndarray   # int32 — dropped sampled edges (0 in strict runs)
 
 
+# ---------------------------------------------------------------------------
+# Pure per-round stages (shared verbatim by the single-graph and batched
+# engines — the batched path must not fork the math)
+# ---------------------------------------------------------------------------
+
+def _init_state(pool_row, pool_val, col_fill, dep,
+                elim0: Optional[jnp.ndarray] = None) -> EngineState:
+    """Fresh engine state.  ``elim0`` pre-eliminates vertices (the padded
+    batched path marks phantom vertices eliminated so they never enter a
+    ready set)."""
+    n = col_fill.shape[0]
+    elim = jnp.zeros(n, bool) if elim0 is None else elim0
+    return EngineState(
+        pool_row=pool_row, pool_val=pool_val, col_fill=col_fill, dep=dep,
+        elim=elim, D=jnp.zeros(n, pool_val.dtype),
+        n_elim=jnp.sum(elim).astype(jnp.int32), n_rounds=jnp.int32(0),
+        overflow=jnp.int32(0))
+
+
+def _round_ready(elim: jnp.ndarray, dep: jnp.ndarray, *, chunk: int):
+    """Stage 1 — the ready set: ``chunk`` smallest ready labels.  Returns
+    candidate labels and their validity mask (short rounds pad with
+    invalid candidates)."""
+    n = elim.shape[0]
+    labels = jnp.arange(n, dtype=jnp.int32)
+    prio = jnp.where((~elim) & (dep == 0), labels, n)
+    _, cand = jax.lax.top_k(-prio, chunk)
+    cand = cand.astype(jnp.int32)
+    return cand, prio[cand] < n
+
+
+def _round_eliminate(s: EngineState, cand, cand_ok, col_base, key, *,
+                     dmax: int):
+    """Stage 2 — gather candidate column slabs and eliminate them all at
+    once.  Returns the per-column elimination results plus the gathered
+    slab geometry the commit stage writes back through."""
+    P = s.pool_row.shape[0]
+    offs = jnp.arange(dmax, dtype=jnp.int32)
+    base = col_base[cand]
+    fill = s.col_fill[cand]
+    slots = base[:, None] + offs[None, :]
+    sv = (offs[None, :] < fill[:, None]) & cand_ok[:, None]
+    slots_c = jnp.where(sv, slots, P)
+    ids = jnp.take(s.pool_row, slots_c, mode="fill", fill_value=INVALID_ID)
+    ws = jnp.take(s.pool_val, slots_c, mode="fill", fill_value=0.0)
+    u = jax.vmap(lambda v: column_uniforms(key, v, dmax))(cand)
+    res = jax.vmap(eliminate_column)(ids, ws, sv, u)
+    return res, slots, sv, ids
+
+
+def _round_commit(s: EngineState, cand, cand_ok, res, slots, sv, ids, *,
+                  dmax: int):
+    """Stages 3+4 — write normalized factor columns in place and decrement
+    dependency counters for the consumed multi-edges."""
+    n = s.col_fill.shape[0]
+    P = s.pool_row.shape[0]
+    offs = jnp.arange(dmax, dtype=jnp.int32)
+    wmask = (offs[None, :] < res.m[:, None]) & cand_ok[:, None]
+    tgt = jnp.where(wmask, slots, P).ravel()
+    pool_row = s.pool_row.at[tgt].set(res.g_rows.ravel(), mode="drop")
+    pool_val = s.pool_val.at[tgt].set(res.g_vals.ravel(), mode="drop")
+    col_fill = s.col_fill.at[cand].set(
+        jnp.where(cand_ok, res.m, s.col_fill[cand]))
+    D = s.D.at[cand].set(jnp.where(cand_ok, res.ell_kk, s.D[cand]))
+    elim = s.elim.at[cand].set(cand_ok | s.elim[cand])
+    dep = s.dep.at[jnp.where(sv, ids, n).ravel()].add(-1, mode="drop")
+    return pool_row, pool_val, col_fill, dep, elim, D
+
+
+def _round_scatter(pool_row, pool_val, col_fill, dep, res, cand_ok,
+                   col_base, cap, overflow):
+    """Stage 5 — scatter sampled spanning-tree edges to their owner
+    column's slab at sort-derived offsets; edges past a slab's capacity
+    are dropped and counted in ``overflow``."""
+    n = col_fill.shape[0]
+    P = pool_row.shape[0]
+    e_valid = (res.e_valid & cand_ok[:, None]).ravel()
+    e_lo = jnp.where(e_valid, res.e_lo.ravel(), n)
+    e_hi = res.e_hi.ravel()
+    e_w = res.e_w.ravel()
+    order = jnp.argsort(e_lo, stable=True)
+    so, sh, sw2 = e_lo[order], e_hi[order], e_w[order]
+    E = so.shape[0]
+    eidx = jnp.arange(E, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), so[1:] != so[:-1]])
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, eidx, 0))
+    rank = eidx - run_start
+    valid_e = so < n
+    dst_fill = jnp.take(col_fill, jnp.minimum(so, n - 1))
+    slot = jnp.take(col_base, jnp.minimum(so, n - 1)) + dst_fill + rank
+    fits = valid_e & (dst_fill + rank < jnp.take(cap, jnp.minimum(so, n - 1)))
+    overflow = overflow + jnp.sum(valid_e & ~fits)
+    tgt_e = jnp.where(fits, slot, P)
+    pool_row = pool_row.at[tgt_e].set(sh, mode="drop")
+    pool_val = pool_val.at[tgt_e].set(sw2, mode="drop")
+    col_fill = col_fill.at[jnp.where(fits, so, n)].add(1, mode="drop")
+    dep = dep.at[jnp.where(fits, sh, n)].add(1, mode="drop")
+    return pool_row, pool_val, col_fill, dep, overflow
+
+
+def _engine_round(s: EngineState, col_base, cap, key, *, dmax: int,
+                  chunk: int) -> EngineState:
+    """One bulk-synchronous round — the composition of the pure stages."""
+    cand, cand_ok = _round_ready(s.elim, s.dep, chunk=chunk)
+    res, slots, sv, ids = _round_eliminate(s, cand, cand_ok, col_base, key,
+                                           dmax=dmax)
+    pool_row, pool_val, col_fill, dep, elim, D = _round_commit(
+        s, cand, cand_ok, res, slots, sv, ids, dmax=dmax)
+    pool_row, pool_val, col_fill, dep, overflow = _round_scatter(
+        pool_row, pool_val, col_fill, dep, res, cand_ok, col_base, cap,
+        s.overflow)
+    return EngineState(
+        pool_row=pool_row, pool_val=pool_val, col_fill=col_fill,
+        dep=dep, elim=elim, D=D,
+        n_elim=s.n_elim + jnp.sum(cand_ok).astype(jnp.int32),
+        n_rounds=s.n_rounds + 1, overflow=overflow)
+
+
+def _engine_cond(s: EngineState):
+    n = s.elim.shape[0]
+    return (s.n_elim < n) & (s.n_rounds <= n)
+
+
 @partial(jax.jit, static_argnames=("dmax", "chunk"))
 def _run_engine(pool_row, pool_val, col_fill, dep, col_base, cap, key,
                 *, dmax: int, chunk: int) -> EngineState:
-    n = col_fill.shape[0]
-    P = pool_row.shape[0]
-    labels = jnp.arange(n, dtype=jnp.int32)
-    offs = jnp.arange(dmax, dtype=jnp.int32)
+    state = _init_state(pool_row, pool_val, col_fill, dep)
+    return jax.lax.while_loop(
+        _engine_cond,
+        lambda s: _engine_round(s, col_base, cap, key, dmax=dmax,
+                                chunk=chunk),
+        state)
 
-    state = EngineState(
-        pool_row=pool_row, pool_val=pool_val, col_fill=col_fill, dep=dep,
-        elim=jnp.zeros(n, bool), D=jnp.zeros(n, pool_val.dtype),
-        n_elim=jnp.int32(0), n_rounds=jnp.int32(0), overflow=jnp.int32(0))
 
-    def cond(s: EngineState):
-        return (s.n_elim < n) & (s.n_rounds <= n)
+@partial(jax.jit, static_argnames=("dmax", "chunk"))
+def _run_engine_batched(pool_row, pool_val, col_fill, dep, col_base, cap,
+                        elim0, keys, *, dmax: int, chunk: int) -> EngineState:
+    """The wavefront ``while_loop`` under ``vmap``: one XLA program
+    factors the whole padded fleet.  Graphs whose predicate goes false
+    freeze (vmap-of-while masks their updates) while the rest keep
+    iterating, so each graph takes exactly its own round sequence."""
+    def one(pr, pv, cf, dp, cb, cp, e0, key):
+        state = _init_state(pr, pv, cf, dp, e0)
+        return jax.lax.while_loop(
+            _engine_cond,
+            lambda s: _engine_round(s, cb, cp, key, dmax=dmax, chunk=chunk),
+            state)
 
-    def body(s: EngineState) -> EngineState:
-        # -- 1. ready set: chunk smallest ready labels ---------------------
-        prio = jnp.where((~s.elim) & (s.dep == 0), labels, n)
-        _, cand = jax.lax.top_k(-prio, chunk)
-        cand = cand.astype(jnp.int32)
-        cand_ok = prio[cand] < n
-
-        # -- 2. gather column slabs + eliminate ----------------------------
-        base = col_base[cand]
-        fill = s.col_fill[cand]
-        slots = base[:, None] + offs[None, :]
-        sv = (offs[None, :] < fill[:, None]) & cand_ok[:, None]
-        slots_c = jnp.where(sv, slots, P)
-        ids = jnp.take(s.pool_row, slots_c, mode="fill",
-                       fill_value=INVALID_ID)
-        ws = jnp.take(s.pool_val, slots_c, mode="fill", fill_value=0.0)
-        u = jax.vmap(lambda v: column_uniforms(key, v, dmax))(cand)
-        res = jax.vmap(eliminate_column)(ids, ws, sv, u)
-
-        # -- 3. write factor columns in place ------------------------------
-        wmask = (offs[None, :] < res.m[:, None]) & cand_ok[:, None]
-        tgt = jnp.where(wmask, slots, P).ravel()
-        pool_row = s.pool_row.at[tgt].set(res.g_rows.ravel(), mode="drop")
-        pool_val = s.pool_val.at[tgt].set(res.g_vals.ravel(), mode="drop")
-        col_fill = s.col_fill.at[cand].set(
-            jnp.where(cand_ok, res.m, s.col_fill[cand]))
-        D = s.D.at[cand].set(jnp.where(cand_ok, res.ell_kk, s.D[cand]))
-        elim = s.elim.at[cand].set(cand_ok | s.elim[cand])
-
-        # -- 4. dep decrements for consumed multi-edges --------------------
-        dep = s.dep.at[jnp.where(sv, ids, n).ravel()].add(-1, mode="drop")
-
-        # -- 5. scatter sampled edges to owner slabs -----------------------
-        e_valid = (res.e_valid & cand_ok[:, None]).ravel()
-        e_lo = jnp.where(e_valid, res.e_lo.ravel(), n)
-        e_hi = res.e_hi.ravel()
-        e_w = res.e_w.ravel()
-        order = jnp.argsort(e_lo, stable=True)
-        so, sh, sw2 = e_lo[order], e_hi[order], e_w[order]
-        E = so.shape[0]
-        eidx = jnp.arange(E, dtype=jnp.int32)
-        is_start = jnp.concatenate([jnp.ones((1,), bool), so[1:] != so[:-1]])
-        run_start = jax.lax.associative_scan(
-            jnp.maximum, jnp.where(is_start, eidx, 0))
-        rank = eidx - run_start
-        valid_e = so < n
-        dst_fill = jnp.take(col_fill, jnp.minimum(so, n - 1))
-        slot = jnp.take(col_base, jnp.minimum(so, n - 1)) + dst_fill + rank
-        fits = valid_e & (dst_fill + rank < jnp.take(cap, jnp.minimum(so, n - 1)))
-        overflow = s.overflow + jnp.sum(valid_e & ~fits)
-        tgt_e = jnp.where(fits, slot, P)
-        pool_row = pool_row.at[tgt_e].set(sh, mode="drop")
-        pool_val = pool_val.at[tgt_e].set(sw2, mode="drop")
-        col_fill = col_fill.at[jnp.where(fits, so, n)].add(1, mode="drop")
-        dep = dep.at[jnp.where(fits, sh, n)].add(1, mode="drop")
-
-        return EngineState(
-            pool_row=pool_row, pool_val=pool_val, col_fill=col_fill,
-            dep=dep, elim=elim, D=D,
-            n_elim=s.n_elim + jnp.sum(cand_ok).astype(jnp.int32),
-            n_rounds=s.n_rounds + 1, overflow=overflow)
-
-    return jax.lax.while_loop(cond, body, state)
+    return jax.vmap(one)(pool_row, pool_val, col_fill, dep, col_base, cap,
+                         elim0, keys)
 
 
 @jax.jit
@@ -196,6 +277,35 @@ def _cumcount(keys: np.ndarray, n: int) -> np.ndarray:
     return rank
 
 
+def _finalize_factor(g: Graph, final: EngineState, col_base: jnp.ndarray,
+                     *, n_phantom: int = 0, stats: dict) -> ACFactor:
+    """Compact the engine pool on device and wrap it as an ``ACFactor``.
+
+    Shared by the single-graph and batched paths; in the padded batched
+    case ``final`` carries ``n_phantom`` pre-eliminated phantom vertices
+    whose columns are empty — everything past position ``g.n`` is sliced
+    away (phantom writes land at pool offsets ≥ nnz, never below).
+    """
+    n = g.n
+    eliminated = int(final.n_elim) - n_phantom
+    if eliminated != n:
+        raise RuntimeError(
+            f"engine stalled: {eliminated}/{n} eliminated "
+            f"(overflow={int(final.overflow)})")
+    rows_c, vals_c, col_ptr_d = _compact_pool(
+        final.pool_row, final.pool_val, final.col_fill, col_base)
+    nnz = int(col_ptr_d[n])
+    col_ptr_g = jax.lax.slice(col_ptr_d, (0,), (n + 1,))
+    rows_dev = jax.lax.slice(rows_c, (0,), (nnz,))
+    vals_dev = jax.lax.slice(vals_c, (0,), (nnz,))
+    D_dev = jax.lax.slice(final.D, (0,), (n,))
+    dev = DeviceFactor(col_ptr=col_ptr_g, rows=rows_dev, vals=vals_dev,
+                       D=D_dev)
+    return ACFactor(n=n, col_ptr=np.asarray(col_ptr_g).astype(np.int64),
+                    rows=np.asarray(rows_dev), vals=np.asarray(vals_dev),
+                    D=np.asarray(D_dev), stats=stats, device=dev)
+
+
 def factorize_wavefront(g: Graph, key: jax.Array, *, chunk: int = 64,
                         fill_slack: int = 32, strict: bool = True,
                         max_retries: int = 3,
@@ -215,23 +325,105 @@ def factorize_wavefront(g: Graph, key: jax.Array, *, chunk: int = 64,
         if ovf == 0 or not strict or attempt == max_retries:
             break
         slack *= 2
-    if int(final.n_elim) != n:
-        raise RuntimeError(
-            f"engine stalled: {int(final.n_elim)}/{n} eliminated "
-            f"(overflow={ovf})")
-
-    # device-side compaction: no per-column host loop; the factor stays
-    # resident on device (DeviceFactor) for the trisolve schedule builder.
-    rows_c, vals_c, col_ptr_d = _compact_pool(
-        final.pool_row, final.pool_val, final.col_fill,
-        jnp.asarray(col_base))
-    nnz = int(col_ptr_d[-1])
-    rows_dev = jax.lax.slice(rows_c, (0,), (nnz,))
-    vals_dev = jax.lax.slice(vals_c, (0,), (nnz,))
-    dev = DeviceFactor(col_ptr=col_ptr_d, rows=rows_dev, vals=vals_dev,
-                       D=final.D)
     stats = dict(rounds=int(final.n_rounds), overflow=ovf,
                  chunk=chunk, fill_slack=slack, pool_size=P, dmax=dmax)
-    return ACFactor(n=n, col_ptr=np.asarray(col_ptr_d).astype(np.int64),
-                    rows=np.asarray(rows_dev), vals=np.asarray(vals_dev),
-                    D=np.asarray(final.D), stats=stats, device=dev)
+    return _finalize_factor(g, final, jnp.asarray(col_base), stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Batched fleet factorization
+# ---------------------------------------------------------------------------
+
+def _next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+def _pad_np(x: np.ndarray, size: int, fill) -> np.ndarray:
+    if x.shape[0] == size:
+        return x
+    return np.concatenate([x, np.full(size - x.shape[0], fill, x.dtype)])
+
+
+def factorize_batched(gs: Sequence[Graph], keys, *, chunk: int = 64,
+                      fill_slack: int = 32, strict: bool = True,
+                      max_retries: int = 3, dtype=np.float32,
+                      bucket: bool = True) -> List[ACFactor]:
+    """Factor a fleet of Laplacians concurrently in one XLA program.
+
+    Pools are padded to a common shape bucket (powers of two when
+    ``bucket`` — bounds jit recompiles across fleets) and the wavefront
+    ``while_loop`` runs under ``vmap``.  Padding never changes a factor:
+    phantom vertices start eliminated, phantom pool slots belong to
+    zero-capacity columns, and the per-column math is padding-width
+    independent (``column_math``), so each returned ``ACFactor`` is
+    bit-identical to ``factorize_wavefront(g, key, ...)``.
+
+    Overflow is handled per graph: converged graphs keep their factor
+    while the overflowing subset re-runs at doubled slack (masked
+    re-runs), mirroring the single-graph strict retry loop.
+    """
+    gs = list(gs)
+    B = len(gs)
+    if not isinstance(keys, jax.Array):
+        keys = jnp.stack(list(keys))
+    if keys.shape[0] != B:
+        raise ValueError(f"got {B} graphs but {keys.shape[0]} keys")
+    if B == 0:
+        return []
+
+    slacks = [fill_slack] * B
+    results: List[Optional[ACFactor]] = [None] * B
+    pending = list(range(B))
+    for attempt in range(max_retries + 1):
+        built = {i: _build_pool(gs[i], slacks[i], dtype) for i in pending}
+        n_pad = max(max(gs[i].n for i in pending), 1)
+        P_pad = max(max(built[i][6] for i in pending), 1)
+        dmax_pad = max(built[i][7] for i in pending)
+        if bucket:
+            n_pad = _next_pow2(n_pad)
+            P_pad = _next_pow2(P_pad)
+            dmax_pad = _next_pow2(dmax_pad)
+        chunk_eff = min(chunk, n_pad)
+
+        PR, PV, CF, DP, CB, CP, E0 = [], [], [], [], [], [], []
+        for i in pending:
+            pool_row, pool_val, fill, dep, col_base, cap, P, _ = built[i]
+            n = gs[i].n
+            PR.append(_pad_np(pool_row, P_pad, INVALID_ID))
+            PV.append(_pad_np(pool_val, P_pad, 0))
+            CF.append(_pad_np(fill, n_pad, 0))
+            DP.append(_pad_np(dep, n_pad, 0))
+            CB.append(_pad_np(col_base, n_pad + 1, col_base[-1]))
+            CP.append(_pad_np(cap, n_pad, 0))
+            elim0 = np.zeros(n_pad, bool)
+            elim0[n:] = True
+            E0.append(elim0)
+        out = _run_engine_batched(
+            jnp.asarray(np.stack(PR)), jnp.asarray(np.stack(PV)),
+            jnp.asarray(np.stack(CF)), jnp.asarray(np.stack(DP)),
+            jnp.asarray(np.stack(CB)), jnp.asarray(np.stack(CP)),
+            jnp.asarray(np.stack(E0)),
+            jnp.stack([keys[i] for i in pending]),
+            dmax=dmax_pad, chunk=chunk_eff)
+
+        retry = []
+        for bi, i in enumerate(pending):
+            final_i = jax.tree_util.tree_map(lambda x, bi=bi: x[bi], out)
+            ovf = int(final_i.overflow)
+            if ovf == 0 or not strict or attempt == max_retries:
+                stats = dict(rounds=int(final_i.n_rounds), overflow=ovf,
+                             chunk=chunk, fill_slack=slacks[i],
+                             pool_size=int(built[i][6]),
+                             dmax=int(built[i][7]), batched=True,
+                             batch_size=len(pending), n_pad=n_pad,
+                             P_pad=P_pad, dmax_pad=dmax_pad)
+                results[i] = _finalize_factor(
+                    gs[i], final_i, jnp.asarray(CB[bi]),
+                    n_phantom=n_pad - gs[i].n, stats=stats)
+            else:
+                slacks[i] *= 2
+                retry.append(i)
+        pending = retry
+        if not pending:
+            break
+    return results

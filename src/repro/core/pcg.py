@@ -24,6 +24,24 @@ class PCGResult(NamedTuple):
     converged: jnp.ndarray
 
 
+class PCGBatchState(NamedTuple):
+    """Carry of the batched PCG loop — exposed so a serving engine can
+    drive solves incrementally (``pcg_batched_init`` → repeated
+    ``pcg_batched_step``) instead of one closed ``while_loop``.  Lanes
+    are independent (frozen-column masking), so a lane's trajectory does
+    not depend on which other lanes share the batch or on how the
+    iterations are sliced into steps."""
+
+    X: jnp.ndarray        # (nrhs, n) iterate
+    R: jnp.ndarray        # (nrhs, n) residual
+    Z: jnp.ndarray        # (nrhs, n) preconditioned residual
+    P: jnp.ndarray        # (nrhs, n) search direction
+    rz: jnp.ndarray       # (nrhs,)
+    it: jnp.ndarray       # int32 (nrhs,)
+    active: jnp.ndarray   # bool  (nrhs,)
+    bnorm: jnp.ndarray    # (nrhs,) — rhs norms (1.0 for zero rhs)
+
+
 def pcg_jax(matvec: Callable, precond: Callable, b: jnp.ndarray, *,
             tol: float = 1e-6, maxiter: int = 1000,
             project: bool = True) -> PCGResult:
@@ -65,41 +83,41 @@ def pcg_jax(matvec: Callable, precond: Callable, b: jnp.ndarray, *,
     return PCGResult(x=x, iters=it, relres=relres, converged=relres <= tol)
 
 
-def pcg_jax_batched(matvec: Callable, precond: Callable, B: jnp.ndarray, *,
-                    tol: float = 1e-6, maxiter: int = 1000,
-                    project: bool = True) -> PCGResult:
-    """Batched multi-RHS PCG: one ``while_loop`` drives every column of
-    ``B`` (shape ``(nrhs, n)``) against the same operator/preconditioner.
-
-    ``matvec``/``precond`` take and return ``(nrhs, n)`` blocks (vmap a
-    single-vector closure, or pass a block closure that fuses the rhs
-    axis, e.g. the multi-rhs ELL trisolve).  Converged columns are frozen
-    by an active mask, so each column takes exactly the iterates of its
-    independent single-rhs solve — results match ``pcg_jax`` per column
-    instead of drifting while slow columns finish.
-    """
+def pcg_batched_init(matvec: Callable, precond: Callable, B: jnp.ndarray, *,
+                     tol=1e-6, project: bool = True) -> PCGBatchState:
+    """Set up the batched PCG carry for ``B`` of shape ``(nrhs, n)``.
+    ``tol`` may be a scalar or a per-lane ``(nrhs,)`` array (mixed-tol
+    continuous batching)."""
     if project:
         B = B - jnp.mean(B, axis=1, keepdims=True)
     bnorm = jnp.linalg.norm(B, axis=1)
     bnorm = jnp.where(bnorm > 0, bnorm, 1.0)
     nrhs = B.shape[0]
 
+    R0 = B
+    Z0 = precond(R0)
+    if project:
+        Z0 = Z0 - jnp.mean(Z0, axis=1, keepdims=True)
+    rz0 = jnp.sum(R0 * Z0, axis=1)
+    act0 = (jnp.linalg.norm(B, axis=1) / bnorm) > tol
+    return PCGBatchState(X=jnp.zeros_like(B), R=R0, Z=Z0, P=Z0, rz=rz0,
+                         it=jnp.zeros(nrhs, jnp.int32), active=act0,
+                         bnorm=bnorm)
+
+
+def _pcg_batched_body(matvec: Callable, precond: Callable, *, tol, maxiter,
+                      project: bool):
+    """One frozen-column batched PCG iteration as a pure
+    ``PCGBatchState -> PCGBatchState`` closure — shared by the one-shot
+    ``pcg_jax_batched`` loop and the serving engine's incremental
+    ``pcg_batched_step``.  ``tol``/``maxiter`` may be scalars or per-lane
+    arrays."""
     def _proj(Z):
         return Z - jnp.mean(Z, axis=1, keepdims=True) if project else Z
 
-    X0 = jnp.zeros_like(B)
-    R0 = B
-    Z0 = _proj(precond(R0))
-    P0 = Z0
-    rz0 = jnp.sum(R0 * Z0, axis=1)
-    act0 = (jnp.linalg.norm(B, axis=1) / bnorm) > tol
-    it0 = jnp.zeros(nrhs, jnp.int32)
-
-    def cond(c):
-        return jnp.any(c[6])
-
-    def body(c):
-        X, R, Z, P, rz, it, active = c
+    def body(s: PCGBatchState) -> PCGBatchState:
+        X, R, Z, P, rz, it, active = (s.X, s.R, s.Z, s.P, s.rz, s.it,
+                                      s.active)
         AP = matvec(P)
         pAp = jnp.sum(P * AP, axis=1)
         alpha = jnp.where(active, rz / jnp.where(pAp != 0, pAp, 1.0), 0.0)
@@ -116,14 +134,61 @@ def pcg_jax_batched(matvec: Callable, precond: Callable, B: jnp.ndarray, *,
         P = jnp.where(m, Pn, P)
         rz = jnp.where(active, rz_new, rz)
         it = it + active.astype(jnp.int32)
-        relres = jnp.linalg.norm(R, axis=1) / bnorm
+        relres = jnp.linalg.norm(R, axis=1) / s.bnorm
         active = active & (relres > tol) & (it < maxiter)
-        return (X, R, Z, P, rz, it, active)
+        return PCGBatchState(X=X, R=R, Z=Z, P=P, rz=rz, it=it,
+                             active=active, bnorm=s.bnorm)
 
-    X, R, Z, P, rz, it, active = jax.lax.while_loop(
-        cond, body, (X0, R0, Z0, P0, rz0, it0, act0))
-    relres = jnp.linalg.norm(R, axis=1) / bnorm
-    return PCGResult(x=X, iters=it, relres=relres, converged=relres <= tol)
+    return body
+
+
+def pcg_batched_step(matvec: Callable, precond: Callable,
+                     state: PCGBatchState, *, k: int, tol, maxiter,
+                     project: bool = True) -> PCGBatchState:
+    """Advance every active lane by up to ``k`` PCG iterations (early
+    exit when all lanes freeze).  Slicing a solve into steps is exact:
+    step-k-then-continue takes the same per-lane iterates as one closed
+    loop."""
+    body = _pcg_batched_body(matvec, precond, tol=tol, maxiter=maxiter,
+                             project=project)
+
+    def cond(c):
+        s, j = c
+        return jnp.any(s.active) & (j < k)
+
+    def stepped(c):
+        s, j = c
+        return body(s), j + 1
+
+    state, _ = jax.lax.while_loop(cond, stepped, (state, jnp.int32(0)))
+    return state
+
+
+def pcg_batched_result(state: PCGBatchState, tol) -> PCGResult:
+    """Read a ``PCGResult`` off the current carry."""
+    relres = jnp.linalg.norm(state.R, axis=1) / state.bnorm
+    return PCGResult(x=state.X, iters=state.it, relres=relres,
+                     converged=relres <= tol)
+
+
+def pcg_jax_batched(matvec: Callable, precond: Callable, B: jnp.ndarray, *,
+                    tol: float = 1e-6, maxiter: int = 1000,
+                    project: bool = True) -> PCGResult:
+    """Batched multi-RHS PCG: one ``while_loop`` drives every column of
+    ``B`` (shape ``(nrhs, n)``) against the same operator/preconditioner.
+
+    ``matvec``/``precond`` take and return ``(nrhs, n)`` blocks (vmap a
+    single-vector closure, or pass a block closure that fuses the rhs
+    axis, e.g. the multi-rhs ELL trisolve).  Converged columns are frozen
+    by an active mask, so each column takes exactly the iterates of its
+    independent single-rhs solve — results match ``pcg_jax`` per column
+    instead of drifting while slow columns finish.
+    """
+    state = pcg_batched_init(matvec, precond, B, tol=tol, project=project)
+    body = _pcg_batched_body(matvec, precond, tol=tol, maxiter=maxiter,
+                             project=project)
+    state = jax.lax.while_loop(lambda s: jnp.any(s.active), body, state)
+    return pcg_batched_result(state, tol)
 
 
 def pcg_np(matvec: Callable, precond: Callable, b: np.ndarray, *,

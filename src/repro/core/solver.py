@@ -1,27 +1,34 @@
-"""``Solver`` — the device-resident factor→solve pipeline as an API.
+"""``FactorCache`` / ``Solver`` — the device-resident factor→solve
+pipeline as a multi-tenant API.
 
 The paper's production shape is *factor once, serve many solves*: the
 randomized construction is cheap (little pre-processing, §4) and the
 short-critical-path factor (§6.2) then amortizes over every rhs that
-arrives.  ``Solver`` packages that lifecycle:
+arrives.  A service amortizes further by keeping **many** live factors:
 
-    solver = Solver(chunk=256, fill_slack=32)
-    handle = solver.factor(graph, jax.random.key(0))   # device-resident
-    res = solver.solve(b)            # single rhs, jitted PCG
-    res = solver.solve(B)            # (nrhs, n) block → batched PCG
+    cache = FactorCache(memory_budget_bytes=1 << 28)
+    gid = cache.factor(graph, jax.random.key(0)).graph_id
+    res = cache.solve(gid, b)        # route by graph id
+    res = cache.solve(gid, B)        # (nrhs, n) block → batched PCG
 
 ``factor`` runs the wavefront engine, compacts the factor on device and
-derives both triangular level schedules on device (``trisolve.
-build_schedules_device``) — the handle caches the jitted preconditioner
-and one jitted PCG per rhs-batch shape, so repeated solves against the
-same factor pay zero rebuild cost.  Batched solves share the factor
-through a fused multi-rhs trisolve (one gather-multiply-reduce per level
-for the whole block), not nrhs sequential applies.
+derives both triangular level schedules on device; the resulting
+:class:`FactorHandle` caches the jitted preconditioner and one jitted
+PCG per rhs-batch shape (bounded LRU), so repeated solves against the
+same factor pay zero rebuild cost.  The cache itself is an LRU keyed by
+a content fingerprint of ``(graph, key)`` and evicts whole handles when
+the device-memory budget is exceeded.  ``factor_batched`` admits a fleet
+in one vmapped XLA program (``parac.factorize_batched``).
+
+``Solver`` keeps the original single-tenant surface (``factor`` then
+``solve(B)`` against the most recent handle) as a thin subclass.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -29,17 +36,31 @@ import jax.numpy as jnp
 
 from .laplacian import Graph, laplacian_matvec
 from .ref_ac import ACFactor
-from .parac import factorize_wavefront
+from .parac import factorize_wavefront, factorize_batched
 from .trisolve import (DeviceSchedule, build_schedules_device,
                        make_preconditioner_from_schedules)
 from .pcg import PCGResult, pcg_jax, pcg_jax_batched
+
+
+def graph_fingerprint(g: Graph, key: Optional[jax.Array] = None) -> str:
+    """Content hash of a graph (and optionally the factorization key) —
+    the cache identity of a factor.  Two structurally identical systems
+    share a fingerprint, so resubmitting a known graph is a cache hit."""
+    h = hashlib.blake2b(digest_size=12)
+    h.update(np.int64(g.n).tobytes())
+    h.update(np.ascontiguousarray(g.src).tobytes())
+    h.update(np.ascontiguousarray(g.dst).tobytes())
+    h.update(np.ascontiguousarray(g.w).tobytes())
+    if key is not None:
+        h.update(np.ascontiguousarray(jax.random.key_data(key)).tobytes())
+    return h.hexdigest()
 
 
 @dataclasses.dataclass
 class FactorHandle:
     """A factored graph ready to serve solves.  Everything needed on the
     hot path (schedules, D⁻¹, edge arrays) is device-resident; jitted
-    solve closures are cached per rhs-batch shape."""
+    solve closures are cached per rhs-batch shape in a bounded LRU."""
 
     graph: Graph
     factor: ACFactor
@@ -49,11 +70,26 @@ class FactorHandle:
     _src: jnp.ndarray
     _dst: jnp.ndarray
     _w: jnp.ndarray
-    _cache: Dict[Tuple, callable] = dataclasses.field(default_factory=dict)
+    graph_id: str = ""
+    max_cached_solves: int = 16
+    _cache: "OrderedDict[Tuple, callable]" = dataclasses.field(
+        default_factory=OrderedDict)
 
     @property
     def n(self) -> int:
         return self.graph.n
+
+    @property
+    def device_bytes(self) -> int:
+        """Device-memory footprint of the handle's resident arrays
+        (factor CSC + both ELL schedules + operator edge lists) — what
+        the :class:`FactorCache` budget accounts."""
+        dev = self.factor.to_device()
+        arrays = [dev.col_ptr, dev.rows, dev.vals, dev.D,
+                  self._src, self._dst, self._w]
+        for sched in (self.fwd, self.bwd):
+            arrays += [sched.row_ids, sched.cols, sched.vals, sched.level_of]
+        return int(sum(a.nbytes for a in arrays))
 
     def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
         return laplacian_matvec(self._src, self._dst, self._w, self.n, x)
@@ -72,6 +108,10 @@ class FactorHandle:
         if fn is None:
             fn = jax.jit(self._build_solve(B.ndim, tol, maxiter, project))
             self._cache[key] = fn
+            while len(self._cache) > self.max_cached_solves:
+                self._cache.popitem(last=False)
+        else:
+            self._cache.move_to_end(key)
         return fn(B)
 
     def _build_solve(self, ndim: int, tol: float, maxiter: int,
@@ -92,41 +132,177 @@ class FactorHandle:
                                          maxiter=maxiter, project=project)
 
 
-class Solver:
-    """Factor-once / solve-many frontend over the wavefront engine.
+class FactorCache:
+    """Multi-tenant factor-once / solve-many frontend.
 
-    Construction options are fixed per ``Solver``; each ``factor`` call
-    produces (and remembers) a :class:`FactorHandle`, and ``solve``
-    forwards to the most recent one.
+    Construction options are fixed per cache.  ``factor`` (or
+    ``factor_batched`` / ``attach``) admits handles keyed by graph
+    fingerprint; ``solve(graph_id, B)`` routes a rhs to its factor.
+    Admission evicts least-recently-used handles while the summed
+    ``device_bytes`` exceeds ``memory_budget_bytes`` (or the handle
+    count exceeds ``max_handles``) — the newest handle is never evicted.
     """
 
     def __init__(self, *, chunk: int = 64, fill_slack: int = 32,
                  strict: bool = True, max_retries: int = 3,
-                 dtype=np.float32):
+                 dtype=np.float32,
+                 memory_budget_bytes: Optional[int] = None,
+                 max_handles: Optional[int] = None,
+                 max_cached_solves: int = 16):
         self.chunk = chunk
         self.fill_slack = fill_slack
         self.strict = strict
         self.max_retries = max_retries
         self.dtype = dtype
-        self.handle: Optional[FactorHandle] = None
+        self.memory_budget_bytes = memory_budget_bytes
+        self.max_handles = max_handles
+        self.max_cached_solves = max_cached_solves
+        self._handles: "OrderedDict[str, FactorHandle]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
 
-    def factor(self, g: Graph, key: jax.Array) -> FactorHandle:
+    # -- admission ----------------------------------------------------------
+    def factor(self, g: Graph, key: jax.Array, *,
+               graph_id: Optional[str] = None) -> FactorHandle:
+        """Factor ``g`` (cache hit if an identical ``(graph, key)`` is
+        already live) and admit the handle."""
+        gid = graph_id if graph_id is not None else graph_fingerprint(g, key)
+        got = self._handles.get(gid)
+        if got is not None:
+            self.hits += 1
+            self._handles.move_to_end(gid)
+            return got
+        self.misses += 1
         f = factorize_wavefront(
             g, key, chunk=self.chunk, fill_slack=self.fill_slack,
             strict=self.strict, max_retries=self.max_retries,
             dtype=self.dtype)
-        return self.attach(g, f)
+        return self.attach(g, f, graph_id=gid)
 
-    def attach(self, g: Graph, f: ACFactor) -> FactorHandle:
+    def factor_batched(self, gs: Sequence[Graph], keys, *,
+                       graph_ids: Optional[Sequence[str]] = None
+                       ) -> List[FactorHandle]:
+        """Admit a fleet: graphs not already cached factor together in
+        one vmapped XLA program (``parac.factorize_batched``)."""
+        gs = list(gs)
+        if not isinstance(keys, jax.Array):
+            keys = jnp.stack(list(keys))
+        gids = list(graph_ids) if graph_ids is not None else [
+            graph_fingerprint(g, keys[i]) for i, g in enumerate(gs)]
+        todo = [i for i, gid in enumerate(gids) if gid not in self._handles]
+        self.hits += len(gs) - len(todo)
+        self.misses += len(todo)
+        # strong refs for the whole call: a tight budget may LRU-evict a
+        # sibling of this very fleet mid-admission — the caller still gets
+        # every handle back (evicted ones simply aren't cached any more).
+        fleet = {gid: self._handles[gid] for gid in gids
+                 if gid in self._handles}
+        if todo:
+            fs = factorize_batched(
+                [gs[i] for i in todo], jnp.stack([keys[i] for i in todo]),
+                chunk=self.chunk, fill_slack=self.fill_slack,
+                strict=self.strict, max_retries=self.max_retries,
+                dtype=self.dtype)
+            for i, f in zip(todo, fs):
+                fleet[gids[i]] = self.attach(gs[i], f, graph_id=gids[i])
+        for gid in gids:
+            if gid in self._handles:
+                self._handles.move_to_end(gid)
+        return [fleet[gid] for gid in gids]
+
+    def attach(self, g: Graph, f: ACFactor, *,
+               graph_id: Optional[str] = None) -> FactorHandle:
         """Wrap an existing factor (e.g. from the sequential oracle) in a
         solve handle — same lifecycle, no re-factorization."""
+        gid = graph_id if graph_id is not None else graph_fingerprint(g)
         fwd, bwd = build_schedules_device(f)
-        self.handle = FactorHandle(
+        handle = FactorHandle(
             graph=g, factor=f, fwd=fwd, bwd=bwd,
             precondition=make_preconditioner_from_schedules(
                 fwd, bwd, f.to_device().D),
             _src=jnp.asarray(g.src), _dst=jnp.asarray(g.dst),
-            _w=jnp.asarray(g.w, dtype=jnp.asarray(f.vals).dtype))
+            _w=jnp.asarray(g.w, dtype=jnp.asarray(f.vals).dtype),
+            graph_id=gid, max_cached_solves=self.max_cached_solves)
+        self._handles[gid] = handle
+        self._handles.move_to_end(gid)
+        self._shrink()
+        return handle
+
+    def _shrink(self):
+        """Evict LRU handles until budget/count bounds hold (the newest
+        handle always survives)."""
+        while len(self._handles) > 1 and (
+                (self.max_handles is not None
+                 and len(self._handles) > self.max_handles)
+                or (self.memory_budget_bytes is not None
+                    and self.device_bytes > self.memory_budget_bytes)):
+            self._handles.popitem(last=False)
+            self.evictions += 1
+
+    # -- lookup / routing ---------------------------------------------------
+    def peek(self, graph_id: str) -> Optional[FactorHandle]:
+        """Non-faulting lookup that does not touch LRU order (lets a
+        serving engine check whether its pinned handle is still the
+        cached one)."""
+        return self._handles.get(graph_id)
+
+    def get(self, graph_id: str) -> FactorHandle:
+        handle = self._handles.get(graph_id)
+        if handle is None:
+            raise KeyError(f"no live factor for graph_id={graph_id!r} "
+                           f"({len(self._handles)} cached)")
+        self._handles.move_to_end(graph_id)
+        return handle
+
+    def __contains__(self, graph_id: str) -> bool:
+        return graph_id in self._handles
+
+    def __len__(self) -> int:
+        return len(self._handles)
+
+    @property
+    def graph_ids(self) -> List[str]:
+        return list(self._handles)
+
+    @property
+    def device_bytes(self) -> int:
+        return sum(h.device_bytes for h in self._handles.values())
+
+    def evict(self, graph_id: str) -> None:
+        if self._handles.pop(graph_id, None) is not None:
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._handles.clear()
+
+    def stats(self) -> Dict[str, int]:
+        return dict(handles=len(self._handles), hits=self.hits,
+                    misses=self.misses, evictions=self.evictions,
+                    device_bytes=self.device_bytes)
+
+    def solve(self, graph_id: str, B, **kw) -> PCGResult:
+        return self.get(graph_id).solve(B, **kw)
+
+
+class Solver(FactorCache):
+    """Single-tenant compatibility surface over :class:`FactorCache`:
+    ``factor``/``attach`` remember the most recent handle and ``solve``
+    takes just the rhs.  Defaults to ``max_handles=1`` so factoring a
+    sweep of graphs through one ``Solver`` keeps O(1) device memory,
+    exactly like the pre-cache ``Solver`` did."""
+
+    def __init__(self, **kw):
+        kw.setdefault("max_handles", 1)
+        super().__init__(**kw)
+        self.handle: Optional[FactorHandle] = None
+
+    def factor(self, g: Graph, key: jax.Array, **kw) -> FactorHandle:
+        self.handle = super().factor(g, key, **kw)
+        return self.handle
+
+    def attach(self, g: Graph, f: ACFactor, **kw) -> FactorHandle:
+        self.handle = super().attach(g, f, **kw)
         return self.handle
 
     def solve(self, B, **kw) -> PCGResult:

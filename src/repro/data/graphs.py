@@ -121,6 +121,13 @@ def random_regular(n: int, d: int = 4, seed: int = 0) -> Graph:
                  e.max(axis=1).astype(np.int32), w).coalesce()
 
 
+SUITE_TINY = {
+    # sub-second graphs for CI smoke jobs and service traces
+    "grid2d_tiny": lambda: grid2d(12, 12, seed=3),
+    "powerlaw_tiny": lambda: powerlaw(300, 5, seed=3),
+    "road_tiny": lambda: road_like(10, seed=4),
+}
+
 SUITE = {
     "grid2d_64": lambda: grid2d(64, 64, seed=1),
     "grid3d_uniform_16": lambda: grid3d(16, 16, 16, "uniform", seed=2),

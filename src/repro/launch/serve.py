@@ -1,59 +1,166 @@
-"""Serving launcher: continuous-batching engine over a smoke-size model.
+"""Solve-service launcher: multi-tenant continuous-batching engine over
+a generated graph suite, replaying a mixed request trace.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b \
-        --requests 8 --slots 4 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --suite tiny \
+        --requests 24 --slots 8 --iters-per-tick 8
+
+Spins up a :class:`FactorCache` (batched fleet factorization), submits a
+seeded trace of interleaved single- and multi-RHS requests with mixed
+tolerances, drains the :class:`SolveEngine`, and reports throughput and
+latency percentiles — the service-level view of the paper's
+factor-once / serve-many economics.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+
+
+# suite names resolved against the canonical registry in repro.data.graphs
+# (no local re-definitions: one source of truth for generator params/seeds)
+SMALL_NAMES = ("grid2d_64", "grid3d_uniform_16", "powerlaw_4k")
+
+
+def percentile(xs, q):
+    import numpy as np
+    return float(np.percentile(np.asarray(xs, float), q)) if len(xs) else 0.0
+
+
+def make_trace(gids, sizes, n_requests, *, seed=0, max_nrhs=4,
+               tols=(1e-4, 1e-6)):
+    """Seeded mixed trace: round-robin-ish graph choice, ~1/3 multi-RHS,
+    alternating tolerances — deliberately interleaved so consecutive
+    requests rarely share a factor."""
+    import numpy as np
+    from repro.serve import SolveRequest
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n_requests):
+        gid = gids[rid % len(gids)]
+        n = sizes[gid]
+        nrhs = int(rng.integers(2, max_nrhs + 1)) \
+            if (max_nrhs > 1 and rid % 3 == 2) else 1
+        b = rng.normal(size=(nrhs, n) if nrhs > 1 else n).astype(np.float32)
+        b -= b.mean(axis=-1, keepdims=True)
+        reqs.append(SolveRequest(rid=rid, graph_id=gid, b=b,
+                                 tol=tols[rid % len(tols)], maxiter=500))
+    return reqs
+
+
+def build_service(*, suite="tiny", slots=8, iters_per_tick=8, chunk=128,
+                  fill_slack=32, memory_budget_mb=None):
+    """Stand up the service: generate the graph suite, admit the fleet
+    to a :class:`FactorCache` in one batched factorization, wrap it in a
+    :class:`SolveEngine`.  Returns ``(engine, sizes, factor_s)`` — reuse
+    the engine across trace replays so jitted step programs amortize."""
+    import jax
+    from repro.data import graphs
+    from repro.core.solver import FactorCache
+    from repro.serve import SolveEngine
+
+    spec = graphs.SUITE_TINY if suite == "tiny" else \
+        {k: graphs.SUITE[k] for k in SMALL_NAMES}
+    built = {name: make() for name, make in spec.items()}
+    cache = FactorCache(
+        chunk=chunk, fill_slack=fill_slack, strict=False,
+        memory_budget_bytes=(memory_budget_mb * (1 << 20)
+                             if memory_budget_mb else None))
+    t0 = time.perf_counter()
+    cache.factor_batched(list(built.values()),
+                         [jax.random.key(i) for i in range(len(built))],
+                         graph_ids=list(built.keys()))
+    t_factor = time.perf_counter() - t0
+    eng = SolveEngine(cache, slots=slots, iters_per_tick=iters_per_tick)
+    return eng, {name: g.n for name, g in built.items()}, t_factor
+
+
+def replay_trace(eng, trace):
+    """Submit a trace, drain the engine, return service metrics."""
+    import numpy as np
+    t0 = time.perf_counter()
+    for r in trace:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    t_serve = time.perf_counter() - t0
+    lat = [r.latency_s for r in done]
+    rhs_total = sum(r.nrhs for r in done)
+    return dict(
+        requests=len(trace), completed=len(done), rhs_total=rhs_total,
+        converged=int(sum(bool(r.converged) for r in done)),
+        serve_s=t_serve,
+        requests_per_s=len(done) / t_serve if t_serve > 0 else 0.0,
+        rhs_per_s=rhs_total / t_serve if t_serve > 0 else 0.0,
+        latency_p50_s=percentile(lat, 50),
+        latency_p95_s=percentile(lat, 95),
+        latency_max_s=percentile(lat, 100),
+        iters_total=int(sum(int(np.sum(r.iters)) for r in done))), done
+
+
+def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
+                max_nrhs=4, chunk=128, fill_slack=32, seed=0,
+                memory_budget_mb=None, warmup_requests=0):
+    """Build the service, replay a trace, return a metrics dict.  With
+    ``warmup_requests`` > 0 a throwaway trace is replayed first through
+    the *same* engine so the measured replay excludes jit compiles."""
+    eng, sizes, t_factor = build_service(
+        suite=suite, slots=slots, iters_per_tick=iters_per_tick,
+        chunk=chunk, fill_slack=fill_slack,
+        memory_budget_mb=memory_budget_mb)
+    gids = list(sizes)
+    if warmup_requests:
+        # same seed: the warmup trace is a prefix-identical replay, so
+        # every (graph, nrhs) init shape and group step shape of the
+        # measured trace is already compiled
+        replay_trace(eng, make_trace(gids, sizes, warmup_requests,
+                                     seed=seed,
+                                     max_nrhs=min(max_nrhs, slots)))
+    trace = make_trace(gids, sizes, requests, seed=seed,
+                       max_nrhs=min(max_nrhs, slots))
+    ticks_before = eng.ticks                 # exclude warmup from metrics
+    metrics, done = replay_trace(eng, trace)
+    metrics = dict(suite=suite, graphs=len(gids), slots=slots,
+                   iters_per_tick=iters_per_tick, factor_s=t_factor,
+                   ticks=eng.ticks - ticks_before, cache=eng.cache.stats(),
+                   **metrics)
+    return metrics, done
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-14b")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--suite", default="tiny", choices=["tiny", "small"])
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--iters-per-tick", type=int, default=8)
+    ap.add_argument("--max-nrhs", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--memory-budget-mb", type=int, default=None)
+    ap.add_argument("--json", default=None,
+                    help="write service metrics to this JSON file")
     args = ap.parse_args()
 
-    import numpy as np
-    import jax
-    import jax.numpy as jnp
-    from repro.configs import get_smoke_config
-    from repro.models import transformer as tf
-    from repro.models.common import init_params
-    from repro.serve import ServeEngine, Request
+    metrics, done = run_service(
+        suite=args.suite, requests=args.requests, slots=args.slots,
+        iters_per_tick=args.iters_per_tick, max_nrhs=args.max_nrhs,
+        chunk=args.chunk, seed=args.seed,
+        memory_budget_mb=args.memory_budget_mb)
 
-    cfg = get_smoke_config(args.arch)
-    if cfg.is_encoder_decoder:
-        raise SystemExit("use examples/ for enc-dec serving")
-    params = init_params(tf.pdefs(cfg), jax.random.key(0), jnp.float32)
-    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
-    rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(1, cfg.vocab, args.prompt_len,
-                                        dtype=np.int32),
-                    max_new_tokens=args.max_new,
-                    temperature=args.temperature)
-            for i in range(args.requests)]
-    t0 = time.time()
-    for r in reqs:
-        eng.submit(r)
-    ticks = 0
-    while (not eng.queue.empty()) or any(a is not None for a in eng.active):
-        eng.tick()
-        ticks += 1
-        if ticks > 10_000:
-            break
-    dt = time.time() - t0
-    tok = sum(len(r.out_tokens or []) for r in reqs)
-    print(f"arch={cfg.name} served {len(reqs)} requests, {tok} tokens in "
-          f"{dt:.2f}s ({tok/dt:.1f} tok/s incl. compile) over "
-          f"{args.slots} slots, {ticks} ticks")
+    print(f"suite={metrics['suite']} graphs={metrics['graphs']} "
+          f"factor_batched={metrics['factor_s']:.2f}s")
+    print(f"served {metrics['completed']}/{metrics['requests']} requests "
+          f"({metrics['rhs_total']} rhs, {metrics['converged']} converged) "
+          f"in {metrics['serve_s']:.2f}s over {metrics['slots']} slots, "
+          f"{metrics['ticks']} ticks")
+    print(f"throughput: {metrics['requests_per_s']:.1f} req/s "
+          f"({metrics['rhs_per_s']:.1f} rhs/s incl. compile)  "
+          f"latency p50={metrics['latency_p50_s']*1e3:.0f}ms "
+          f"p95={metrics['latency_p95_s']*1e3:.0f}ms "
+          f"max={metrics['latency_max_s']*1e3:.0f}ms")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(metrics, fh, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

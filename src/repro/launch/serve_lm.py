@@ -1,0 +1,62 @@
+"""LM serving launcher: continuous-batching token engine over a
+smoke-size model (the seed's original serving workload, kept as a
+substrate exercise — the production service is ``repro.launch.serve``).
+
+    PYTHONPATH=src python -m repro.launch.serve_lm --arch qwen3-14b \
+        --requests 8 --slots 4 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tf
+    from repro.models.common import init_params
+    from repro.serve import ServeEngine, Request
+
+    cfg = get_smoke_config(args.arch)
+    if cfg.is_encoder_decoder:
+        raise SystemExit("use examples/ for enc-dec serving")
+    params = init_params(tf.pdefs(cfg), jax.random.key(0), jnp.float32)
+    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab, args.prompt_len,
+                                        dtype=np.int32),
+                    max_new_tokens=args.max_new,
+                    temperature=args.temperature)
+            for i in range(args.requests)]
+    t0 = time.time()
+    for r in reqs:
+        eng.submit(r)
+    ticks = 0
+    while (not eng.queue.empty()) or any(a is not None for a in eng.active):
+        eng.tick()
+        ticks += 1
+        if ticks > 10_000:
+            break
+    dt = time.time() - t0
+    tok = sum(len(r.out_tokens or []) for r in reqs)
+    print(f"arch={cfg.name} served {len(reqs)} requests, {tok} tokens in "
+          f"{dt:.2f}s ({tok/dt:.1f} tok/s incl. compile) over "
+          f"{args.slots} slots, {ticks} ticks")
+
+
+if __name__ == "__main__":
+    main()

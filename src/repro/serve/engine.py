@@ -1,120 +1,304 @@
-"""Slot-based continuous-batching serving engine.
+"""Slot-based continuous-batching engine for Laplacian solve requests.
 
-A fixed number of decode slots share one jitted decode step (static
-shapes).  Requests are queued, prefilled into a free slot's cache
-position-by-position (batched prefill fills the slot cache), and then
-advance together one token per engine tick; finished slots are recycled
-without stopping the batch — the standard continuous-batching pattern
-(vLLM-style) restricted to a static slot count, which is the
-TPU-friendly formulation.
+The serving workload of this repo *is* the paper's value proposition:
+factor once (cheap randomized construction), then amortize the factor
+over a stream of right-hand sides.  ``SolveEngine`` is the vLLM-style
+continuous-batching loop restated for PCG instead of token decoding:
 
-Per-slot state lives in one pytree of stacked caches; slot i's sequence
-position is tracked host-side.  Greedy or temperature sampling.
+* a fixed number of **lanes** (slots) share jitted step programs with
+  static shapes — the TPU-friendly formulation;
+* queued :class:`SolveRequest`\\ s ``(graph_id, rhs, tol)`` are admitted
+  FIFO into free lanes (a multi-RHS request takes one lane per column);
+* active lanes are **grouped by factor** each tick and every group
+  advances through ``iters_per_tick`` iterations of the batched
+  frozen-column PCG (``pcg_batched_step`` over the group's
+  ``FactorCache`` handle — matvec + fused multi-rhs trisolve);
+* lanes whose column converged (or hit maxiter) retire at the end of a
+  tick without stalling the rest of the batch; freed lanes readmit from
+  the queue on the next tick.
+
+Because frozen-column PCG lanes are independent, a request's trajectory
+is identical to a direct ``FactorHandle.solve`` batched solve of its own
+rhs block — batch composition, padding lanes, and tick slicing change
+nothing.  Group batches are padded to power-of-two lane counts so each
+graph compiles O(log slots) step programs, preserving the
+jit-cached-per-shape discipline of the PR-1 engine.
 """
 from __future__ import annotations
 
 import dataclasses
-import queue
-from typing import Callable, Dict, List, Optional
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.models import transformer as tf
-from repro.models.config import ModelConfig
+from repro.core.solver import FactorCache, FactorHandle
+from repro.core.parac import _next_pow2
+from repro.core.pcg import (PCGBatchState, pcg_batched_init,
+                            pcg_batched_step)
 
 
-@dataclasses.dataclass
-class Request:
+@dataclasses.dataclass(eq=False)          # identity equality: results are
+class SolveRequest:                        # arrays, field-wise == is a trap
+    """One solve job: ``L_graph x = b`` to relative tolerance ``tol``.
+
+    ``b`` may be ``(n,)`` or ``(nrhs, n)`` — a block request occupies
+    ``nrhs`` lanes and completes when every column has retired.  Result
+    fields are populated on completion; ``x`` matches ``b``'s shape.
+    """
+
     rid: int
-    prompt: np.ndarray             # int32 [prompt_len]
-    max_new_tokens: int = 32
-    temperature: float = 0.0
-    out_tokens: Optional[List[int]] = None
+    graph_id: str
+    b: np.ndarray
+    tol: float = 1e-6
+    maxiter: int = 500
+    # -- filled by the engine -----------------------------------------------
+    x: Optional[np.ndarray] = None
+    iters: Optional[np.ndarray] = None
+    relres: Optional[np.ndarray] = None
+    converged: Optional[bool] = None
+    submit_time: float = 0.0
+    finish_time: float = 0.0
+    submit_tick: int = -1
+    admit_tick: int = -1
+    finish_tick: int = -1
+    _partial: Dict[int, tuple] = dataclasses.field(
+        default_factory=dict, repr=False)
+
+    @property
+    def nrhs(self) -> int:
+        return 1 if np.ndim(self.b) == 1 else int(np.shape(self.b)[0])
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_time - self.submit_time
 
 
-class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 512, dtype=jnp.float32, seed: int = 0):
-        self.cfg = cfg
-        self.params = params
+class _Lane:
+    """Host-side record of one occupied lane: which request/column it
+    serves plus the lane's slice of the PCG carry (device arrays)."""
+
+    __slots__ = ("req", "col", "x", "r", "z", "p", "rz", "it", "active",
+                 "bnorm")
+
+    def __init__(self, req: SolveRequest, col: int, state: PCGBatchState,
+                 row: int):
+        self.req = req
+        self.col = col
+        self.read(state, row)
+
+    def read(self, state: PCGBatchState, row: int) -> None:
+        self.x = state.X[row]
+        self.r = state.R[row]
+        self.z = state.Z[row]
+        self.p = state.P[row]
+        self.rz = state.rz[row]
+        self.it = state.it[row]
+        self.active = bool(state.active[row])
+        self.bnorm = state.bnorm[row]
+
+
+class SolveEngine:
+    """Continuous-batching solve service over a :class:`FactorCache`.
+
+    Graphs must be admitted to the cache (``cache.factor`` /
+    ``factor_batched``) before requests referencing them are submitted.
+    """
+
+    def __init__(self, cache: FactorCache, *, slots: int = 8,
+                 iters_per_tick: int = 8, completed_history: int = 4096):
+        if slots < 1:
+            raise ValueError("slots must be >= 1")
+        self.cache = cache
         self.slots = slots
-        self.max_len = max_len
-        self.caches = tf.init_caches(cfg, slots, max_len, dtype)
-        self.pos = np.zeros(slots, np.int64)          # next position per slot
-        self.active: List[Optional[Request]] = [None] * slots
-        self.queue: "queue.Queue[Request]" = queue.Queue()
-        self.key = jax.random.key(seed)
-        self._decode = jax.jit(
-            lambda p, c, t, cp: tf.decode_step(p, cfg, c, t, cp))
+        self.iters_per_tick = iters_per_tick
+        # bounded: a long-running service must not accumulate every
+        # finished request's arrays forever (drain return values are the
+        # delivery path; this is just recent history)
+        self.completed: Deque[SolveRequest] = deque(maxlen=completed_history)
+        self.lanes: List[Optional[_Lane]] = [None] * slots
+        self.queue: Deque[SolveRequest] = deque()
+        self.ticks = 0
+        # handles pinned while they have queued/active work: in-flight
+        # requests survive cache eviction, and a graph_id re-attached to
+        # a *different* factor mid-flight cannot hijack them.  Jitted
+        # init/step programs are keyed by handle identity for the same
+        # reason; entries are pruned when an evicted handle goes idle.
+        self._pinned: Dict[str, FactorHandle] = {}
+        self._fns: Dict[int, tuple] = {}
 
     # -- request lifecycle --------------------------------------------------
-    def submit(self, req: Request):
-        req.out_tokens = []
-        self.queue.put(req)
+    def submit(self, req: SolveRequest) -> None:
+        """Queue a request (validates routing and lane fit up front; the
+        handle is pinned only once the request is actually accepted)."""
+        handle = self._pinned.get(req.graph_id)
+        if handle is None:
+            handle = self.cache.get(req.graph_id)  # raises on unknown graph
+        b = np.asarray(req.b)
+        if b.ndim not in (1, 2) or b.shape[-1] != handle.n:
+            raise ValueError(
+                f"rhs must be (n,) or (nrhs, n) with n={handle.n}, "
+                f"got {b.shape}")
+        if not 1 <= req.nrhs <= self.slots:
+            raise ValueError(
+                f"request rid={req.rid} needs {req.nrhs} lanes but the "
+                f"engine has {self.slots} slots")
+        self._pinned[req.graph_id] = handle
+        req.submit_time = time.perf_counter()
+        req.submit_tick = self.ticks
+        self.queue.append(req)
 
-    def _admit(self):
-        for s in range(self.slots):
-            if self.active[s] is None and not self.queue.empty():
-                req = self.queue.get()
-                self._prefill_slot(s, req)
-                self.active[s] = req
+    def _handle_fns(self, handle: FactorHandle):
+        """Jitted init/step programs for one factor, keyed by handle
+        identity (jax re-specializes per batch shape; power-of-two
+        padding bounds the shape count)."""
+        entry = self._fns.get(id(handle))
+        if entry is None:
+            bmv = jax.vmap(handle.matvec)
 
-    def _prefill_slot(self, s: int, req: Request):
-        """Feed the prompt through the decode path token by token (simple
-        and always-correct; a batched prefill fast path is in tf.prefill —
-        examples/serve.py uses it when all slots start together)."""
-        self.pos[s] = 0
-        for t in req.prompt[:-1]:
-            tok = jnp.full((self.slots, 1), 0, jnp.int32).at[s, 0].set(int(t))
-            _, self.caches = self._decode(self.params, self.caches, tok,
-                                          jnp.int32(self.pos[s]))
-            self.pos[s] += 1
-        self._pending_first = int(req.prompt[-1])
+            def bpc(R):
+                return handle.precondition(R.T).T
 
-    # -- one engine tick: advance every active slot one token ---------------
-    def tick(self) -> Dict[int, int]:
+            k = self.iters_per_tick
+
+            def init(B, tol):
+                return pcg_batched_init(bmv, bpc, B, tol=tol)
+
+            def step(state, tol, maxiter):
+                return pcg_batched_step(bmv, bpc, state, k=k, tol=tol,
+                                        maxiter=maxiter)
+
+            entry = (handle, jax.jit(init), jax.jit(step))
+            self._fns[id(handle)] = entry
+        return entry[1], entry[2]
+
+    def _admit(self) -> None:
+        """FIFO admission: place queued requests into free lanes until
+        the head request no longer fits (head-of-line blocking keeps
+        completion order fair and shapes static)."""
+        free = [i for i, lane in enumerate(self.lanes) if lane is None]
+        while self.queue and self.queue[0].nrhs <= len(free):
+            req = self.queue.popleft()
+            handle = self._pinned[req.graph_id]
+            init, _ = self._handle_fns(handle)
+            B = np.atleast_2d(np.asarray(req.b, np.float32))
+            state = init(jnp.asarray(B),
+                         jnp.full((B.shape[0],), req.tol, jnp.float32))
+            req.admit_tick = self.ticks
+            for col in range(B.shape[0]):
+                self.lanes[free.pop(0)] = _Lane(req, col, state, col)
+
+    # -- one engine tick ----------------------------------------------------
+    def tick(self) -> List[SolveRequest]:
+        """Admit, advance every factor group ``iters_per_tick`` PCG
+        iterations, retire finished lanes.  Returns requests completed
+        this tick."""
         self._admit()
-        if not any(a is not None for a in self.active):
-            return {}
-        tok = np.zeros((self.slots, 1), np.int32)
-        for s, req in enumerate(self.active):
-            if req is None:
-                continue
-            if not req.out_tokens:
-                tok[s, 0] = req.prompt[-1]
-            else:
-                tok[s, 0] = req.out_tokens[-1]
-        # all slots share cache_pos per step; engine uses max position and
-        # per-slot masking via positions (static-shape simplification:
-        # slots admitted together decode in lockstep)
-        cp = int(max(self.pos[s] for s, r in enumerate(self.active)
-                     if r is not None))
-        logits, self.caches = self._decode(self.params, self.caches,
-                                           jnp.asarray(tok), jnp.int32(cp))
-        emitted = {}
-        logits = np.asarray(logits, np.float32)[:, : self.cfg.vocab]
-        for s, req in enumerate(self.active):
-            if req is None:
-                continue
-            if req.temperature > 0:
-                self.key, sub = jax.random.split(self.key)
-                z = logits[s] / req.temperature
-                nxt = int(jax.random.categorical(sub, jnp.asarray(z)))
-            else:
-                nxt = int(logits[s].argmax())
-            req.out_tokens.append(nxt)
-            emitted[req.rid] = nxt
-            self.pos[s] = cp + 1
-            if len(req.out_tokens) >= req.max_new_tokens:
-                self.active[s] = None     # recycle slot
-        return emitted
+        groups: Dict[str, List[int]] = {}
+        for i, lane in enumerate(self.lanes):
+            if lane is not None and lane.active:
+                groups.setdefault(lane.req.graph_id, []).append(i)
 
-    def run_until_drained(self, max_ticks: int = 10_000):
-        done = []
-        for _ in range(max_ticks):
-            if self.queue.empty() and all(a is None for a in self.active):
-                break
-            self.tick()
+        for gid, idxs in groups.items():
+            handle = self._pinned[gid]
+            _, step = self._handle_fns(handle)
+            n = handle.n
+            L = _next_pow2(len(idxs))
+            zeros = jnp.zeros(n, jnp.float32)
+            pad = L - len(idxs)
+
+            def stacked(attr, fill):
+                rows = [getattr(self.lanes[i], attr) for i in idxs]
+                return jnp.stack(rows + [fill] * pad)
+
+            state = PCGBatchState(
+                X=stacked("x", zeros), R=stacked("r", zeros),
+                Z=stacked("z", zeros), P=stacked("p", zeros),
+                rz=stacked("rz", jnp.float32(0)),
+                it=stacked("it", jnp.int32(0)),
+                active=stacked("active", jnp.bool_(False)),
+                bnorm=stacked("bnorm", jnp.float32(1)))
+            tolv = jnp.asarray(
+                [self.lanes[i].req.tol for i in idxs] + [1.0] * pad,
+                jnp.float32)
+            maxv = jnp.asarray(
+                [self.lanes[i].req.maxiter for i in idxs] + [0] * pad,
+                jnp.int32)
+            state = step(state, tolv, maxv)
+            for row, i in enumerate(idxs):
+                self.lanes[i].read(state, row)
+
+        done = self._retire()
+        self._unpin_idle()
+        self.ticks += 1
         return done
+
+    def _unpin_idle(self) -> None:
+        """Release pins for graphs with no queued or active work, then
+        sweep jitted programs whose handle is neither pinned nor still
+        the cached one (evicted, or its graph_id re-attached to a new
+        factor) — the closures capture the factor's device arrays, so
+        keeping them would defeat the cache's memory budget."""
+        in_use = {r.graph_id for r in self.queue}
+        in_use.update(lane.req.graph_id for lane in self.lanes
+                      if lane is not None)
+        for gid in [g for g in self._pinned if g not in in_use]:
+            del self._pinned[gid]
+        pinned = {id(h) for h in self._pinned.values()}
+        for hid in list(self._fns):
+            handle = self._fns[hid][0]
+            if hid not in pinned and \
+                    self.cache.peek(handle.graph_id) is not handle:
+                del self._fns[hid]
+
+    def _retire(self) -> List[SolveRequest]:
+        """Free every lane whose column froze (converged or hit maxiter)
+        — immediately, so the slot readmits next tick even while sibling
+        columns keep running.  A request completes when its last column
+        retires; completed requests are handed back."""
+        done: List[SolveRequest] = []
+        for i, lane in enumerate(self.lanes):
+            if lane is None or lane.active:
+                continue
+            req = lane.req
+            relres = float(jnp.linalg.norm(lane.r) / lane.bnorm)
+            req._partial[lane.col] = (np.asarray(lane.x), int(lane.it),
+                                      relres)
+            self.lanes[i] = None
+            if len(req._partial) == req.nrhs:
+                cols = [req._partial[c] for c in range(req.nrhs)]
+                X = np.stack([c[0] for c in cols])
+                req.iters = np.array([c[1] for c in cols])
+                req.relres = np.array([c[2] for c in cols])
+                req.converged = bool(np.all(req.relres <= req.tol))
+                req.x = X[0] if np.ndim(req.b) == 1 else X
+                req.finish_time = time.perf_counter()
+                req.finish_tick = self.ticks
+                self.completed.append(req)
+                done.append(req)
+        return done
+
+    # -- driving loops ------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(l is not None for l in self.lanes)
+
+    def run_until_drained(self, max_ticks: int = 100_000
+                          ) -> List[SolveRequest]:
+        """Tick until queue and lanes are empty; returns every request
+        completed during the drain, in completion order."""
+        done: List[SolveRequest] = []
+        for _ in range(max_ticks):
+            if not self.busy:
+                break
+            done.extend(self.tick())
+        return done
+
+    def stats(self) -> Dict[str, float]:
+        active = sum(l is not None for l in self.lanes)
+        return dict(ticks=self.ticks, completed=len(self.completed),
+                    queued=len(self.queue), active_lanes=active,
+                    slots=self.slots, factors=len(self.cache))

@@ -1,0 +1,128 @@
+"""Slot-based continuous-batching serving engine.
+
+A fixed number of decode slots share one jitted decode step (static
+shapes).  Requests are queued, prefilled into a free slot's cache
+position-by-position (batched prefill fills the slot cache), and then
+advance together one token per engine tick; finished slots are recycled
+without stopping the batch — the standard continuous-batching pattern
+(vLLM-style) restricted to a static slot count, which is the
+TPU-friendly formulation.
+
+Per-slot state lives in one pytree of stacked caches; slot i's sequence
+position is tracked host-side.  Greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # int32 [prompt_len]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 512, dtype=jnp.float32, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.caches = tf.init_caches(cfg, slots, max_len, dtype)
+        self.pos = np.zeros(slots, np.int64)          # next position per slot
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self._finished: List[Request] = []
+        self.key = jax.random.key(seed)
+        self._decode = jax.jit(
+            lambda p, c, t, cp: tf.decode_step(p, cfg, c, t, cp))
+
+    # -- request lifecycle --------------------------------------------------
+    def submit(self, req: Request):
+        req.out_tokens = []
+        self.queue.put(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and not self.queue.empty():
+                req = self.queue.get()
+                self._prefill_slot(s, req)
+                self.active[s] = req
+
+    def _prefill_slot(self, s: int, req: Request):
+        """Feed the prompt through the decode path token by token (simple
+        and always-correct; a batched prefill fast path is in tf.prefill —
+        examples/serve.py uses it when all slots start together)."""
+        self.pos[s] = 0
+        for t in req.prompt[:-1]:
+            tok = jnp.full((self.slots, 1), 0, jnp.int32).at[s, 0].set(int(t))
+            _, self.caches = self._decode(self.params, self.caches, tok,
+                                          jnp.int32(self.pos[s]))
+            self.pos[s] += 1
+        self._pending_first = int(req.prompt[-1])
+
+    # -- one engine tick: advance every active slot one token ---------------
+    def tick(self) -> Dict[int, int]:
+        self._admit()
+        if not any(a is not None for a in self.active):
+            return {}
+        tok = np.zeros((self.slots, 1), np.int32)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            if not req.out_tokens:
+                tok[s, 0] = req.prompt[-1]
+            else:
+                tok[s, 0] = req.out_tokens[-1]
+        # all slots share cache_pos per step; engine uses max position and
+        # per-slot masking via positions (static-shape simplification:
+        # slots admitted together decode in lockstep)
+        cp = int(max(self.pos[s] for s, r in enumerate(self.active)
+                     if r is not None))
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           jnp.asarray(tok), jnp.int32(cp))
+        emitted = {}
+        logits = np.asarray(logits, np.float32)[:, : self.cfg.vocab]
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            if req.temperature > 0:
+                self.key, sub = jax.random.split(self.key)
+                z = logits[s] / req.temperature
+                nxt = int(jax.random.categorical(sub, jnp.asarray(z)))
+            else:
+                nxt = int(logits[s].argmax())
+            req.out_tokens.append(nxt)
+            emitted[req.rid] = nxt
+            self.pos[s] = cp + 1
+            if len(req.out_tokens) >= req.max_new_tokens:
+                self.active[s] = None     # recycle slot
+                self._finished.append(req)
+        return emitted
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        """Tick until queue and slots are empty; returns the requests
+        that finished during the drain, in completion order."""
+        done: List[Request] = []
+        start = len(self._finished)
+        for _ in range(max_ticks):
+            if self.queue.empty() and all(a is None for a in self.active):
+                break
+            self.tick()
+        done.extend(self._finished[start:])
+        if len(self._finished) > 4096:       # recent history only; the
+            del self._finished[:-4096]       # drain return delivers results
+        return done

@@ -1,0 +1,244 @@
+"""Multi-tenant solve service: batched fleet factorization
+(``factorize_batched``), the ``FactorCache`` LRU, and the
+continuous-batching ``SolveEngine``."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.parac import factorize_wavefront, factorize_batched
+from repro.core.solver import FactorCache, graph_fingerprint
+from repro.serve import SolveEngine, SolveRequest
+from repro.data import graphs
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    """Three graphs of different sizes (and their factorization keys)."""
+    gs = {"g2d": graphs.grid2d(12, 12, seed=3),       # n = 144
+          "pl": graphs.powerlaw(300, 5, seed=3),      # n = 300
+          "road": graphs.road_like(10, seed=4)}       # n = 100
+    keys = {name: jax.random.key(i) for i, name in enumerate(gs)}
+    return gs, keys
+
+
+@pytest.fixture(scope="module")
+def cache(fleet):
+    gs, keys = fleet
+    c = FactorCache(chunk=32, fill_slack=64)
+    c.factor_batched(list(gs.values()), [keys[k] for k in gs],
+                     graph_ids=list(gs))
+    return c
+
+
+def _rhs(rng, n, nrhs):
+    b = rng.normal(size=(nrhs, n) if nrhs > 1 else n).astype(np.float32)
+    return b - b.mean(axis=-1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Batched fleet factorization == per-graph wavefront, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_factorize_batched_bit_identical(fleet):
+    gs, keys = fleet
+    singles = {k: factorize_wavefront(g, keys[k], chunk=32, fill_slack=64)
+               for k, g in gs.items()}
+    batched = factorize_batched(list(gs.values()), [keys[k] for k in gs],
+                                chunk=32, fill_slack=64)
+    assert len({g.n for g in gs.values()}) == 3   # genuinely mixed sizes
+    for (k, a), b in zip(singles.items(), batched):
+        assert a.n == b.n and a.nnz == b.nnz
+        assert np.array_equal(a.col_ptr, b.col_ptr)
+        assert np.array_equal(a.rows, b.rows)
+        assert np.array_equal(a.vals, b.vals)
+        assert np.array_equal(a.D, b.D)
+        assert b.stats["batched"] and b.stats["overflow"] == 0
+        assert b.device is not None           # factor stays device-resident
+
+
+def test_factorize_batched_masked_retry(fleet):
+    """Strict overflow handling in the batched path: overflowing graphs
+    re-run at doubled slack while the result stays bit-identical to the
+    generous-slack factorization."""
+    gs, keys = fleet
+    sub = [gs["g2d"], gs["road"]]
+    ks = [keys["g2d"], keys["road"]]
+    ref = factorize_batched(sub, ks, chunk=32, fill_slack=64)
+    low = factorize_batched(sub, ks, chunk=32, fill_slack=1)
+    assert any(b.stats["fill_slack"] > 1 for b in low)   # retry happened
+    for a, b in zip(ref, low):
+        assert b.stats["overflow"] == 0
+        assert np.array_equal(a.rows, b.rows)
+        assert np.array_equal(a.vals, b.vals)
+        assert np.array_equal(a.D, b.D)
+
+
+def test_factorize_batched_key_count_mismatch(fleet):
+    gs, keys = fleet
+    with pytest.raises(ValueError):
+        factorize_batched([gs["g2d"]], [keys["g2d"], keys["road"]])
+
+
+# ---------------------------------------------------------------------------
+# FactorCache: fingerprints, routing, LRU, memory budget
+# ---------------------------------------------------------------------------
+
+def test_graph_fingerprint_content_keyed():
+    g = graphs.grid2d(8, 8, seed=0)
+    same = graphs.grid2d(8, 8, seed=0)
+    other = graphs.grid2d(8, 8, seed=1)
+    assert graph_fingerprint(g) == graph_fingerprint(same)
+    assert graph_fingerprint(g) != graph_fingerprint(other)
+    k0, k1 = jax.random.key(0), jax.random.key(1)
+    assert graph_fingerprint(g, k0) != graph_fingerprint(g, k1)
+
+
+def test_factor_cache_hits_and_routing(fleet, cache):
+    gs, keys = fleet
+    h = cache.get("g2d")
+    hits = cache.hits
+    assert cache.factor(gs["g2d"], keys["g2d"], graph_id="g2d") is h
+    assert cache.hits == hits + 1
+    again = cache.factor_batched(list(gs.values()),
+                                 [keys[k] for k in gs], graph_ids=list(gs))
+    assert again[0] is h and cache.hits == hits + 4
+    res = cache.solve("g2d", jnp.asarray(_rhs(np.random.default_rng(0),
+                                              gs["g2d"].n, 1)),
+                      tol=1e-6, maxiter=300)
+    assert bool(res.converged)
+    with pytest.raises(KeyError):
+        cache.get("unknown-graph")
+
+
+def test_factor_cache_lru_eviction(fleet):
+    gs, keys = fleet
+    c = FactorCache(chunk=32, fill_slack=64, max_handles=2)
+    for name, g in gs.items():
+        c.factor(g, keys[name], graph_id=name)
+    assert len(c) == 2 and "g2d" not in c and c.evictions == 1
+    c.get("pl")                             # touch: pl becomes most recent
+    c.factor(gs["g2d"], keys["g2d"], graph_id="g2d")
+    assert "pl" in c and "g2d" in c and "road" not in c
+
+
+def test_factor_cache_memory_budget(fleet, cache):
+    gs, keys = fleet
+    bytes_g2d = cache.get("g2d").device_bytes
+    assert bytes_g2d > 0
+    c = FactorCache(chunk=32, fill_slack=64,
+                    memory_budget_bytes=bytes_g2d + 1)
+    c.factor(gs["g2d"], keys["g2d"], graph_id="a")
+    c.factor(gs["road"], keys["road"], graph_id="b")
+    assert "b" in c and "a" not in c and c.evictions == 1
+    stats = c.stats()
+    assert stats["handles"] == 1 and stats["device_bytes"] <= bytes_g2d + 1
+
+
+# ---------------------------------------------------------------------------
+# SolveEngine: drain semantics, continuous batching, mixed trace
+# ---------------------------------------------------------------------------
+
+def test_engine_rejects_bad_requests(cache):
+    eng = SolveEngine(cache, slots=2)
+    n = cache.get("g2d").n
+    with pytest.raises(KeyError):
+        eng.submit(SolveRequest(rid=0, graph_id="nope", b=np.zeros(4)))
+    with pytest.raises(ValueError):        # wider than the engine
+        eng.submit(SolveRequest(rid=1, graph_id="g2d", b=np.zeros((3, n))))
+    with pytest.raises(ValueError):        # wrong n
+        eng.submit(SolveRequest(rid=2, graph_id="g2d", b=np.zeros(n + 1)))
+    with pytest.raises(ValueError):        # empty rhs block
+        eng.submit(SolveRequest(rid=3, graph_id="g2d",
+                                b=np.zeros((0, n), np.float32)))
+    assert not eng._pinned                 # rejected submits pin nothing
+
+
+def test_engine_drain_returns_completed(cache):
+    """Satellite: ``run_until_drained`` must hand back every finished
+    request (the seed engine silently dropped them)."""
+    rng = np.random.default_rng(5)
+    n = cache.get("g2d").n
+    eng = SolveEngine(cache, slots=2, iters_per_tick=8)
+    reqs = [SolveRequest(rid=i, graph_id="g2d", b=_rhs(rng, n, 1),
+                         tol=1e-6, maxiter=300) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    assert eng.busy
+    done = eng.run_until_drained()
+    assert {r.rid for r in done} == {0, 1, 2}
+    assert not eng.busy and all(lane is None for lane in eng.lanes)
+    assert eng.run_until_drained() == []       # idempotent once drained
+    assert list(eng.completed) == done         # bounded history deque
+    for r in reqs:
+        assert r.converged and r.x is not None
+        assert r.finish_tick >= r.admit_tick >= r.submit_tick >= 0
+        assert float(r.relres[0]) <= r.tol
+
+
+def test_engine_survives_cache_eviction(fleet, cache):
+    """In-flight requests pin their handle: evicting the graph from the
+    cache after submit must not crash the drain or corrupt results."""
+    gs, keys = fleet
+    c = FactorCache(chunk=32, fill_slack=64)
+    c.factor(gs["g2d"], keys["g2d"], graph_id="g2d")
+    eng = SolveEngine(c, slots=2, iters_per_tick=8)
+    rng = np.random.default_rng(9)
+    req = SolveRequest(rid=0, graph_id="g2d", b=_rhs(rng, gs["g2d"].n, 1),
+                       tol=1e-6, maxiter=300)
+    eng.submit(req)
+    c.evict("g2d")                          # gone from the cache...
+    done = eng.run_until_drained()
+    assert done == [req] and req.converged  # ...but the solve completes
+    assert not eng._pinned and not eng._fns     # idle engine holds nothing
+    with pytest.raises(KeyError):           # new submits do fail-fast
+        eng.submit(SolveRequest(rid=1, graph_id="g2d",
+                                b=_rhs(rng, gs["g2d"].n, 1)))
+
+
+def test_engine_zero_rhs_retires_immediately(cache):
+    eng = SolveEngine(cache, slots=2)
+    n = cache.get("g2d").n
+    req = SolveRequest(rid=0, graph_id="g2d", b=np.zeros(n, np.float32))
+    eng.submit(req)
+    done = eng.run_until_drained(max_ticks=3)
+    assert done == [req] and req.converged and int(req.iters[0]) == 0
+
+
+def test_engine_mixed_trace_matches_direct_solves(fleet, cache):
+    """Acceptance: ≥ 3 graphs, ≥ 8 interleaved requests, single- and
+    multi-RHS — every request's residuals/iterates match a direct
+    ``FactorHandle.solve`` of the same rhs block."""
+    gs, _ = fleet
+    rng = np.random.default_rng(7)
+    eng = SolveEngine(cache, slots=6, iters_per_tick=8)
+    spec = [("g2d", 1, 1e-6), ("pl", 2, 1e-5), ("road", 1, 1e-6),
+            ("g2d", 3, 1e-6), ("pl", 1, 1e-6), ("road", 2, 1e-5),
+            ("g2d", 1, 1e-4), ("pl", 2, 1e-6)]
+    reqs = [SolveRequest(rid=i, graph_id=gid, b=_rhs(rng, gs[gid].n, nr),
+                         tol=tol, maxiter=500)
+            for i, (gid, nr, tol) in enumerate(spec)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    assert len(done) == len(reqs)
+    for r in reqs:
+        handle = cache.get(r.graph_id)
+        ref = handle.solve(jnp.asarray(np.atleast_2d(r.b)), tol=r.tol,
+                           maxiter=r.maxiter)
+        assert r.converged and bool(np.all(np.asarray(ref.converged)))
+        relres = np.atleast_1d(r.relres)
+        ref_rr = np.atleast_1d(np.asarray(ref.relres))
+        assert np.all(relres <= r.tol)
+        np.testing.assert_allclose(relres, ref_rr, rtol=1e-3, atol=1e-12)
+        # frozen-lane batching: per-column trajectories are independent of
+        # batch composition — iterates line up with the direct solve
+        assert np.all(np.abs(np.atleast_1d(r.iters)
+                             - np.atleast_1d(np.asarray(ref.iters))) <= 1)
+        X = np.atleast_2d(r.x)
+        Xr = np.atleast_2d(np.asarray(ref.x))
+        for j in range(X.shape[0]):
+            denom = max(np.linalg.norm(Xr[j]), 1e-12)
+            assert np.linalg.norm(X[j] - Xr[j]) / denom < 1e-2
+    # continuous batching actually interleaved factors within single ticks
+    assert eng.ticks < sum(int(np.max(np.atleast_1d(r.iters))) for r in reqs)

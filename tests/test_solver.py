@@ -244,6 +244,15 @@ def test_solver_rejects_bad_shapes(g_small, handle):
         Solver().solve(jnp.zeros(4))
 
 
+def test_solver_keeps_single_handle(g_small):
+    """Solver stays O(1) in device memory across a sweep of factors
+    (FactorCache subclass with max_handles=1)."""
+    s = Solver(chunk=32, fill_slack=64)
+    s.factor(g_small, KEY)
+    h2 = s.factor(graphs.grid2d(10, 10, seed=9), jax.random.key(1))
+    assert len(s) == 1 and s.handle is h2
+
+
 def test_solver_attach_host_factor(g_small):
     """attach() serves solves from a host-built (oracle) factor."""
     f = factorize_sequential(g_small, KEY)
@@ -253,3 +262,69 @@ def test_solver_attach_host_factor(g_small):
     b -= b.mean()
     res = h.solve(jnp.asarray(b), tol=1e-6, maxiter=300)
     assert bool(res.converged)
+
+
+# ---------------------------------------------------------------------------
+# Strict-overflow retry (satellite): tiny fill_slack forces slack doubling
+# ---------------------------------------------------------------------------
+
+def test_strict_overflow_retry_doubles_slack(g_small):
+    # non-strict at slack 1 overflows — establishes the retry is needed
+    f_loose = factorize_wavefront(g_small, KEY, chunk=32, fill_slack=1,
+                                  strict=False)
+    assert f_loose.stats["overflow"] > 0
+    assert f_loose.stats["fill_slack"] == 1      # stats reflect final slack
+    # strict mode re-runs with doubled slack until nothing is dropped
+    f = factorize_wavefront(g_small, KEY, chunk=32, fill_slack=1,
+                            strict=True)
+    assert f.stats["overflow"] == 0
+    slack = f.stats["fill_slack"]
+    assert slack > 1 and (slack & (slack - 1)) == 0   # 1 doubled k times
+    # retried factor is bit-identical to a generous-slack run
+    f_ref = factorize_wavefront(g_small, KEY, chunk=32, fill_slack=64)
+    assert np.array_equal(f.rows, f_ref.rows)
+    assert np.array_equal(f.vals, f_ref.vals)
+    assert np.array_equal(f.D, f_ref.D)
+
+
+# ---------------------------------------------------------------------------
+# FactorHandle jit-cache keying (satellite): combos must not collide and
+# the cache must stay bounded
+# ---------------------------------------------------------------------------
+
+def test_handle_jit_cache_keying(g_small, handle):
+    handle._cache.clear()
+    b = jnp.asarray(np.random.default_rng(6).normal(size=g_small.n),
+                    jnp.float32)
+    r_loose = handle.solve(b, tol=1e-3, maxiter=200)
+    r_tight = handle.solve(b, tol=1e-6, maxiter=200)
+    r_capped = handle.solve(b, tol=1e-6, maxiter=2)
+    handle.solve(b, tol=1e-6, maxiter=200, project=False)
+    assert len(handle._cache) == 4               # distinct combos, no collision
+    # each combo kept its own semantics (a collision would reuse closures)
+    assert int(r_tight.iters) > int(r_loose.iters)
+    assert int(r_capped.iters) == 2 and not bool(r_capped.converged)
+    assert float(r_tight.relres) <= 1e-6
+    for _ in range(5):                           # repeats: hits, no growth
+        handle.solve(b, tol=1e-3, maxiter=200)
+        handle.solve(b, tol=1e-6, maxiter=200)
+    assert len(handle._cache) == 4
+    handle._cache.clear()
+
+
+def test_handle_jit_cache_bounded_lru(g_small, handle):
+    handle._cache.clear()
+    old = handle.max_cached_solves
+    handle.max_cached_solves = 3
+    b = jnp.asarray(np.random.default_rng(7).normal(size=g_small.n),
+                    jnp.float32)
+    try:
+        for i in range(6):
+            handle.solve(b, tol=1e-6, maxiter=5 + i)
+            assert len(handle._cache) <= 3
+        # most recent combos survive, oldest were evicted
+        kept = [k[3] for k in handle._cache]     # maxiter component
+        assert kept == [8, 9, 10]
+    finally:
+        handle.max_cached_solves = old
+        handle._cache.clear()

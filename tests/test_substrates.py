@@ -180,10 +180,9 @@ def test_serve_engine_batched_requests():
                     max_new_tokens=5) for i in range(3)]
     for r in reqs:
         eng.submit(r)
-    for _ in range(100):
-        if eng.queue.empty() and all(a is None for a in eng.active):
-            break
-        eng.tick()
+    done = eng.run_until_drained(max_ticks=100)
+    # drain hands back every finished request (seed bug: always-empty list)
+    assert {d.rid for d in done} == {r.rid for r in reqs}
     for r in reqs:
         assert len(r.out_tokens) == 5
         assert all(0 <= t < cfg.vocab for t in r.out_tokens)
