@@ -1,14 +1,20 @@
 """Solve-service benchmark: replay a mixed request trace through the
-continuous-batching :class:`SolveEngine` and report service-level
-numbers — requests/sec, rhs/sec, p50/p95 latency.
+device-resident continuous-batching :class:`SolveEngine` and report
+service-level numbers — requests/sec, rhs/sec, ticks/sec, p50/p95
+latency, and (open-loop) queueing delay.
 
-First point of the serving perf trajectory; the CI smoke job runs
+The CI ``bench-serve`` job runs
 
     PYTHONPATH=src python -m benchmarks.bench_serve \
         --suite tiny --json BENCH_serve.json
 
-and uploads the JSON as an artifact, so regressions show up as a
-time series across PRs.
+uploads the JSON as an artifact, and gates merges by comparing
+``ticks_per_s`` against the committed baseline in
+``benchmarks/baselines/`` (``benchmarks.check_serve_regression``), so a
+>2x serving-throughput regression fails the build instead of showing up
+as a silent time-series dip.  The trace RNG is explicitly seeded
+(``--seed``, default 0) — rhs content *and* Poisson arrival gaps — so
+artifacts are reproducible across runs.
 """
 from __future__ import annotations
 
@@ -21,17 +27,24 @@ from .common import emit
 
 
 def run(*, suite="tiny", requests=16, slots=8, iters_per_tick=8, seed=0,
-        warm=True):
+        warm=True, arrival_rate=None):
     """One warmup replay through the same engine (pays jit compiles),
     then the measured replay."""
     metrics, _ = run_service(
         suite=suite, requests=requests, slots=slots,
         iters_per_tick=iters_per_tick, seed=seed,
-        warmup_requests=requests if warm else 0)
+        warmup_requests=requests if warm else 0,
+        arrival_rate=arrival_rate)
     emit(f"serve/{suite}/requests_per_s", metrics["requests_per_s"],
          f"completed={metrics['completed']};rhs={metrics['rhs_total']}")
+    emit(f"serve/{suite}/ticks_per_s", metrics["ticks_per_s"],
+         f"ticks={metrics['ticks']};slots={metrics['slots']}")
     emit(f"serve/{suite}/latency_p50_us", metrics["latency_p50_s"] * 1e6,
          f"p95_us={metrics['latency_p95_s']*1e6:.0f}")
+    emit(f"serve/{suite}/queue_wait_p50_us",
+         metrics["queue_wait_p50_s"] * 1e6,
+         f"p95_us={metrics['queue_wait_p95_s']*1e6:.0f};"
+         f"arrival_rate={arrival_rate}")
     emit(f"serve/{suite}/factor_batched_us", metrics["factor_s"] * 1e6,
          f"graphs={metrics['graphs']}")
     return metrics
@@ -43,7 +56,13 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--iters-per-tick", type=int, default=8)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace RNG seed (rhs content + arrival gaps); "
+                         "fixed default keeps JSON artifacts reproducible")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="open-loop Poisson arrival rate (req/s) passed "
+                         "through to the trace, so the artifact records "
+                         "queueing metrics")
     ap.add_argument("--no-warm", action="store_true",
                     help="skip the warmup replay (include compiles)")
     ap.add_argument("--json", default=None,
@@ -52,7 +71,8 @@ def main():
     args = ap.parse_args()
     metrics = run(suite=args.suite, requests=args.requests,
                   slots=args.slots, iters_per_tick=args.iters_per_tick,
-                  seed=args.seed, warm=not args.no_warm)
+                  seed=args.seed, warm=not args.no_warm,
+                  arrival_rate=args.arrival_rate)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(metrics, fh, indent=2)

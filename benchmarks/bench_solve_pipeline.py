@@ -78,7 +78,7 @@ def run(suite=None, tol=1e-6, maxiter=500, nrhs=8, records=None):
 
         emit(f"table3/{name}/factor_s", t_factor * 1e6,
              f"rounds={handle.factor.stats['rounds']};"
-             f"levels={handle.fwd.n_levels}")
+             f"levels={handle.n_levels}")
         emit(f"table3/{name}/solve_s", t_solve * 1e6,
              f"iters={int(res.iters)};relres={float(res.relres):.2e};"
              f"first_call_s={t_first:.2f}")
@@ -93,7 +93,7 @@ def run(suite=None, tol=1e-6, maxiter=500, nrhs=8, records=None):
             converged=bool(res.converged),
             batch_converged=bool(np.all(np.asarray(resB.converged))),
             rounds=int(handle.factor.stats["rounds"]),
-            n_levels=int(handle.fwd.n_levels)))
+            n_levels=int(handle.n_levels)))
     return records
 
 

@@ -1,0 +1,103 @@
+"""CI gate: compare a fresh ``BENCH_serve.json`` against the committed
+baseline and fail on a serving-throughput regression.
+
+    python -m benchmarks.check_serve_regression BENCH_serve.json \
+        benchmarks/baselines/BENCH_serve.json --max-ratio 2.0
+
+Two kinds of gate:
+
+* **deterministic invariants** (machine-independent, checked first):
+  the artifact's engine counters must show one compiled step program
+  per shape bucket (``step_compiles == buckets``) and conserved column
+  traffic (``cols_in == cols_out`` — every admitted column retired).
+  The compile equality is an invariant of *this benchmark's phase
+  structure* (``bench_serve`` admits the whole fleet before serving, so
+  fleet shapes never grow mid-run), not of the engine in general — a
+  live service admitting a new factor to a grown bucket legitimately
+  retraces.  Within the benchmark it is exactly the mega-batching
+  contract: compiles scale with buckets, never with factors;
+* **throughput ratio**: ``ticks_per_s`` vs the committed baseline
+  (insensitive to request mix, sensitive to per-tick host glue).  The
+  bar is deliberately loose (default: fail only when the baseline is
+  more than ``--max-ratio`` times faster) because CI runners vary in
+  speed; refresh the baseline with ``--write-baseline`` when the
+  benchmark or reference hardware changes intentionally.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+
+def check_invariants(current: dict) -> int:
+    """Machine-independent engine-counter gates (no baseline needed)."""
+    eng = current.get("engine")
+    if not eng:
+        print("no engine counters in artifact; invariant gate skipped")
+        return 0
+    failures = []
+    if eng["step_compiles"] != eng["buckets"]:
+        failures.append(
+            f"step_compiles={eng['step_compiles']} != "
+            f"buckets={eng['buckets']} (upfront-admission benchmark "
+            f"should compile once per bucket, never per factor)")
+    if eng["cols_in"] != eng["cols_out"]:
+        failures.append(
+            f"cols_in={eng['cols_in']} != cols_out={eng['cols_out']} "
+            f"(column traffic not conserved)")
+    for msg in failures:
+        print(f"INVARIANT VIOLATED: {msg}")
+    if not failures:
+        print(f"engine invariants OK: step_compiles==buckets=="
+              f"{eng['buckets']}, cols_in==cols_out=={eng['cols_in']}")
+    return 1 if failures else 0
+
+
+def check(current_path: str, baseline_path: str, *,
+          metric: str = "ticks_per_s", max_ratio: float = 2.0) -> int:
+    with open(current_path) as fh:
+        current = json.load(fh)
+    if check_invariants(current):
+        return 1
+    try:
+        with open(baseline_path) as fh:
+            baseline = json.load(fh)
+    except FileNotFoundError:
+        print(f"no baseline at {baseline_path} — nothing to gate "
+              f"(commit one with --write-baseline)")
+        return 0
+    cur = float(current.get(metric, 0.0))
+    base = float(baseline.get(metric, 0.0))
+    if base <= 0:
+        print(f"baseline {metric} is {base}; gate skipped")
+        return 0
+    ratio = base / cur if cur > 0 else float("inf")
+    verdict = "OK" if ratio <= max_ratio else "REGRESSION"
+    print(f"{metric}: current={cur:.2f} baseline={base:.2f} "
+          f"slowdown={ratio:.2f}x (max {max_ratio:.2f}x) -> {verdict}")
+    return 0 if verdict == "OK" else 1
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh benchmark JSON")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--metric", default="ticks_per_s")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when baseline/current exceeds this")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="copy current over the baseline instead of "
+                         "checking (baseline refresh)")
+    args = ap.parse_args()
+    if args.write_baseline:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline refreshed: {args.baseline}")
+        return
+    sys.exit(check(args.current, args.baseline, metric=args.metric,
+                   max_ratio=args.max_ratio))
+
+
+if __name__ == "__main__":
+    main()

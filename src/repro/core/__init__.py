@@ -9,5 +9,6 @@ from .trisolve import (make_preconditioner, precond_apply_np,        # noqa: F40
 from .pcg import (pcg_jax, pcg_jax_batched, pcg_np,                  # noqa: F401
                   laplacian_pcg_jax, laplacian_pcg_jax_batched,
                   laplacian_pcg_np)
-from .solver import Solver, FactorHandle                             # noqa: F401
+from .solver import (Solver, FactorCache, FactorHandle,              # noqa: F401
+                     FactorFleet)
 from .ordering import ORDERINGS                                      # noqa: F401

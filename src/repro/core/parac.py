@@ -131,6 +131,22 @@ def _round_commit(s: EngineState, cand, cand_ok, res, slots, sv, ids, *,
     return pool_row, pool_val, col_fill, dep, elim, D
 
 
+def _run_ranks(sorted_keys: jnp.ndarray) -> jnp.ndarray:
+    """Rank of each element within its run of equal consecutive keys
+    (keys must already be sorted/grouped; device-side analogue of
+    ``_cumcount``).  The shared scatter-offset idiom of the engine's
+    sampled-edge scatter and the trisolve schedule builders' ELL
+    packers — one implementation so the run-boundary handling cannot
+    drift between them."""
+    E = sorted_keys.shape[0]
+    eidx = jnp.arange(E, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]])
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, eidx, 0))
+    return eidx - run_start
+
+
 def _round_scatter(pool_row, pool_val, col_fill, dep, res, cand_ok,
                    col_base, cap, overflow):
     """Stage 5 — scatter sampled spanning-tree edges to their owner
@@ -144,12 +160,7 @@ def _round_scatter(pool_row, pool_val, col_fill, dep, res, cand_ok,
     e_w = res.e_w.ravel()
     order = jnp.argsort(e_lo, stable=True)
     so, sh, sw2 = e_lo[order], e_hi[order], e_w[order]
-    E = so.shape[0]
-    eidx = jnp.arange(E, dtype=jnp.int32)
-    is_start = jnp.concatenate([jnp.ones((1,), bool), so[1:] != so[:-1]])
-    run_start = jax.lax.associative_scan(
-        jnp.maximum, jnp.where(is_start, eidx, 0))
-    rank = eidx - run_start
+    rank = _run_ranks(so)
     valid_e = so < n
     dst_fill = jnp.take(col_fill, jnp.minimum(so, n - 1))
     slot = jnp.take(col_base, jnp.minimum(so, n - 1)) + dst_fill + rank
@@ -347,7 +358,7 @@ def _pad_np(x: np.ndarray, size: int, fill) -> np.ndarray:
 def factorize_batched(gs: Sequence[Graph], keys, *, chunk: int = 64,
                       fill_slack: int = 32, strict: bool = True,
                       max_retries: int = 3, dtype=np.float32,
-                      bucket: bool = True) -> List[ACFactor]:
+                      bucket: bool = True, with_schedules: bool = False):
     """Factor a fleet of Laplacians concurrently in one XLA program.
 
     Pools are padded to a common shape bucket (powers of two when
@@ -361,6 +372,12 @@ def factorize_batched(gs: Sequence[Graph], keys, *, chunk: int = 64,
     Overflow is handled per graph: converged graphs keep their factor
     while the overflowing subset re-runs at doubled slack (masked
     re-runs), mirroring the single-graph strict retry loop.
+
+    With ``with_schedules`` the fleet's triangular level schedules are
+    also derived in one vmapped pass (``trisolve.build_schedules_batched``
+    over the padded device factors) and the call returns
+    ``(factors, schedules)`` — the complete factor→solve admission
+    payload in two batched XLA programs total.
     """
     gs = list(gs)
     B = len(gs)
@@ -369,7 +386,7 @@ def factorize_batched(gs: Sequence[Graph], keys, *, chunk: int = 64,
     if keys.shape[0] != B:
         raise ValueError(f"got {B} graphs but {keys.shape[0]} keys")
     if B == 0:
-        return []
+        return ([], []) if with_schedules else []
 
     slacks = [fill_slack] * B
     results: List[Optional[ACFactor]] = [None] * B
@@ -426,4 +443,7 @@ def factorize_batched(gs: Sequence[Graph], keys, *, chunk: int = 64,
         pending = retry
         if not pending:
             break
-    return results
+    if not with_schedules:
+        return results
+    from .trisolve import build_schedules_batched
+    return results, build_schedules_batched([f.device for f in results])

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from .laplacian import Graph, laplacian_matvec, laplacian_matvec_np
+from repro.kernels.ops import trisolve_fleet
 
 
 class PCGResult(NamedTuple):
@@ -189,6 +190,203 @@ def pcg_jax_batched(matvec: Callable, precond: Callable, B: jnp.ndarray, *,
                              project=project)
     state = jax.lax.while_loop(lambda s: jnp.any(s.active), body, state)
     return pcg_batched_result(state, tol)
+
+
+# ---------------------------------------------------------------------------
+# Fleet PCG — factor data as traced arguments (shape-bucket mega-batching)
+# ---------------------------------------------------------------------------
+
+class FleetArrays(NamedTuple):
+    """Stacked, bucket-padded device factors — the **traced** factor
+    argument of the fleet PCG programs.  Row ``f`` holds one factor's
+    padded Laplacian edge lists, row-indexed forward/backward trisolve
+    panels, inverse diagonal and true size; a lane gathers its factor by
+    index, so every factor whose padded shapes match shares one compiled
+    step program (the factor is data, not a closure constant)."""
+
+    src: jnp.ndarray      # int32[F, m_pad] — Laplacian edges (0-padded)
+    dst: jnp.ndarray      # int32[F, m_pad]
+    w: jnp.ndarray        # f32[F, m_pad]   (0 on padding)
+    fcols: jnp.ndarray    # int32[F, n_pad, Kf] — fwd panels, row-indexed
+    fvals: jnp.ndarray    # f32[F, n_pad, Kf]
+    flevel: jnp.ndarray   # int32[F, n_pad]
+    bcols: jnp.ndarray    # int32[F, n_pad, Kb] — bwd panels (unflipped)
+    bvals: jnp.ndarray    # f32[F, n_pad, Kb]
+    blevel: jnp.ndarray   # int32[F, n_pad]
+    dinv: jnp.ndarray     # f32[F, n_pad]  — 1/D (0 where D <= 0 / phantom)
+    nvalid: jnp.ndarray   # int32[F]       — true vertex count per factor
+
+
+class FleetPCGState(NamedTuple):
+    """Carry of the fleet PCG loop: per-lane iterate block plus the
+    per-lane routing/termination scalars.  Everything a serving engine
+    needs between ticks lives here, device-resident — admission scatters
+    new columns in, retirement gathers finished columns out, and the
+    carry itself never round-trips through the host."""
+
+    X: jnp.ndarray        # (L, n_pad)
+    R: jnp.ndarray        # (L, n_pad)
+    Z: jnp.ndarray        # (L, n_pad)
+    P: jnp.ndarray        # (L, n_pad)
+    rz: jnp.ndarray       # (L,)
+    it: jnp.ndarray       # int32 (L,)
+    active: jnp.ndarray   # bool  (L,)
+    bnorm: jnp.ndarray    # (L,)
+    fidx: jnp.ndarray     # int32 (L,) — lane's factor row in the fleet
+    tol: jnp.ndarray      # f32   (L,)
+    maxiter: jnp.ndarray  # int32 (L,)
+
+
+def fleet_matvec(fa: FleetArrays, fidx: jnp.ndarray,
+                 Y: jnp.ndarray) -> jnp.ndarray:
+    """Per-lane Laplacian matvec: lane ``l`` multiplies by the operator
+    of factor ``fidx[l]`` (edge lists gathered from the fleet stack).
+    Zero-weight padding edges contribute exactly zero."""
+    src = fa.src[fidx]
+    dst = fa.dst[fidx]
+    w = fa.w[fidx]
+
+    def one(s, d, ww, y):
+        diff = ww * (y[s] - y[d])
+        return jnp.zeros_like(y).at[s].add(diff).at[d].add(-diff)
+
+    return jax.vmap(one)(src, dst, w, Y)
+
+
+def fleet_precondition(fa: FleetArrays, fidx: jnp.ndarray, R: jnp.ndarray,
+                       *, f_levels: int, b_levels: int,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Per-lane ``(G D Gᵀ)⁺`` apply: forward masked trisolve → D⁻¹ scale
+    → backward masked trisolve, panels gathered per lane.  The level
+    bounds are bucket-wide maxima; lanes whose factor has fewer levels
+    stop selecting rows early (masked no-op), so over-padding the bound
+    never changes a lane's result."""
+    Y = trisolve_fleet(fa.fcols[fidx], fa.fvals[fidx], fa.flevel[fidx], R,
+                       n_levels=f_levels, interpret=interpret)
+    Z = Y * fa.dinv[fidx]
+    return trisolve_fleet(fa.bcols[fidx], fa.bvals[fidx], fa.blevel[fidx],
+                          Z, n_levels=b_levels, interpret=interpret)
+
+
+def _fleet_project(Y: jnp.ndarray, nvalid: jnp.ndarray) -> jnp.ndarray:
+    """Mean-zero projection restricted to each lane's true vertices.
+    Padding entries are forced (back) to exactly 0 so padded reductions
+    (norms, dot products) equal their unpadded counterparts."""
+    nv = jnp.maximum(nvalid, 1).astype(Y.dtype)
+    mean = jnp.sum(Y, axis=1) / nv
+    vmask = jnp.arange(Y.shape[1], dtype=jnp.int32)[None, :] \
+        < nvalid[:, None]
+    return jnp.where(vmask, Y - mean[:, None], 0.0)
+
+
+def pcg_fleet_init(fa: FleetArrays, fidx, B, tol, maxiter, *,
+                   f_levels: int, b_levels: int, project: bool = True,
+                   interpret: bool = True) -> FleetPCGState:
+    """Set up the fleet PCG carry for columns ``B`` of shape
+    ``(L, n_pad)`` (each zero-padded past its factor's true n).  ``tol``
+    and ``maxiter`` are per-lane arrays; lane ``l`` solves against
+    factor ``fidx[l]``."""
+    fidx = jnp.asarray(fidx, jnp.int32)
+    nvalid = fa.nvalid[fidx]
+    if project:
+        B = _fleet_project(B, nvalid)
+    bnorm = jnp.linalg.norm(B, axis=1)
+    bnorm = jnp.where(bnorm > 0, bnorm, 1.0)
+    R0 = B
+    Z0 = fleet_precondition(fa, fidx, R0, f_levels=f_levels,
+                            b_levels=b_levels, interpret=interpret)
+    if project:
+        Z0 = _fleet_project(Z0, nvalid)
+    rz0 = jnp.sum(R0 * Z0, axis=1)
+    act0 = (jnp.linalg.norm(B, axis=1) / bnorm) > tol
+    L = B.shape[0]
+    return FleetPCGState(
+        X=jnp.zeros_like(B), R=R0, Z=Z0, P=Z0, rz=rz0,
+        it=jnp.zeros(L, jnp.int32), active=act0, bnorm=bnorm, fidx=fidx,
+        tol=jnp.asarray(tol, jnp.float32),
+        maxiter=jnp.asarray(maxiter, jnp.int32))
+
+
+def _pcg_fleet_body(fa: FleetArrays, *, f_levels: int, b_levels: int,
+                    project: bool, interpret: bool):
+    """One frozen-lane fleet PCG iteration as a pure
+    ``FleetPCGState -> FleetPCGState`` closure over the **traced** fleet
+    arrays — the factor-as-data restatement of ``_pcg_batched_body``.
+    Lane independence is preserved: a lane's update reads only its own
+    row and its own factor's fleet rows, so trajectories do not depend
+    on batch composition, padding lanes, or step slicing."""
+    def body(s: FleetPCGState) -> FleetPCGState:
+        nvalid = fa.nvalid[s.fidx]
+        AP = fleet_matvec(fa, s.fidx, s.P)
+        pAp = jnp.sum(s.P * AP, axis=1)
+        alpha = jnp.where(s.active,
+                          s.rz / jnp.where(pAp != 0, pAp, 1.0), 0.0)
+        Xn = s.X + alpha[:, None] * s.P
+        Rn = s.R - alpha[:, None] * AP
+        Zn = fleet_precondition(fa, s.fidx, Rn, f_levels=f_levels,
+                                b_levels=b_levels, interpret=interpret)
+        if project:
+            Zn = _fleet_project(Zn, nvalid)
+        rz_new = jnp.sum(Rn * Zn, axis=1)
+        beta = jnp.where(s.active,
+                         rz_new / jnp.where(s.rz != 0, s.rz, 1.0), 0.0)
+        Pn = Zn + beta[:, None] * s.P
+        m = s.active[:, None]
+        X = jnp.where(m, Xn, s.X)
+        R = jnp.where(m, Rn, s.R)
+        Z = jnp.where(m, Zn, s.Z)
+        P = jnp.where(m, Pn, s.P)
+        rz = jnp.where(s.active, rz_new, s.rz)
+        it = s.it + s.active.astype(jnp.int32)
+        relres = jnp.linalg.norm(R, axis=1) / s.bnorm
+        active = s.active & (relres > s.tol) & (it < s.maxiter)
+        return FleetPCGState(X=X, R=R, Z=Z, P=P, rz=rz, it=it,
+                             active=active, bnorm=s.bnorm, fidx=s.fidx,
+                             tol=s.tol, maxiter=s.maxiter)
+
+    return body
+
+
+def pcg_fleet_step(fa: FleetArrays, state: FleetPCGState, *, k: int,
+                   f_levels: int, b_levels: int, project: bool = True,
+                   interpret: bool = True) -> FleetPCGState:
+    """Advance every active lane by up to ``k`` iterations (early exit
+    when all lanes freeze).  Step slicing is exact, as in
+    ``pcg_batched_step``."""
+    body = _pcg_fleet_body(fa, f_levels=f_levels, b_levels=b_levels,
+                           project=project, interpret=interpret)
+
+    def cond(c):
+        s, j = c
+        return jnp.any(s.active) & (j < k)
+
+    def stepped(c):
+        s, j = c
+        return body(s), j + 1
+
+    state, _ = jax.lax.while_loop(cond, stepped, (state, jnp.int32(0)))
+    return state
+
+
+def pcg_fleet_solve(fa: FleetArrays, fidx, B, tol, maxiter, *,
+                    f_levels: int, b_levels: int, project: bool = True,
+                    interpret: bool = True) -> FleetPCGState:
+    """One-shot fleet solve: init then iterate until every lane freezes.
+    Runs the same body as ``pcg_fleet_step``, so an engine slicing the
+    same solve into ticks takes bit-identical per-lane iterates."""
+    state = pcg_fleet_init(fa, fidx, B, tol, maxiter, f_levels=f_levels,
+                           b_levels=b_levels, project=project,
+                           interpret=interpret)
+    body = _pcg_fleet_body(fa, f_levels=f_levels, b_levels=b_levels,
+                           project=project, interpret=interpret)
+    return jax.lax.while_loop(lambda s: jnp.any(s.active), body, state)
+
+
+def pcg_fleet_result(state: FleetPCGState, n: int) -> PCGResult:
+    """Read a ``PCGResult`` off the fleet carry, sliced to true size."""
+    relres = jnp.linalg.norm(state.R, axis=1) / state.bnorm
+    return PCGResult(x=state.X[:, :n], iters=state.it, relres=relres,
+                     converged=relres <= state.tol)
 
 
 def pcg_np(matvec: Callable, precond: Callable, b: np.ndarray, *,

@@ -11,14 +11,24 @@ arrives.  A service amortizes further by keeping **many** live factors:
     res = cache.solve(gid, b)        # route by graph id
     res = cache.solve(gid, B)        # (nrhs, n) block → batched PCG
 
-``factor`` runs the wavefront engine, compacts the factor on device and
-derives both triangular level schedules on device; the resulting
-:class:`FactorHandle` caches the jitted preconditioner and one jitted
-PCG per rhs-batch shape (bounded LRU), so repeated solves against the
-same factor pay zero rebuild cost.  The cache itself is an LRU keyed by
-a content fingerprint of ``(graph, key)`` and evicts whole handles when
-the device-memory budget is exceeded.  ``factor_batched`` admits a fleet
-in one vmapped XLA program (``parac.factorize_batched``).
+``factor`` runs the wavefront engine, compacts the factor on device,
+derives both triangular level schedules on device, and **admits the
+factor to its shape-bucket fleet**: a :class:`FactorFleet` keyed by
+``n_pad = pow2(n)`` that stacks every member's padded Laplacian edges,
+row-indexed trisolve panels and D⁻¹ into one ``pcg.FleetArrays`` block.
+Solves — direct ``FactorHandle.solve`` and the continuous-batching
+``serve.SolveEngine`` alike — pass those arrays as **traced arguments**
+to shared fleet PCG programs, so every factor in a bucket shares one
+compiled step program and the two paths take bit-identical per-lane
+iterates.  ``factor_batched`` admits a whole fleet in two batched XLA
+programs (vmapped wavefront + vmapped schedule construction).
+
+The cache itself is an LRU keyed by a content fingerprint of
+``(graph, key)``; it evicts whole handles when the device-memory budget
+is exceeded and supports per-handle staleness (``ttl_s`` wall-clock /
+``max_age_ticks`` service ticks, clock injectable for tests) so a
+resubmitted *modified* graph ages its ancestor fingerprint out instead
+of accumulating near-duplicates under the budget.
 
 ``Solver`` keeps the original single-tenant surface (``factor`` then
 ``solve(B)`` against the most recent handle) as a thin subclass.
@@ -27,19 +37,24 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
+import weakref
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .laplacian import Graph, laplacian_matvec
-from .ref_ac import ACFactor
-from .parac import factorize_wavefront, factorize_batched
-from .trisolve import (DeviceSchedule, build_schedules_device,
-                       make_preconditioner_from_schedules)
-from .pcg import PCGResult, pcg_jax, pcg_jax_batched
+from .laplacian import Graph
+from .ref_ac import ACFactor, DeviceFactor
+from .parac import factorize_wavefront, factorize_batched, _next_pow2
+from .trisolve import PackedSchedule, build_schedules_batched, _pad_dev
+from .pcg import (PCGResult, FleetArrays, fleet_matvec,
+                  fleet_precondition, pcg_fleet_solve, pcg_fleet_result)
+
+
+_UNSET = object()
 
 
 def graph_fingerprint(g: Graph, key: Optional[jax.Array] = None) -> str:
@@ -56,23 +71,183 @@ def graph_fingerprint(g: Graph, key: Optional[jax.Array] = None) -> str:
     return h.hexdigest()
 
 
-@dataclasses.dataclass
+def _pad1(x: jnp.ndarray, size: int) -> jnp.ndarray:
+    """Zero-pad a 1-D device array to ``size`` (shared fill-pad helper
+    lives in ``trisolve._pad_dev``)."""
+    return _pad_dev(x, size, 0)
+
+
+def _grow(x: jnp.ndarray, shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Zero-pad ``x`` up to ``shape`` (every axis grows or stays)."""
+    if tuple(x.shape) == tuple(shape):
+        return x
+    return jnp.pad(x, [(0, t - s) for s, t in zip(x.shape, shape)])
+
+
+class _PaddedFactor:
+    """One factor's bucket-padded device arrays, ready for fleet
+    admission: padded Laplacian edge lists, forward/backward
+    :class:`PackedSchedule` panels and the padded inverse diagonal."""
+
+    __slots__ = ("n", "n_pad", "src", "dst", "w", "fwd", "bwd", "dinv")
+
+    def __init__(self, g: Graph, dev: DeviceFactor, fwd: PackedSchedule,
+                 bwd: PackedSchedule):
+        self.n = g.n
+        self.n_pad = fwd.n_pad
+        m_pad = max(_next_pow2(g.m), 1)
+        with jax.ensure_compile_time_eval():
+            self.src = _pad1(jnp.asarray(g.src, jnp.int32), m_pad)
+            self.dst = _pad1(jnp.asarray(g.dst, jnp.int32), m_pad)
+            self.w = _pad1(jnp.asarray(g.w, dev.vals.dtype), m_pad)
+            D = dev.D
+            dinv = jnp.where(D > 0, 1.0 / jnp.where(D > 0, D, 1.0), 0.0)
+            self.dinv = _pad1(dinv, self.n_pad)
+        self.fwd = fwd
+        self.bwd = bwd
+
+
+class FactorFleet:
+    """Stacked, bucket-padded device factors for one shape bucket
+    (``n_pad = pow2(n)``), plus the row bookkeeping that lets handles
+    come and go.
+
+    ``arrays`` is the live :class:`pcg.FleetArrays` stack — the traced
+    factor argument of every fleet PCG program.  Rows are claimed by
+    weak reference: a row frees itself when its owning handle dies (an
+    engine pinning an evicted handle keeps the row alive through the
+    same reference), and admission reuses dead rows before growing the
+    stack, so fleet memory is bounded by the peak number of *live*
+    handles in the bucket, not by churn.  Growth along any axis
+    (capacity, ``m_pad``, panel width ``K``) zero-pads — padding edges
+    carry zero weight and padded panel slots zero values, so existing
+    members' solves are unchanged.
+    """
+
+    def __init__(self, n_pad: int):
+        self.n_pad = n_pad
+        self.m_pad = 1
+        self.Kf = 1
+        self.Kb = 1
+        self.f_levels = 1          # bucket-wide static level bounds
+        self.b_levels = 1
+        self.arrays: Optional[FleetArrays] = None
+        self._rows: List[Optional[weakref.ref]] = []
+
+    @property
+    def capacity(self) -> int:
+        return 0 if self.arrays is None else int(self.arrays.nvalid.shape[0])
+
+    @property
+    def live_rows(self) -> int:
+        return sum(r is not None and r() is not None for r in self._rows)
+
+    @property
+    def bytes_per_row(self) -> int:
+        if self.arrays is None:
+            return 0
+        return sum(int(x.nbytes) // x.shape[0] for x in self.arrays)
+
+    @property
+    def device_bytes(self) -> int:
+        """Total resident footprint of the stack — including dead rows
+        awaiting reuse and pow2 capacity slack.  The stack is grow-only
+        (rows recycle, axes never shrink: in-flight lanes hold row
+        indices into it), so this can exceed the sum of live handles'
+        per-row accounting; ``FactorCache.stats()`` surfaces it as
+        ``fleet_device_bytes`` so budget users see the true number."""
+        return 0 if self.arrays is None else \
+            sum(int(x.nbytes) for x in self.arrays)
+
+    def _free_row(self) -> int:
+        for i, r in enumerate(self._rows):
+            if r is None or r() is None:
+                return i
+        return len(self._rows)
+
+    def admit(self, handle: "FactorHandle", pf: _PaddedFactor) -> int:
+        """Claim a row for ``pf`` (reusing a dead row when possible) and
+        scatter its arrays into the stack.  Returns the row index."""
+        assert pf.n_pad == self.n_pad
+        m_pad = max(self.m_pad, pf.src.shape[0])
+        Kf = max(self.Kf, pf.fwd.K)
+        Kb = max(self.Kb, pf.bwd.K)
+        row = self._free_row()
+        F = max(_next_pow2(row + 1), self.capacity)
+        np_ = self.n_pad
+        with jax.ensure_compile_time_eval():
+            a = self.arrays
+            if a is None:
+                a = FleetArrays(
+                    src=jnp.zeros((F, m_pad), jnp.int32),
+                    dst=jnp.zeros((F, m_pad), jnp.int32),
+                    w=jnp.zeros((F, m_pad), pf.w.dtype),
+                    fcols=jnp.zeros((F, np_, Kf), jnp.int32),
+                    fvals=jnp.zeros((F, np_, Kf), pf.fwd.vals.dtype),
+                    flevel=jnp.zeros((F, np_), jnp.int32),
+                    bcols=jnp.zeros((F, np_, Kb), jnp.int32),
+                    bvals=jnp.zeros((F, np_, Kb), pf.bwd.vals.dtype),
+                    blevel=jnp.zeros((F, np_), jnp.int32),
+                    dinv=jnp.zeros((F, np_), pf.dinv.dtype),
+                    nvalid=jnp.zeros((F,), jnp.int32))
+            else:
+                a = FleetArrays(
+                    src=_grow(a.src, (F, m_pad)),
+                    dst=_grow(a.dst, (F, m_pad)),
+                    w=_grow(a.w, (F, m_pad)),
+                    fcols=_grow(a.fcols, (F, np_, Kf)),
+                    fvals=_grow(a.fvals, (F, np_, Kf)),
+                    flevel=_grow(a.flevel, (F, np_)),
+                    bcols=_grow(a.bcols, (F, np_, Kb)),
+                    bvals=_grow(a.bvals, (F, np_, Kb)),
+                    blevel=_grow(a.blevel, (F, np_)),
+                    dinv=_grow(a.dinv, (F, np_)),
+                    nvalid=_grow(a.nvalid, (F,)))
+            self.arrays = FleetArrays(
+                src=a.src.at[row].set(_pad1(pf.src, m_pad)),
+                dst=a.dst.at[row].set(_pad1(pf.dst, m_pad)),
+                w=a.w.at[row].set(_pad1(pf.w, m_pad)),
+                fcols=a.fcols.at[row].set(_grow(pf.fwd.cols, (np_, Kf))),
+                fvals=a.fvals.at[row].set(_grow(pf.fwd.vals, (np_, Kf))),
+                flevel=a.flevel.at[row].set(pf.fwd.level_of),
+                bcols=a.bcols.at[row].set(_grow(pf.bwd.cols, (np_, Kb))),
+                bvals=a.bvals.at[row].set(_grow(pf.bwd.vals, (np_, Kb))),
+                blevel=a.blevel.at[row].set(pf.bwd.level_of),
+                dinv=a.dinv.at[row].set(pf.dinv),
+                nvalid=a.nvalid.at[row].set(jnp.int32(pf.n)))
+        self.m_pad, self.Kf, self.Kb = m_pad, Kf, Kb
+        self.f_levels = max(self.f_levels, pf.fwd.n_levels)
+        self.b_levels = max(self.b_levels, pf.bwd.n_levels)
+        ref = weakref.ref(handle)
+        if row == len(self._rows):
+            self._rows.append(ref)
+        else:
+            self._rows[row] = ref
+        return row
+
+
+@dataclasses.dataclass(eq=False)
 class FactorHandle:
-    """A factored graph ready to serve solves.  Everything needed on the
-    hot path (schedules, D⁻¹, edge arrays) is device-resident; jitted
-    solve closures are cached per rhs-batch shape in a bounded LRU."""
+    """A factored graph ready to serve solves.  The hot-path data lives
+    in the handle's shape-bucket :class:`FactorFleet` (``fleet`` +
+    ``fleet_row``) as stacked, bucket-padded device arrays; solves pass
+    them as traced arguments to the shared fleet PCG programs, so two
+    handles in one bucket share compiled code.  Jitted solve closures
+    are cached per rhs-batch shape in a bounded LRU."""
 
     graph: Graph
     factor: ACFactor
-    fwd: DeviceSchedule
-    bwd: DeviceSchedule
-    precondition: callable            # r (n,) or (n, nrhs) -> M⁺ r
-    _src: jnp.ndarray
-    _dst: jnp.ndarray
-    _w: jnp.ndarray
+    fleet: FactorFleet
+    fleet_row: int
+    n_levels_fwd: int
+    n_levels_bwd: int
     graph_id: str = ""
     max_cached_solves: int = 16
-    _cache: "OrderedDict[Tuple, callable]" = dataclasses.field(
+    born_s: float = 0.0
+    born_tick: int = 0
+    ttl_s: Optional[float] = None
+    max_age_ticks: Optional[int] = None
+    _cache: "OrderedDict[Tuple, Callable]" = dataclasses.field(
         default_factory=OrderedDict)
 
     @property
@@ -80,56 +255,99 @@ class FactorHandle:
         return self.graph.n
 
     @property
+    def n_pad(self) -> int:
+        return self.fleet.n_pad
+
+    @property
+    def n_levels(self) -> int:
+        """Forward critical-path length (levels) — the §6.2 figure of
+        merit surfaced by benchmarks."""
+        return self.n_levels_fwd
+
+    @property
     def device_bytes(self) -> int:
-        """Device-memory footprint of the handle's resident arrays
-        (factor CSC + both ELL schedules + operator edge lists) — what
-        the :class:`FactorCache` budget accounts."""
+        """Device-memory footprint the :class:`FactorCache` budget
+        accounts: the handle's row of the fleet stack (padded edges,
+        both panel sets, D⁻¹) plus the compact device factor."""
         dev = self.factor.to_device()
-        arrays = [dev.col_ptr, dev.rows, dev.vals, dev.D,
-                  self._src, self._dst, self._w]
-        for sched in (self.fwd, self.bwd):
-            arrays += [sched.row_ids, sched.cols, sched.vals, sched.level_of]
-        return int(sum(a.nbytes for a in arrays))
+        own = sum(int(a.nbytes)
+                  for a in (dev.col_ptr, dev.rows, dev.vals, dev.D))
+        return own + self.fleet.bytes_per_row
 
     def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
-        return laplacian_matvec(self._src, self._dst, self._w, self.n, x)
+        """``L x`` through the handle's fleet row (the padded edge lists
+        already resident in the bucket stack — no per-handle copies)."""
+        fa = self.fleet.arrays
+        Y = jnp.zeros((1, self.n_pad), x.dtype).at[0, :self.n].set(x)
+        return fleet_matvec(fa, self._fidx(1), Y)[0, :self.n]
+
+    def _fidx(self, L: int) -> jnp.ndarray:
+        return jnp.full((L,), self.fleet_row, jnp.int32)
+
+    def precondition(self, r: jnp.ndarray) -> jnp.ndarray:
+        """``r -> (G D Gᵀ)⁺ r`` for ``r`` of shape ``(n,)`` or
+        ``(n, nrhs)`` — the masked fleet trisolve applied through this
+        handle's fleet row (columns become lanes)."""
+        fa = self.fleet.arrays
+        fl, bl = self.fleet.f_levels, self.fleet.b_levels
+        n, n_pad = self.n, self.n_pad
+        if r.ndim == 1:
+            R = jnp.zeros((1, n_pad), r.dtype).at[0, :n].set(r)
+            out = fleet_precondition(fa, self._fidx(1), R,
+                                     f_levels=fl, b_levels=bl)
+            return out[0, :n]
+        R = jnp.zeros((r.shape[1], n_pad), r.dtype).at[:, :n].set(r.T)
+        out = fleet_precondition(fa, self._fidx(r.shape[1]), R,
+                                 f_levels=fl, b_levels=bl)
+        return out[:, :n].T
 
     def solve(self, B, *, tol: float = 1e-6, maxiter: int = 1000,
               project: bool = True) -> PCGResult:
         """PCG-solve ``L x = b``.  ``B``: ``(n,)`` for one rhs or
-        ``(nrhs, n)`` for a batch (all columns share this factor)."""
+        ``(nrhs, n)`` for a batch (all columns share this factor).
+        Runs the fleet PCG one-shot loop over the handle's bucket
+        arrays — the same body a :class:`serve.SolveEngine` ticks, so a
+        served request reproduces these iterates bit-exactly."""
         B = jnp.asarray(B)
         if B.ndim not in (1, 2) or B.shape[-1] != self.n:
             raise ValueError(
                 f"rhs must be (n,) or (nrhs, n) with n={self.n}, "
                 f"got {B.shape}")
-        key = (B.shape, str(B.dtype), float(tol), int(maxiter), project)
+        fl, bl = self.fleet.f_levels, self.fleet.b_levels
+        key = (B.shape, str(B.dtype), float(tol), int(maxiter), project,
+               fl, bl)
         fn = self._cache.get(key)
         if fn is None:
-            fn = jax.jit(self._build_solve(B.ndim, tol, maxiter, project))
+            fn = jax.jit(self._build_solve(B.ndim, tol, maxiter, project,
+                                           fl, bl))
             self._cache[key] = fn
             while len(self._cache) > self.max_cached_solves:
                 self._cache.popitem(last=False)
         else:
             self._cache.move_to_end(key)
-        return fn(B)
+        return fn(B, self.fleet.arrays)
 
     def _build_solve(self, ndim: int, tol: float, maxiter: int,
-                     project: bool):
-        mv = self.matvec
-        pc = self.precondition
-        if ndim == 1:
-            return lambda b: pcg_jax(mv, pc, b, tol=tol, maxiter=maxiter,
-                                     project=project)
-        # batched: matvec vmaps over the rhs axis; the preconditioner
-        # consumes the whole (n, nrhs) block in one fused trisolve.
-        bmv = jax.vmap(mv)
+                     project: bool, f_levels: int, b_levels: int):
+        n, n_pad, row = self.n, self.n_pad, self.fleet_row
 
-        def bpc(R):
-            return pc(R.T).T
+        def run(B, fa):
+            B2 = B if ndim == 2 else B[None]
+            L = B2.shape[0]
+            Bp = jnp.zeros((L, n_pad), B2.dtype).at[:, :n].set(B2)
+            state = pcg_fleet_solve(
+                fa, jnp.full((L,), row, jnp.int32), Bp,
+                jnp.full((L,), tol, jnp.float32),
+                jnp.full((L,), maxiter, jnp.int32),
+                f_levels=f_levels, b_levels=b_levels, project=project)
+            res = pcg_fleet_result(state, n)
+            if ndim == 1:
+                return PCGResult(x=res.x[0], iters=res.iters[0],
+                                 relres=res.relres[0],
+                                 converged=res.converged[0])
+            return res
 
-        return lambda B: pcg_jax_batched(bmv, bpc, B, tol=tol,
-                                         maxiter=maxiter, project=project)
+        return run
 
 
 class FactorCache:
@@ -141,6 +359,13 @@ class FactorCache:
     Admission evicts least-recently-used handles while the summed
     ``device_bytes`` exceeds ``memory_budget_bytes`` (or the handle
     count exceeds ``max_handles``) — the newest handle is never evicted.
+
+    Staleness: handles admitted with ``ttl_s`` (seconds, against the
+    injected ``clock``) or ``max_age_ticks`` (service ticks, advanced by
+    ``advance_ticks`` — a serving engine calls it once per tick) expire
+    on the next lookup/admission sweep, so resubmitting a modified graph
+    ages its ancestor fingerprint out of the budget.  Defaults (``None``)
+    never expire.
     """
 
     def __init__(self, *, chunk: int = 64, fill_slack: int = 32,
@@ -148,7 +373,10 @@ class FactorCache:
                  dtype=np.float32,
                  memory_budget_bytes: Optional[int] = None,
                  max_handles: Optional[int] = None,
-                 max_cached_solves: int = 16):
+                 max_cached_solves: int = 16,
+                 ttl_s: Optional[float] = None,
+                 max_age_ticks: Optional[int] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.chunk = chunk
         self.fill_slack = fill_slack
         self.strict = strict
@@ -157,34 +385,94 @@ class FactorCache:
         self.memory_budget_bytes = memory_budget_bytes
         self.max_handles = max_handles
         self.max_cached_solves = max_cached_solves
+        self.ttl_s = ttl_s
+        self.max_age_ticks = max_age_ticks
+        self._clock = clock if clock is not None else time.monotonic
+        self.now_ticks = 0
+        # one-way latch: True once any handle was admitted/refreshed
+        # with a staleness policy — lets sweep_stale() stay O(1) on the
+        # per-submit hot path of services that never use TTLs
+        self._has_mortal = False
         self._handles: "OrderedDict[str, FactorHandle]" = OrderedDict()
+        self._fleets: Dict[int, FactorFleet] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.expirations = 0
+
+    # -- staleness ----------------------------------------------------------
+    def advance_ticks(self, k: int = 1) -> None:
+        """Advance the service tick clock (engines call this per tick)."""
+        self.now_ticks += k
+
+    def _stale(self, h: FactorHandle, now_s: float) -> bool:
+        if h.ttl_s is not None and now_s - h.born_s > h.ttl_s:
+            return True
+        if h.max_age_ticks is not None and \
+                self.now_ticks - h.born_tick > h.max_age_ticks:
+            return True
+        return False
+
+    def _refresh_policy(self, h: FactorHandle, ttl_s, max_age_ticks) -> None:
+        """Explicit staleness arguments on a cache *hit* re-admit the
+        handle: its policy is replaced and its birth stamps reset, so
+        ``factor(..., ttl_s=...)`` means the same thing whether it
+        factors or hits."""
+        if ttl_s is _UNSET and max_age_ticks is _UNSET:
+            return
+        if ttl_s is not _UNSET:
+            h.ttl_s = ttl_s
+        if max_age_ticks is not _UNSET:
+            h.max_age_ticks = max_age_ticks
+        h.born_s = self._clock()
+        h.born_tick = self.now_ticks
+        if h.ttl_s is not None or h.max_age_ticks is not None:
+            self._has_mortal = True
+
+    def sweep_stale(self) -> int:
+        """Evict every expired handle; returns how many were evicted.
+        Runs automatically on admission and ``get`` lookups (O(1) until
+        a staleness policy is first used)."""
+        if not self._has_mortal:
+            return 0
+        now_s = self._clock()
+        stale = [gid for gid, h in self._handles.items()
+                 if self._stale(h, now_s)]
+        for gid in stale:
+            del self._handles[gid]
+            self.expirations += 1
+        return len(stale)
 
     # -- admission ----------------------------------------------------------
     def factor(self, g: Graph, key: jax.Array, *,
-               graph_id: Optional[str] = None) -> FactorHandle:
+               graph_id: Optional[str] = None, ttl_s=_UNSET,
+               max_age_ticks=_UNSET) -> FactorHandle:
         """Factor ``g`` (cache hit if an identical ``(graph, key)`` is
-        already live) and admit the handle."""
+        already live and fresh) and admit the handle."""
+        self.sweep_stale()
         gid = graph_id if graph_id is not None else graph_fingerprint(g, key)
         got = self._handles.get(gid)
         if got is not None:
             self.hits += 1
             self._handles.move_to_end(gid)
+            self._refresh_policy(got, ttl_s, max_age_ticks)
             return got
         self.misses += 1
         f = factorize_wavefront(
             g, key, chunk=self.chunk, fill_slack=self.fill_slack,
             strict=self.strict, max_retries=self.max_retries,
             dtype=self.dtype)
-        return self.attach(g, f, graph_id=gid)
+        return self.attach(g, f, graph_id=gid, ttl_s=ttl_s,
+                           max_age_ticks=max_age_ticks)
 
     def factor_batched(self, gs: Sequence[Graph], keys, *,
-                       graph_ids: Optional[Sequence[str]] = None
+                       graph_ids: Optional[Sequence[str]] = None,
+                       ttl_s=_UNSET, max_age_ticks=_UNSET
                        ) -> List[FactorHandle]:
         """Admit a fleet: graphs not already cached factor together in
-        one vmapped XLA program (``parac.factorize_batched``)."""
+        one vmapped XLA program (``parac.factorize_batched``) and their
+        trisolve schedules derive in one vmapped pass alongside."""
+        self.sweep_stale()
         gs = list(gs)
         if not isinstance(keys, jax.Array):
             keys = jnp.stack(list(keys))
@@ -193,37 +481,57 @@ class FactorCache:
         todo = [i for i, gid in enumerate(gids) if gid not in self._handles]
         self.hits += len(gs) - len(todo)
         self.misses += len(todo)
+        for gid in set(gids) - {gids[i] for i in todo}:
+            self._refresh_policy(self._handles[gid], ttl_s, max_age_ticks)
         # strong refs for the whole call: a tight budget may LRU-evict a
         # sibling of this very fleet mid-admission — the caller still gets
         # every handle back (evicted ones simply aren't cached any more).
         fleet = {gid: self._handles[gid] for gid in gids
                  if gid in self._handles}
         if todo:
-            fs = factorize_batched(
+            fs, scheds = factorize_batched(
                 [gs[i] for i in todo], jnp.stack([keys[i] for i in todo]),
                 chunk=self.chunk, fill_slack=self.fill_slack,
                 strict=self.strict, max_retries=self.max_retries,
-                dtype=self.dtype)
-            for i, f in zip(todo, fs):
-                fleet[gids[i]] = self.attach(gs[i], f, graph_id=gids[i])
+                dtype=self.dtype, with_schedules=True)
+            for i, f, sch in zip(todo, fs, scheds):
+                fleet[gids[i]] = self.attach(
+                    gs[i], f, graph_id=gids[i], schedules=sch,
+                    ttl_s=ttl_s, max_age_ticks=max_age_ticks)
         for gid in gids:
             if gid in self._handles:
                 self._handles.move_to_end(gid)
         return [fleet[gid] for gid in gids]
 
     def attach(self, g: Graph, f: ACFactor, *,
-               graph_id: Optional[str] = None) -> FactorHandle:
+               graph_id: Optional[str] = None,
+               schedules: Optional[Tuple[PackedSchedule,
+                                         PackedSchedule]] = None,
+               ttl_s=_UNSET, max_age_ticks=_UNSET) -> FactorHandle:
         """Wrap an existing factor (e.g. from the sequential oracle) in a
-        solve handle — same lifecycle, no re-factorization."""
+        solve handle and admit it to its shape-bucket fleet — same
+        lifecycle, no re-factorization.  ``schedules`` short-circuits the
+        per-factor schedule build when a batched one already ran."""
         gid = graph_id if graph_id is not None else graph_fingerprint(g)
-        fwd, bwd = build_schedules_device(f)
+        dev = f.to_device()
+        if schedules is None:
+            schedules = build_schedules_batched([dev])[0]
+        fwd, bwd = schedules
+        pf = _PaddedFactor(g, dev, fwd, bwd)
+        fleet = self._fleets.get(pf.n_pad)
+        if fleet is None:
+            fleet = self._fleets[pf.n_pad] = FactorFleet(pf.n_pad)
         handle = FactorHandle(
-            graph=g, factor=f, fwd=fwd, bwd=bwd,
-            precondition=make_preconditioner_from_schedules(
-                fwd, bwd, f.to_device().D),
-            _src=jnp.asarray(g.src), _dst=jnp.asarray(g.dst),
-            _w=jnp.asarray(g.w, dtype=jnp.asarray(f.vals).dtype),
-            graph_id=gid, max_cached_solves=self.max_cached_solves)
+            graph=g, factor=f, fleet=fleet, fleet_row=-1,
+            n_levels_fwd=fwd.n_levels, n_levels_bwd=bwd.n_levels,
+            graph_id=gid, max_cached_solves=self.max_cached_solves,
+            born_s=self._clock(), born_tick=self.now_ticks,
+            ttl_s=self.ttl_s if ttl_s is _UNSET else ttl_s,
+            max_age_ticks=(self.max_age_ticks if max_age_ticks is _UNSET
+                           else max_age_ticks))
+        handle.fleet_row = fleet.admit(handle, pf)
+        if handle.ttl_s is not None or handle.max_age_ticks is not None:
+            self._has_mortal = True
         self._handles[gid] = handle
         self._handles.move_to_end(gid)
         self._shrink()
@@ -242,12 +550,13 @@ class FactorCache:
 
     # -- lookup / routing ---------------------------------------------------
     def peek(self, graph_id: str) -> Optional[FactorHandle]:
-        """Non-faulting lookup that does not touch LRU order (lets a
-        serving engine check whether its pinned handle is still the
-        cached one)."""
+        """Non-faulting lookup that does not touch LRU order or sweep
+        staleness (lets a serving engine check whether its pinned handle
+        is still the cached one)."""
         return self._handles.get(graph_id)
 
     def get(self, graph_id: str) -> FactorHandle:
+        self.sweep_stale()
         handle = self._handles.get(graph_id)
         if handle is None:
             raise KeyError(f"no live factor for graph_id={graph_id!r} "
@@ -269,6 +578,11 @@ class FactorCache:
     def device_bytes(self) -> int:
         return sum(h.device_bytes for h in self._handles.values())
 
+    @property
+    def fleets(self) -> Dict[int, FactorFleet]:
+        """Live shape-bucket fleets keyed by ``n_pad`` (read-only view)."""
+        return dict(self._fleets)
+
     def evict(self, graph_id: str) -> None:
         if self._handles.pop(graph_id, None) is not None:
             self.evictions += 1
@@ -279,7 +593,11 @@ class FactorCache:
     def stats(self) -> Dict[str, int]:
         return dict(handles=len(self._handles), hits=self.hits,
                     misses=self.misses, evictions=self.evictions,
-                    device_bytes=self.device_bytes)
+                    expirations=self.expirations,
+                    fleets=len(self._fleets),
+                    device_bytes=self.device_bytes,
+                    fleet_device_bytes=sum(f.device_bytes
+                                           for f in self._fleets.values()))
 
     def solve(self, graph_id: str, B, **kw) -> PCGResult:
         return self.get(graph_id).solve(B, **kw)

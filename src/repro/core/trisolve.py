@@ -20,6 +20,7 @@ Two schedule builders live here:
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import List, Tuple
 
 import numpy as np
@@ -27,6 +28,9 @@ import jax
 import jax.numpy as jnp
 
 from .ref_ac import ACFactor, DeviceFactor
+# shared with the wavefront engine: one pow2 bucket-rounding policy and
+# one run-rank (scatter offset) idiom across pools, schedules and fleets
+from .parac import _next_pow2, _run_ranks
 
 
 @dataclasses.dataclass
@@ -184,17 +188,12 @@ def _pack_ell_panels(dst, src, val, level, *, n: int, K: int):
     """Scatter solve edges into level-sorted ELL panels, one pass:
     rows sorted by level, each row's in-edges packed into its K-slot.
     Eager on purpose — see ``_propagate_levels``."""
-    E = dst.shape[0]
     row_ids = jnp.argsort(level, stable=True).astype(jnp.int32)
     row_rank = jnp.zeros(n, jnp.int32).at[row_ids].set(
         jnp.arange(n, dtype=jnp.int32))
     eorder = jnp.argsort(dst, stable=True)
     sd, ss, swv = dst[eorder], src[eorder], val[eorder]
-    eidx = jnp.arange(E, dtype=jnp.int32)
-    is_start = jnp.concatenate([jnp.ones((1,), bool), sd[1:] != sd[:-1]])
-    run_start = jax.lax.associative_scan(
-        jnp.maximum, jnp.where(is_start, eidx, 0))
-    rank = eidx - run_start
+    rank = _run_ranks(sd)
     dest = row_rank[sd] * K + rank
     cols = jnp.zeros(n * K, jnp.int32).at[dest].set(ss).reshape(n, K)
     vals = jnp.zeros(n * K, val.dtype).at[dest].set(swv).reshape(n, K)
@@ -253,6 +252,146 @@ def build_schedules_device(
     fwd = _schedule_from_edges_device(n, dev.rows, cols_of, dev.vals)
     bwd = _schedule_from_edges_device(n, bdst, bsrc, dev.vals)
     return fwd, bwd
+
+
+# ---------------------------------------------------------------------------
+# Batched (fleet) schedule construction — row-indexed panels for the
+# shape-bucket mega-batching path
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackedSchedule:
+    """One triangular solve as **row-indexed** ELL panels: row ``i``'s
+    in-edges occupy slot ``i`` of ``cols``/``vals`` (zero-padded to K),
+    with ``level_of[i]`` its dependency level.  This is the layout the
+    traced-argument solvers (``kernels.ops.trisolve_masked`` /
+    ``trisolve_fleet``) consume: no level-sorted slabs, no host slicing
+    metadata — the level loop masks on ``level_of`` instead, so panels
+    from different factors stack into one fleet array and share one
+    compiled program.  Unlike :class:`DeviceSchedule`, the backward
+    schedule is kept in *original* index space (no flip): the masked
+    level loop needs no topological index ordering."""
+
+    n: int                  # true rows (rows n..n_pad are phantom)
+    n_pad: int
+    n_levels: int           # this factor's own level count (host int)
+    K: int
+    cols: jnp.ndarray       # int32[n_pad, K]
+    vals: jnp.ndarray       # f32[n_pad, K]
+    level_of: jnp.ndarray   # int32[n_pad] (0 for phantom rows)
+
+    @property
+    def device_bytes(self) -> int:
+        return int(self.cols.nbytes + self.vals.nbytes
+                   + self.level_of.nbytes)
+
+
+def _propagate_levels_fleet(dst, src, *, n: int):
+    """``_propagate_levels`` vmapped over a padded fleet: ``dst``/``src``
+    are ``(B, E)`` with invalid (padding) edges marked ``dst == n`` so
+    their relaxation drops.  One batched ``while_loop`` runs until every
+    member converges — the whole fleet's level propagation is a single
+    XLA program instead of B sequential ones."""
+    return jax.vmap(partial(_propagate_levels, n=n))(dst, src)
+
+
+def _pack_row_panels_fleet(dst, src, val, *, n: int, K: int):
+    """Row-indexed ELL packing, vmapped: edge ``e`` lands in slot
+    ``(dst_e, rank_e)`` where rank is the edge's position within its
+    dst group.  Padding edges (``dst == n``) scatter out of range and
+    drop.  Mirrors ``_pack_ell_panels`` minus the level-sort indirection
+    (the masked solvers index panels by row id, not level rank)."""
+    def one(d, s, v):
+        eorder = jnp.argsort(d, stable=True)
+        sd, ss, sv = d[eorder], s[eorder], v[eorder]
+        rank = _run_ranks(sd)
+        dest = sd * K + rank
+        cols = jnp.zeros(n * K, jnp.int32).at[dest].set(
+            ss, mode="drop").reshape(n, K)
+        vals = jnp.zeros(n * K, v.dtype).at[dest].set(
+            sv, mode="drop").reshape(n, K)
+        return cols, vals
+
+    return jax.vmap(one)(dst, src, val)
+
+
+def _pad_dev(x, size, fill):
+    return jnp.concatenate(
+        [x, jnp.full((size - x.shape[0],), fill, x.dtype)]) \
+        if x.shape[0] != size else x
+
+
+def build_schedules_batched(
+        devs: "List[DeviceFactor]"
+) -> List[Tuple[PackedSchedule, PackedSchedule]]:
+    """Forward/backward :class:`PackedSchedule`\\ s for a whole fleet of
+    device factors in one shot: the level propagation (the
+    ``while_loop`` half of ``build_schedules_device``) runs **once**,
+    vmapped over a ``(2B, E_pad)`` edge batch holding every factor's
+    forward and backward solve edges, and the panel packing is likewise
+    one vmapped scatter.  Per-factor results are sliced back to each
+    factor's own power-of-two padded shape (``n_pad = pow2(n)``,
+    ``K = pow2(max in-degree)``) so a factor's padded schedule is a
+    function of its content alone — independent of which fleet it was
+    built with.  Forward edges: CSC entry (i ∈ col k) ⇒ dst=i, src=k;
+    backward: dst=k, src=i, in original index space.
+    """
+    if not devs:
+        return []
+    B = len(devs)
+    ns = [d.n for d in devs]
+    nnzs = [d.nnz for d in devs]
+    n_bat = _next_pow2(max(ns))
+    E_bat = max(_next_pow2(max(nnzs)), 1)
+    # all inputs are concrete device buffers (DeviceFactor's contract),
+    # so everything below dispatches eagerly — deliberately NOT wrapped
+    # in ensure_compile_time_eval: jax 0.4.x mis-tracks vmap-of-while
+    # tracers under that context (UnexpectedTracerError).
+    DST, SRC, VAL = [], [], []
+    for d in devs:
+        counts = jnp.diff(d.col_ptr)
+        cols_of = jnp.repeat(jnp.arange(d.n, dtype=jnp.int32), counts,
+                             total_repeat_length=d.nnz)
+        rows = d.rows.astype(jnp.int32)
+        vals = d.vals
+        # forward then (later) backward rows share the padded vals
+        DST.append(_pad_dev(rows, E_bat, n_bat))
+        SRC.append(_pad_dev(cols_of, E_bat, 0))
+        VAL.append(_pad_dev(vals, E_bat, 0))
+    # second half of the batch: backward solve edges (dst=k, src=i)
+    for b in range(B):
+        DST.append(jnp.where(DST[b] < n_bat, SRC[b], n_bat))
+        SRC.append(jnp.where(DST[b] < n_bat, DST[b], 0))
+    VAL = VAL + VAL
+    DSTa = jnp.stack(DST)
+    SRCa = jnp.stack(SRC)
+    VALa = jnp.stack(VAL)
+    levels = _propagate_levels_fleet(DSTa, SRCa, n=n_bat)
+    indeg = jax.vmap(
+        lambda d: jnp.zeros(n_bat, jnp.int32).at[d].add(
+            1, mode="drop"))(DSTa)
+    K_bat = max(_next_pow2(int(indeg.max())), 1)
+    COLS, VALS = _pack_row_panels_fleet(DSTa, SRCa, VALa,
+                                        n=n_bat, K=K_bat)
+    levels_h = np.asarray(levels)
+    kmax_h = np.asarray(indeg.max(axis=1))
+
+    out: List[Tuple[PackedSchedule, PackedSchedule]] = []
+    for b in range(B):
+        halves = []
+        for row in (b, B + b):               # forward, then backward
+            n = ns[b]
+            n_pad = _next_pow2(n)
+            K = max(_next_pow2(int(kmax_h[row])), 1)
+            cols = jax.lax.slice(COLS[row], (0, 0), (n_pad, K))
+            vals = jax.lax.slice(VALS[row], (0, 0), (n_pad, K))
+            lvl = jax.lax.slice(levels[row], (0,), (n_pad,))
+            halves.append(PackedSchedule(
+                n=n, n_pad=n_pad,
+                n_levels=int(levels_h[row, :n].max(initial=0)) + 1,
+                K=K, cols=cols, vals=vals, level_of=lvl))
+        out.append((halves[0], halves[1]))
+    return out
 
 
 def make_ell_solver(sched: DeviceSchedule, flip: bool = False):

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from .sample_clique import sample_clique_pallas, INVALID_ID
-from .spmv import ell_spmv_pallas, ell_spmv_multi_pallas
+from .spmv import (ell_spmv_pallas, ell_spmv_multi_pallas,
+                   ell_spmv_fleet_pallas)
 from . import ref as kref
 
 
@@ -115,6 +116,48 @@ def trisolve_levels(level_rows, level_cols, level_vals, b, flip: bool = False,
                                  interpret=interpret)
         y = y.at[rows].set(upd)
     return y[::-1] if flip else y
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ell_spmv_fleet(cols, vals, x, *, interpret: bool = True):
+    """Lane-batched ELL SpMV; cols/vals: [L, R, K], x: [L, n] → [L, R]."""
+    return ell_spmv_fleet_pallas(cols, vals, x, interpret=interpret)
+
+
+def trisolve_masked(cols, vals, level_of, y, *, n_levels: int,
+                    interpret: bool = True):
+    """Level-masked unit-triangular solve with **traced** panel arguments.
+
+    ``cols``/``vals`` are row-indexed ELL panels ``(n, K)`` (row ``i``'s
+    in-edges live in slot ``i``, zero-padded), ``level_of`` the dependency
+    level per row, ``y`` the rhs ``(n,)``.  Unlike ``trisolve_panels``,
+    nothing here is a closed-over constant or host-sliced slab: the whole
+    schedule rides in as arrays, and the only static is the level-loop
+    bound — so one compiled program serves every factor whose padded
+    shapes (and level bound) match.  Each level runs the full-row SpMV
+    and commits only the rows at that level; rows above ``level_of``'s
+    true maximum are never selected, so over-padding ``n_levels`` (to a
+    bucket-wide bound) does not change the result.
+    """
+    def body(lv, y):
+        contrib = ell_spmv(cols, vals, y, interpret=interpret)
+        return jnp.where(level_of == lv, y - contrib, y)
+
+    return jax.lax.fori_loop(1, n_levels, body, y)
+
+
+def trisolve_fleet(cols, vals, level_of, y, *, n_levels: int,
+                   interpret: bool = True):
+    """Lane-batched ``trisolve_masked``: cols/vals ``(L, n, K)``,
+    ``level_of`` ``(L, n)``, ``y`` ``(L, n)`` — each lane solves against
+    its own panels (gathered from a stacked factor fleet by the caller).
+    The level loop is shared; a lane whose factor has fewer levels than
+    the static bound simply stops selecting rows early."""
+    def body(lv, y):
+        contrib = ell_spmv_fleet(cols, vals, y, interpret=interpret)
+        return jnp.where(level_of == lv, y - contrib, y)
+
+    return jax.lax.fori_loop(1, n_levels, body, y)
 
 
 def trisolve_panels(sched, b, flip: bool = False, interpret: bool = True):

@@ -59,6 +59,44 @@ def ell_spmv_pallas(cols, vals, x, *, block_rows: int = 256,
     )(cols, vals, x)[:, 0]
 
 
+def _spmv_fleet_kernel(cols_ref, vals_ref, x_ref, y_ref):
+    cols = cols_ref[0]                   # (Rb, K) int32 — one lane's tile
+    vals = vals_ref[0]                   # (Rb, K) f32
+    x = x_ref[0]                         # (n,) f32 — the lane's own vector
+    contrib = vals * x[cols]
+    y_ref[0, :] = jnp.sum(contrib, axis=1)
+
+
+def ell_spmv_fleet_pallas(cols, vals, x, *, block_rows: int = 256,
+                          interpret: bool = True):
+    """Lane-batched ELL SpMV: Y[l, i] = Σ_k vals[l,i,k] · x[l, cols[l,i,k]].
+
+    cols/vals: [L, R, K]; x: [L, n].  Every lane carries its *own* panel
+    arrays — the shape-bucket mega-batching formulation, where panels are
+    gathered per lane from a stacked fleet of factors and passed as traced
+    arguments (no per-factor closure constants, so one compiled program
+    serves every factor in the bucket).  The grid walks (lane, row-tile);
+    each step gathers the lane's x at the tile's column indices,
+    multiplies by the tile's values and reduces along K — identical
+    per-tile math to ``ell_spmv_pallas``, so a lane's result does not
+    depend on how many lanes share the batch.
+    """
+    L, R, K = cols.shape
+    n = x.shape[1]
+    Rb = _pick_block_rows(R, block_rows)
+    grid = (L, R // Rb)
+    return pl.pallas_call(
+        _spmv_fleet_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, Rb, K), lambda l, r: (l, r, 0)),
+                  pl.BlockSpec((1, Rb, K), lambda l, r: (l, r, 0)),
+                  pl.BlockSpec((1, n), lambda l, r: (l, 0))],
+        out_specs=pl.BlockSpec((1, Rb), lambda l, r: (l, r)),
+        out_shape=jax.ShapeDtypeStruct((L, R), vals.dtype),
+        interpret=interpret,
+    )(cols, vals, x)
+
+
 def _spmv_multi_kernel(cols_ref, vals_ref, x_ref, y_ref):
     cols = cols_ref[...]                 # (Rb, K) int32, padded with 0
     vals = vals_ref[...]                 # (Rb, K) f32, padded with 0.0

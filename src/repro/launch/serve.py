@@ -2,13 +2,23 @@
 a generated graph suite, replaying a mixed request trace.
 
     PYTHONPATH=src python -m repro.launch.serve --suite tiny \
-        --requests 24 --slots 8 --iters-per-tick 8
+        --requests 24 --slots 8 --iters-per-tick 8 --arrival-rate 50
 
-Spins up a :class:`FactorCache` (batched fleet factorization), submits a
-seeded trace of interleaved single- and multi-RHS requests with mixed
-tolerances, drains the :class:`SolveEngine`, and reports throughput and
-latency percentiles — the service-level view of the paper's
-factor-once / serve-many economics.
+Spins up a :class:`FactorCache` (batched fleet factorization + batched
+schedule construction), submits a seeded trace of interleaved single-
+and multi-RHS requests with mixed tolerances, drains the device-resident
+:class:`SolveEngine`, and reports throughput and latency percentiles —
+the service-level view of the paper's factor-once / serve-many
+economics.
+
+With ``--arrival-rate R`` the trace becomes **open-loop**: request
+inter-arrival gaps are seeded Poisson (exponential with mean ``1/R``
+seconds) and the replay submits each request at its arrival time rather
+than all at once, so the report separates *queueing delay*
+(submit → lane admission) and *end-to-end* latency from pure *service*
+latency (admission → finish).  Without it the replay is closed-loop
+(every request arrives at t=0) and queueing delay measures head-of-line
+blocking only.
 """
 from __future__ import annotations
 
@@ -28,14 +38,17 @@ def percentile(xs, q):
 
 
 def make_trace(gids, sizes, n_requests, *, seed=0, max_nrhs=4,
-               tols=(1e-4, 1e-6)):
+               tols=(1e-4, 1e-6), arrival_rate=None):
     """Seeded mixed trace: round-robin-ish graph choice, ~1/3 multi-RHS,
     alternating tolerances — deliberately interleaved so consecutive
-    requests rarely share a factor."""
+    requests rarely share a factor.  All randomness (rhs content *and*
+    Poisson arrival gaps) comes from the one seeded generator, so a
+    trace is reproducible across runs and artifacts."""
     import numpy as np
     from repro.serve import SolveRequest
     rng = np.random.default_rng(seed)
     reqs = []
+    arrival = 0.0
     for rid in range(n_requests):
         gid = gids[rid % len(gids)]
         n = sizes[gid]
@@ -43,8 +56,11 @@ def make_trace(gids, sizes, n_requests, *, seed=0, max_nrhs=4,
             if (max_nrhs > 1 and rid % 3 == 2) else 1
         b = rng.normal(size=(nrhs, n) if nrhs > 1 else n).astype(np.float32)
         b -= b.mean(axis=-1, keepdims=True)
+        if arrival_rate:
+            arrival += float(rng.exponential(1.0 / arrival_rate))
         reqs.append(SolveRequest(rid=rid, graph_id=gid, b=b,
-                                 tol=tols[rid % len(tols)], maxiter=500))
+                                 tol=tols[rid % len(tols)], maxiter=500,
+                                 arrival_s=arrival))
     return reqs
 
 
@@ -76,14 +92,28 @@ def build_service(*, suite="tiny", slots=8, iters_per_tick=8, chunk=128,
 
 
 def replay_trace(eng, trace):
-    """Submit a trace, drain the engine, return service metrics."""
+    """Replay a trace (open-loop when requests carry arrival offsets:
+    each request is submitted at its ``arrival_s``), drain the engine,
+    return service metrics.  Queueing delay (submit → admission) and
+    end-to-end latency (submit → finish) are reported separately from
+    service latency (admission → finish)."""
     import numpy as np
+    from collections import deque
+    pending = deque(trace)
+    done = []
     t0 = time.perf_counter()
-    for r in trace:
-        eng.submit(r)
-    done = eng.run_until_drained()
+    while pending or eng.busy:
+        now = time.perf_counter() - t0
+        while pending and pending[0].arrival_s <= now:
+            eng.submit(pending.popleft())
+        if eng.busy:
+            done.extend(eng.tick())
+        elif pending:
+            time.sleep(min(pending[0].arrival_s - now, 0.01))
     t_serve = time.perf_counter() - t0
-    lat = [r.latency_s for r in done]
+    e2e = [r.latency_s for r in done]
+    queue = [r.queue_wait_s for r in done]
+    service = [r.service_s for r in done]
     rhs_total = sum(r.nrhs for r in done)
     return dict(
         requests=len(trace), completed=len(done), rhs_total=rhs_total,
@@ -91,15 +121,20 @@ def replay_trace(eng, trace):
         serve_s=t_serve,
         requests_per_s=len(done) / t_serve if t_serve > 0 else 0.0,
         rhs_per_s=rhs_total / t_serve if t_serve > 0 else 0.0,
-        latency_p50_s=percentile(lat, 50),
-        latency_p95_s=percentile(lat, 95),
-        latency_max_s=percentile(lat, 100),
+        latency_p50_s=percentile(e2e, 50),
+        latency_p95_s=percentile(e2e, 95),
+        latency_max_s=percentile(e2e, 100),
+        queue_wait_p50_s=percentile(queue, 50),
+        queue_wait_p95_s=percentile(queue, 95),
+        service_p50_s=percentile(service, 50),
+        service_p95_s=percentile(service, 95),
         iters_total=int(sum(int(np.sum(r.iters)) for r in done))), done
 
 
 def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
                 max_nrhs=4, chunk=128, fill_slack=32, seed=0,
-                memory_budget_mb=None, warmup_requests=0):
+                memory_budget_mb=None, warmup_requests=0,
+                arrival_rate=None):
     """Build the service, replay a trace, return a metrics dict.  With
     ``warmup_requests`` > 0 a throwaway trace is replayed first through
     the *same* engine so the measured replay excludes jit compiles."""
@@ -109,19 +144,26 @@ def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
         memory_budget_mb=memory_budget_mb)
     gids = list(sizes)
     if warmup_requests:
-        # same seed: the warmup trace is a prefix-identical replay, so
-        # every (graph, nrhs) init shape and group step shape of the
-        # measured trace is already compiled
+        # same seed: the warmup trace is a prefix-identical replay (sans
+        # arrival gaps), so every admission shape and bucket step program
+        # of the measured trace is already compiled
         replay_trace(eng, make_trace(gids, sizes, warmup_requests,
                                      seed=seed,
                                      max_nrhs=min(max_nrhs, slots)))
     trace = make_trace(gids, sizes, requests, seed=seed,
-                       max_nrhs=min(max_nrhs, slots))
+                       max_nrhs=min(max_nrhs, slots),
+                       arrival_rate=arrival_rate)
     ticks_before = eng.ticks                 # exclude warmup from metrics
     metrics, done = replay_trace(eng, trace)
+    ticks = eng.ticks - ticks_before
     metrics = dict(suite=suite, graphs=len(gids), slots=slots,
                    iters_per_tick=iters_per_tick, factor_s=t_factor,
-                   ticks=eng.ticks - ticks_before, cache=eng.cache.stats(),
+                   ticks=ticks,
+                   ticks_per_s=(ticks / metrics["serve_s"]
+                                if metrics["serve_s"] > 0 else 0.0),
+                   arrival_rate=arrival_rate, seed=seed,
+                   cache=eng.cache.stats(),
+                   engine=eng.stats().as_dict(),
                    **metrics)
     return metrics, done
 
@@ -135,6 +177,9 @@ def main():
     ap.add_argument("--max-nrhs", type=int, default=4)
     ap.add_argument("--chunk", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="open-loop Poisson arrival rate (requests/sec); "
+                         "omit for closed-loop (all arrive at t=0)")
     ap.add_argument("--memory-budget-mb", type=int, default=None)
     ap.add_argument("--json", default=None,
                     help="write service metrics to this JSON file")
@@ -144,19 +189,26 @@ def main():
         suite=args.suite, requests=args.requests, slots=args.slots,
         iters_per_tick=args.iters_per_tick, max_nrhs=args.max_nrhs,
         chunk=args.chunk, seed=args.seed,
-        memory_budget_mb=args.memory_budget_mb)
+        memory_budget_mb=args.memory_budget_mb,
+        arrival_rate=args.arrival_rate)
 
     print(f"suite={metrics['suite']} graphs={metrics['graphs']} "
           f"factor_batched={metrics['factor_s']:.2f}s")
     print(f"served {metrics['completed']}/{metrics['requests']} requests "
           f"({metrics['rhs_total']} rhs, {metrics['converged']} converged) "
           f"in {metrics['serve_s']:.2f}s over {metrics['slots']} slots, "
-          f"{metrics['ticks']} ticks")
+          f"{metrics['ticks']} ticks ({metrics['ticks_per_s']:.1f}/s)")
     print(f"throughput: {metrics['requests_per_s']:.1f} req/s "
           f"({metrics['rhs_per_s']:.1f} rhs/s incl. compile)  "
-          f"latency p50={metrics['latency_p50_s']*1e3:.0f}ms "
+          f"e2e p50={metrics['latency_p50_s']*1e3:.0f}ms "
           f"p95={metrics['latency_p95_s']*1e3:.0f}ms "
           f"max={metrics['latency_max_s']*1e3:.0f}ms")
+    print(f"queueing: p50={metrics['queue_wait_p50_s']*1e3:.0f}ms "
+          f"p95={metrics['queue_wait_p95_s']*1e3:.0f}ms  "
+          f"service: p50={metrics['service_p50_s']*1e3:.0f}ms "
+          f"p95={metrics['service_p95_s']*1e3:.0f}ms"
+          + (f"  (open-loop @ {metrics['arrival_rate']:.1f} req/s)"
+             if metrics["arrival_rate"] else "  (closed-loop)"))
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(metrics, fh, indent=2)

@@ -64,7 +64,7 @@ def main():
     print(f"factor: {time.time()-t0:.2f}s nnz={f.nnz} "
           f"fill={f.fill_ratio(g):.2f} rounds={f.stats['rounds']} "
           f"height={etree.actual_etree_height(f)} "
-          f"levels={handle.fwd.n_levels}")
+          f"levels={handle.n_levels}")
 
     rng = np.random.default_rng(0)
     iperm = np.argsort(perm)

@@ -1,2 +1,2 @@
-from .engine import SolveEngine, SolveRequest  # noqa: F401
+from .engine import SolveEngine, SolveRequest, EngineStats  # noqa: F401
 from .lm_engine import ServeEngine, Request  # noqa: F401

@@ -1,28 +1,40 @@
-"""Slot-based continuous-batching engine for Laplacian solve requests.
+"""Device-resident continuous-batching engine for Laplacian solve
+requests.
 
 The serving workload of this repo *is* the paper's value proposition:
 factor once (cheap randomized construction), then amortize the factor
 over a stream of right-hand sides.  ``SolveEngine`` is the vLLM-style
-continuous-batching loop restated for PCG instead of token decoding:
+continuous-batching loop restated for PCG instead of token decoding,
+with the data-ownership model inverted relative to the PR-2 engine:
+**lanes live on the device, not the host.**
 
-* a fixed number of **lanes** (slots) share jitted step programs with
-  static shapes — the TPU-friendly formulation;
+* a fixed number of **lanes** (slots) share jitted programs with static
+  shapes; every lane's PCG carry lives in a persistent ``(slots, n_pad)``
+  :class:`pcg.FleetPCGState` owned by the lane's **shape bucket** for
+  the lifetime of the engine — the carry never round-trips through the
+  host;
 * queued :class:`SolveRequest`\\ s ``(graph_id, rhs, tol)`` are admitted
-  FIFO into free lanes (a multi-RHS request takes one lane per column);
-* active lanes are **grouped by factor** each tick and every group
-  advances through ``iters_per_tick`` iterations of the batched
-  frozen-column PCG (``pcg_batched_step`` over the group's
-  ``FactorCache`` handle — matvec + fused multi-rhs trisolve);
+  FIFO: admission is one jitted **scatter** of the request's initialized
+  columns into free rows (host→device traffic = the new rhs columns,
+  nothing else);
+* each tick advances every bucket with active lanes through
+  ``iters_per_tick`` iterations of ``pcg_fleet_step`` — one jitted call
+  per bucket, with the bucket's stacked factor arrays
+  (``FactorCache`` → :class:`FactorFleet` → ``pcg.FleetArrays``) passed
+  as **traced arguments** and a per-lane factor index routing each lane
+  to its own factor.  Grouping is by *shape bucket*, not factor
+  identity: every factor whose graphs share a pow2 size bucket shares
+  one compiled step program;
 * lanes whose column converged (or hit maxiter) retire at the end of a
-  tick without stalling the rest of the batch; freed lanes readmit from
-  the queue on the next tick.
+  tick via one jitted **gather** of just the finished columns
+  (device→host traffic = retired columns); freed lanes readmit from the
+  queue on the next tick.
 
-Because frozen-column PCG lanes are independent, a request's trajectory
-is identical to a direct ``FactorHandle.solve`` batched solve of its own
-rhs block — batch composition, padding lanes, and tick slicing change
-nothing.  Group batches are padded to power-of-two lane counts so each
-graph compiles O(log slots) step programs, preserving the
-jit-cached-per-shape discipline of the PR-1 engine.
+Because frozen-lane PCG rows are independent and the engine runs the
+same fleet PCG body as ``FactorHandle.solve`` over the same stacked
+arrays, a served request's trajectory is **bit-identical** to a direct
+solve of its own rhs block — batch composition, padding lanes, bucket
+mates and tick slicing change nothing.
 """
 from __future__ import annotations
 
@@ -35,10 +47,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.solver import FactorCache, FactorHandle
+from repro.core.solver import FactorCache, FactorFleet, FactorHandle
 from repro.core.parac import _next_pow2
-from repro.core.pcg import (PCGBatchState, pcg_batched_init,
-                            pcg_batched_step)
+from repro.core.pcg import (FleetArrays, FleetPCGState, pcg_fleet_init,
+                            pcg_fleet_step)
 
 
 @dataclasses.dataclass(eq=False)          # identity equality: results are
@@ -48,25 +60,33 @@ class SolveRequest:                        # arrays, field-wise == is a trap
     ``b`` may be ``(n,)`` or ``(nrhs, n)`` — a block request occupies
     ``nrhs`` lanes and completes when every column has retired.  Result
     fields are populated on completion; ``x`` matches ``b``'s shape.
-    """
+    ``arrival_s`` is an optional trace-relative arrival offset used by
+    open-loop replay drivers (the engine itself only timestamps)."""
 
     rid: int
     graph_id: str
     b: np.ndarray
     tol: float = 1e-6
     maxiter: int = 500
+    arrival_s: float = 0.0
     # -- filled by the engine -----------------------------------------------
     x: Optional[np.ndarray] = None
     iters: Optional[np.ndarray] = None
     relres: Optional[np.ndarray] = None
     converged: Optional[bool] = None
     submit_time: float = 0.0
+    admit_time: float = 0.0
     finish_time: float = 0.0
     submit_tick: int = -1
     admit_tick: int = -1
     finish_tick: int = -1
     _partial: Dict[int, tuple] = dataclasses.field(
         default_factory=dict, repr=False)
+    # handle resolved at submit time: the factor this request will solve
+    # against, fixed for its lifetime even if the cache re-attaches the
+    # graph_id to a different factor afterwards
+    _handle: Optional[FactorHandle] = dataclasses.field(
+        default=None, repr=False)
 
     @property
     def nrhs(self) -> int:
@@ -74,31 +94,124 @@ class SolveRequest:                        # arrays, field-wise == is a trap
 
     @property
     def latency_s(self) -> float:
+        """End-to-end: submit → finish (includes queueing)."""
         return self.finish_time - self.submit_time
 
+    @property
+    def queue_wait_s(self) -> float:
+        """Queueing delay: submit → lane admission."""
+        return self.admit_time - self.submit_time
 
-class _Lane:
-    """Host-side record of one occupied lane: which request/column it
-    serves plus the lane's slice of the PCG carry (device arrays)."""
+    @property
+    def service_s(self) -> float:
+        """Pure service time: lane admission → finish."""
+        return self.finish_time - self.admit_time
 
-    __slots__ = ("req", "col", "x", "r", "z", "p", "rz", "it", "active",
-                 "bnorm")
 
-    def __init__(self, req: SolveRequest, col: int, state: PCGBatchState,
-                 row: int):
+@dataclasses.dataclass
+class EngineStats:
+    """Service-level counters (``SolveEngine.stats()``).  The compile
+    counters expose the mega-batching contract: ``step_compiles`` grows
+    per *shape bucket*, never per factor; ``cols_in``/``cols_out`` count
+    host↔device column transfers, which are O(admitted + retired), never
+    O(slots × ticks)."""
+
+    ticks: int
+    completed: int
+    queued: int
+    active_lanes: int
+    slots: int
+    factors: int
+    buckets: int
+    step_compiles: int
+    admit_compiles: int
+    gather_compiles: int
+    cols_in: int
+    cols_out: int
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class _LaneRef:
+    """Host-side bookkeeping for one occupied lane: which request/column
+    it serves and which bucket owns its device row.  No carry data —
+    that stays resident in the bucket's ``FleetPCGState``."""
+
+    __slots__ = ("req", "col", "bucket")
+
+    def __init__(self, req: SolveRequest, col: int, bucket: "_BucketLanes"):
         self.req = req
         self.col = col
-        self.read(state, row)
+        self.bucket = bucket
 
-    def read(self, state: PCGBatchState, row: int) -> None:
-        self.x = state.X[row]
-        self.r = state.R[row]
-        self.z = state.Z[row]
-        self.p = state.P[row]
-        self.rz = state.rz[row]
-        self.it = state.it[row]
-        self.active = bool(state.active[row])
-        self.bnorm = state.bnorm[row]
+
+class _BucketLanes:
+    """Persistent device-resident lane state for one shape bucket.
+
+    ``state`` is a ``(slots, n_pad)`` :class:`FleetPCGState` allocated
+    once when the bucket first serves a request and updated only by the
+    jitted admit/step programs.  ``n_active`` mirrors the device-side
+    active count so idle buckets skip their step without a device sync.
+    Lane row ``i`` of every bucket corresponds to global lane ``i``; a
+    global lane is owned by exactly one bucket at a time, and a row's
+    ``active`` flag is True iff this bucket owns the lane and its column
+    is still iterating."""
+
+    __slots__ = ("fleet", "state", "n_active")
+
+    def __init__(self, fleet: FactorFleet, slots: int):
+        n_pad = fleet.n_pad
+        Z = jnp.zeros((slots, n_pad), jnp.float32)
+        z = jnp.zeros((slots,), jnp.float32)
+        self.fleet = fleet
+        self.state = FleetPCGState(
+            X=Z, R=Z, Z=Z, P=Z, rz=z,
+            it=jnp.zeros((slots,), jnp.int32),
+            active=jnp.zeros((slots,), bool),
+            bnorm=jnp.ones((slots,), jnp.float32),
+            fidx=jnp.zeros((slots,), jnp.int32),
+            tol=jnp.ones((slots,), jnp.float32),
+            maxiter=jnp.zeros((slots,), jnp.int32))
+        self.n_active = 0
+
+
+# -- jitted engine programs (module-level: shapes + statics key compiles) ---
+
+def _admit_program(fa: FleetArrays, state: FleetPCGState, rows, B, fidx,
+                   tol, maxiter, *, f_levels: int, b_levels: int):
+    """Initialize the admitted columns (same math as a direct solve's
+    init) and scatter every carry field into the resident state at
+    ``rows``.  Padding rows carry ``rows == slots`` and drop."""
+    init = pcg_fleet_init(fa, fidx, B, tol, maxiter,
+                          f_levels=f_levels, b_levels=b_levels)
+    new = FleetPCGState(
+        X=state.X.at[rows].set(init.X, mode="drop"),
+        R=state.R.at[rows].set(init.R, mode="drop"),
+        Z=state.Z.at[rows].set(init.Z, mode="drop"),
+        P=state.P.at[rows].set(init.P, mode="drop"),
+        rz=state.rz.at[rows].set(init.rz, mode="drop"),
+        it=state.it.at[rows].set(init.it, mode="drop"),
+        active=state.active.at[rows].set(init.active, mode="drop"),
+        bnorm=state.bnorm.at[rows].set(init.bnorm, mode="drop"),
+        fidx=state.fidx.at[rows].set(init.fidx, mode="drop"),
+        tol=state.tol.at[rows].set(init.tol, mode="drop"),
+        maxiter=state.maxiter.at[rows].set(init.maxiter, mode="drop"))
+    return new, init.active
+
+
+def _step_program(fa: FleetArrays, state: FleetPCGState, *, k: int,
+                  f_levels: int, b_levels: int):
+    return pcg_fleet_step(fa, state, k=k, f_levels=f_levels,
+                          b_levels=b_levels)
+
+
+def _gather_program(state: FleetPCGState, rows):
+    """Pull only the finished columns back: iterate, iteration count and
+    relative residual per retired row."""
+    X = state.X[rows]
+    relres = jnp.linalg.norm(state.R[rows], axis=1) / state.bnorm[rows]
+    return X, state.it[rows], relres
 
 
 class SolveEngine:
@@ -119,24 +232,64 @@ class SolveEngine:
         # finished request's arrays forever (drain return values are the
         # delivery path; this is just recent history)
         self.completed: Deque[SolveRequest] = deque(maxlen=completed_history)
-        self.lanes: List[Optional[_Lane]] = [None] * slots
+        self.lanes: List[Optional[_LaneRef]] = [None] * slots
         self.queue: Deque[SolveRequest] = deque()
         self.ticks = 0
-        # handles pinned while they have queued/active work: in-flight
-        # requests survive cache eviction, and a graph_id re-attached to
-        # a *different* factor mid-flight cannot hijack them.  Jitted
-        # init/step programs are keyed by handle identity for the same
-        # reason; entries are pruned when an evicted handle goes idle.
+        # graph_id → most-recent handle with queued/active work.  Each
+        # request holds a strong ref to its own resolved handle
+        # (``req._handle`` — that ref is what keeps an in-flight
+        # factor's fleet row claimed); this map only routes *new*
+        # submits for a graph that was evicted mid-flight, and is
+        # dropped when the graph goes idle.
         self._pinned: Dict[str, FactorHandle] = {}
-        self._fns: Dict[int, tuple] = {}
+        self._buckets: Dict[int, _BucketLanes] = {}
+        self.n_completed = 0       # lifetime count (completed is bounded)
+        # compile + transfer accounting: the Python bodies below run
+        # once per jit specialization (trace time), so the counters
+        # count compiled programs; cols_in/cols_out count host↔device
+        # column transfers (admitted / retired columns only).
+        self.compile_counts = {"step": 0, "admit": 0, "gather": 0}
+        self.cols_in = 0
+        self.cols_out = 0
+
+        counts = self.compile_counts
+        k = iters_per_tick
+
+        def admit(fa, state, rows, B, fidx, tol, maxiter, *,
+                  f_levels, b_levels):
+            counts["admit"] += 1
+            return _admit_program(fa, state, rows, B, fidx, tol, maxiter,
+                                  f_levels=f_levels, b_levels=b_levels)
+
+        def step(fa, state, *, f_levels, b_levels):
+            counts["step"] += 1
+            return _step_program(fa, state, k=k, f_levels=f_levels,
+                                 b_levels=b_levels)
+
+        def gather(state, rows):
+            counts["gather"] += 1
+            return _gather_program(state, rows)
+
+        self._admit_fn = jax.jit(
+            admit, static_argnames=("f_levels", "b_levels"))
+        self._step_fn = jax.jit(
+            step, static_argnames=("f_levels", "b_levels"))
+        self._gather_fn = jax.jit(gather)
 
     # -- request lifecycle --------------------------------------------------
     def submit(self, req: SolveRequest) -> None:
         """Queue a request (validates routing and lane fit up front; the
-        handle is pinned only once the request is actually accepted)."""
-        handle = self._pinned.get(req.graph_id)
-        if handle is None:
+        handle is pinned only once the request is actually accepted).
+        The *cached* handle is preferred — a graph_id re-attached to a
+        new factor routes new requests to the new factor immediately —
+        with the pinned handle as fallback so an evicted-mid-flight
+        graph keeps accepting work until it goes idle."""
+        try:
             handle = self.cache.get(req.graph_id)  # raises on unknown graph
+        except KeyError:
+            handle = self._pinned.get(req.graph_id)
+            if handle is None:
+                raise
         b = np.asarray(req.b)
         if b.ndim not in (1, 2) or b.shape[-1] != handle.n:
             raise ValueError(
@@ -146,140 +299,134 @@ class SolveEngine:
             raise ValueError(
                 f"request rid={req.rid} needs {req.nrhs} lanes but the "
                 f"engine has {self.slots} slots")
+        req._handle = handle
         self._pinned[req.graph_id] = handle
         req.submit_time = time.perf_counter()
         req.submit_tick = self.ticks
         self.queue.append(req)
 
-    def _handle_fns(self, handle: FactorHandle):
-        """Jitted init/step programs for one factor, keyed by handle
-        identity (jax re-specializes per batch shape; power-of-two
-        padding bounds the shape count)."""
-        entry = self._fns.get(id(handle))
-        if entry is None:
-            bmv = jax.vmap(handle.matvec)
-
-            def bpc(R):
-                return handle.precondition(R.T).T
-
-            k = self.iters_per_tick
-
-            def init(B, tol):
-                return pcg_batched_init(bmv, bpc, B, tol=tol)
-
-            def step(state, tol, maxiter):
-                return pcg_batched_step(bmv, bpc, state, k=k, tol=tol,
-                                        maxiter=maxiter)
-
-            entry = (handle, jax.jit(init), jax.jit(step))
-            self._fns[id(handle)] = entry
-        return entry[1], entry[2]
+    def _bucket(self, fleet: FactorFleet) -> _BucketLanes:
+        bl = self._buckets.get(fleet.n_pad)
+        if bl is None:
+            bl = self._buckets[fleet.n_pad] = _BucketLanes(fleet, self.slots)
+        return bl
 
     def _admit(self) -> None:
-        """FIFO admission: place queued requests into free lanes until
+        """FIFO admission: scatter queued requests into free lanes until
         the head request no longer fits (head-of-line blocking keeps
-        completion order fair and shapes static)."""
+        completion order fair and shapes static).  One jitted scatter
+        per request; host→device traffic is the request's rhs columns."""
         free = [i for i, lane in enumerate(self.lanes) if lane is None]
         while self.queue and self.queue[0].nrhs <= len(free):
             req = self.queue.popleft()
-            handle = self._pinned[req.graph_id]
-            init, _ = self._handle_fns(handle)
-            B = np.atleast_2d(np.asarray(req.b, np.float32))
-            state = init(jnp.asarray(B),
-                         jnp.full((B.shape[0],), req.tol, jnp.float32))
+            handle = req._handle       # fixed at submit: re-attaching the
+            fleet = handle.fleet       # graph_id cannot hijack this request
+            bl = self._bucket(fleet)
+            j = req.nrhs
+            jp = _next_pow2(j)
+            rows = [free.pop(0) for _ in range(j)]
+            n_pad = fleet.n_pad
+            B = np.zeros((jp, n_pad), np.float32)
+            B[:j, :handle.n] = np.atleast_2d(np.asarray(req.b, np.float32))
+            rows_a = np.full(jp, self.slots, np.int32)   # pads drop
+            rows_a[:j] = rows
+            fidx = np.zeros(jp, np.int32)
+            fidx[:j] = handle.fleet_row
+            tol = np.full(jp, req.tol, np.float32)
+            maxv = np.zeros(jp, np.int32)
+            maxv[:j] = req.maxiter
+            state, act0 = self._admit_fn(
+                fleet.arrays, bl.state, jnp.asarray(rows_a),
+                jnp.asarray(B), jnp.asarray(fidx), jnp.asarray(tol),
+                jnp.asarray(maxv), f_levels=fleet.f_levels,
+                b_levels=fleet.b_levels)
+            bl.state = state
+            act0 = np.asarray(act0)[:j]
+            bl.n_active += int(act0.sum())
+            self.cols_in += j
             req.admit_tick = self.ticks
-            for col in range(B.shape[0]):
-                self.lanes[free.pop(0)] = _Lane(req, col, state, col)
+            req.admit_time = time.perf_counter()
+            for col, lane_i in enumerate(rows):
+                self.lanes[lane_i] = _LaneRef(req, col, bl)
 
     # -- one engine tick ----------------------------------------------------
     def tick(self) -> List[SolveRequest]:
-        """Admit, advance every factor group ``iters_per_tick`` PCG
-        iterations, retire finished lanes.  Returns requests completed
-        this tick."""
+        """Admit, advance every bucket with active lanes by
+        ``iters_per_tick`` PCG iterations (one jitted step per bucket —
+        all factors in the bucket ride the same program), retire finished
+        lanes.  Returns requests completed this tick."""
         self._admit()
-        groups: Dict[str, List[int]] = {}
-        for i, lane in enumerate(self.lanes):
-            if lane is not None and lane.active:
-                groups.setdefault(lane.req.graph_id, []).append(i)
-
-        for gid, idxs in groups.items():
-            handle = self._pinned[gid]
-            _, step = self._handle_fns(handle)
-            n = handle.n
-            L = _next_pow2(len(idxs))
-            zeros = jnp.zeros(n, jnp.float32)
-            pad = L - len(idxs)
-
-            def stacked(attr, fill):
-                rows = [getattr(self.lanes[i], attr) for i in idxs]
-                return jnp.stack(rows + [fill] * pad)
-
-            state = PCGBatchState(
-                X=stacked("x", zeros), R=stacked("r", zeros),
-                Z=stacked("z", zeros), P=stacked("p", zeros),
-                rz=stacked("rz", jnp.float32(0)),
-                it=stacked("it", jnp.int32(0)),
-                active=stacked("active", jnp.bool_(False)),
-                bnorm=stacked("bnorm", jnp.float32(1)))
-            tolv = jnp.asarray(
-                [self.lanes[i].req.tol for i in idxs] + [1.0] * pad,
-                jnp.float32)
-            maxv = jnp.asarray(
-                [self.lanes[i].req.maxiter for i in idxs] + [0] * pad,
-                jnp.int32)
-            state = step(state, tolv, maxv)
-            for row, i in enumerate(idxs):
-                self.lanes[i].read(state, row)
-
-        done = self._retire()
+        done: List[SolveRequest] = []
+        for n_pad in sorted(self._buckets):
+            bl = self._buckets[n_pad]
+            occ = [i for i, lane in enumerate(self.lanes)
+                   if lane is not None and lane.bucket is bl]
+            if not occ:
+                continue
+            if bl.n_active > 0:
+                bl.state = self._step_fn(
+                    bl.fleet.arrays, bl.state,
+                    f_levels=bl.fleet.f_levels, b_levels=bl.fleet.b_levels)
+            active = np.asarray(bl.state.active)   # (slots,) flags only
+            frozen = [i for i in occ if not active[i]]
+            bl.n_active = int(active[occ].sum())
+            if frozen:
+                done.extend(self._retire(bl, frozen))
         self._unpin_idle()
         self.ticks += 1
+        self.cache.advance_ticks(1)
+        return done
+
+    def _retire(self, bl: _BucketLanes,
+                rows: List[int]) -> List[SolveRequest]:
+        """Gather the finished columns (one jitted gather; device→host
+        traffic is exactly the retired columns), free their lanes, and
+        complete requests whose last column retired."""
+        j = len(rows)
+        jp = _next_pow2(j)
+        rows_a = np.zeros(jp, np.int32)
+        rows_a[:j] = rows
+        X, it, relres = self._gather_fn(bl.state, jnp.asarray(rows_a))
+        X = np.asarray(X)[:j]
+        it = np.asarray(it)[:j]
+        relres = np.asarray(relres)[:j]
+        self.cols_out += j
+        done: List[SolveRequest] = []
+        for k, lane_i in enumerate(rows):
+            lane = self.lanes[lane_i]
+            req = lane.req
+            n = int(np.shape(req.b)[-1])
+            req._partial[lane.col] = (X[k][:n], int(it[k]),
+                                      float(relres[k]))
+            self.lanes[lane_i] = None
+            if len(req._partial) == req.nrhs:
+                cols = [req._partial[c] for c in range(req.nrhs)]
+                Xr = np.stack([c[0] for c in cols])
+                req.iters = np.array([c[1] for c in cols])
+                req.relres = np.array([c[2] for c in cols])
+                req.converged = bool(np.all(req.relres <= req.tol))
+                req.x = Xr[0] if np.ndim(req.b) == 1 else Xr
+                req.finish_time = time.perf_counter()
+                req.finish_tick = self.ticks
+                # release the factor ref: a completed request sitting in
+                # the bounded history must not keep an evicted handle's
+                # fleet row claimed (row recycling is weakref-driven)
+                req._handle = None
+                self.completed.append(req)
+                self.n_completed += 1
+                done.append(req)
         return done
 
     def _unpin_idle(self) -> None:
-        """Release pins for graphs with no queued or active work, then
-        sweep jitted programs whose handle is neither pinned nor still
-        the cached one (evicted, or its graph_id re-attached to a new
-        factor) — the closures capture the factor's device arrays, so
-        keeping them would defeat the cache's memory budget."""
+        """Release pins for graphs with no queued or active work.  The
+        pinned handle is what keeps an evicted factor's fleet row (and
+        with it the stacked device arrays) claimed, so dropping idle
+        pins is also what lets the fleet recycle dead rows."""
         in_use = {r.graph_id for r in self.queue}
         in_use.update(lane.req.graph_id for lane in self.lanes
                       if lane is not None)
         for gid in [g for g in self._pinned if g not in in_use]:
             del self._pinned[gid]
-        pinned = {id(h) for h in self._pinned.values()}
-        for hid in list(self._fns):
-            handle = self._fns[hid][0]
-            if hid not in pinned and \
-                    self.cache.peek(handle.graph_id) is not handle:
-                del self._fns[hid]
-
-    def _retire(self) -> List[SolveRequest]:
-        """Free every lane whose column froze (converged or hit maxiter)
-        — immediately, so the slot readmits next tick even while sibling
-        columns keep running.  A request completes when its last column
-        retires; completed requests are handed back."""
-        done: List[SolveRequest] = []
-        for i, lane in enumerate(self.lanes):
-            if lane is None or lane.active:
-                continue
-            req = lane.req
-            relres = float(jnp.linalg.norm(lane.r) / lane.bnorm)
-            req._partial[lane.col] = (np.asarray(lane.x), int(lane.it),
-                                      relres)
-            self.lanes[i] = None
-            if len(req._partial) == req.nrhs:
-                cols = [req._partial[c] for c in range(req.nrhs)]
-                X = np.stack([c[0] for c in cols])
-                req.iters = np.array([c[1] for c in cols])
-                req.relres = np.array([c[2] for c in cols])
-                req.converged = bool(np.all(req.relres <= req.tol))
-                req.x = X[0] if np.ndim(req.b) == 1 else X
-                req.finish_time = time.perf_counter()
-                req.finish_tick = self.ticks
-                self.completed.append(req)
-                done.append(req)
-        return done
 
     # -- driving loops ------------------------------------------------------
     @property
@@ -297,8 +444,13 @@ class SolveEngine:
             done.extend(self.tick())
         return done
 
-    def stats(self) -> Dict[str, float]:
+    def stats(self) -> EngineStats:
         active = sum(l is not None for l in self.lanes)
-        return dict(ticks=self.ticks, completed=len(self.completed),
-                    queued=len(self.queue), active_lanes=active,
-                    slots=self.slots, factors=len(self.cache))
+        return EngineStats(
+            ticks=self.ticks, completed=self.n_completed,
+            queued=len(self.queue), active_lanes=active, slots=self.slots,
+            factors=len(self.cache), buckets=len(self._buckets),
+            step_compiles=self.compile_counts["step"],
+            admit_compiles=self.compile_counts["admit"],
+            gather_compiles=self.compile_counts["gather"],
+            cols_in=self.cols_in, cols_out=self.cols_out)
