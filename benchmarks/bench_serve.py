@@ -15,26 +15,129 @@ uploads the JSON as an artifact, and gates merges by comparing
 as a silent time-series dip.  The trace RNG is explicitly seeded
 (``--seed``, default 0) — rhs content *and* Poisson arrival gaps — so
 artifacts are reproducible across runs.
+
+The artifact also carries a **wide-head admission-policy sweep**
+(``policy_sweep``; disable with ``--no-sweep``): the same seeded
+Poisson trace — a hard narrow blocker, a full-width request stuck
+behind it, then a stream of easy narrow arrivals at
+``--sweep-arrival-rate`` — replayed under ``fifo`` and ``priority``
+(backfill) admission, recording queueing vs service vs end-to-end
+latency per policy.  ``check_serve_regression`` gates that backfill
+strictly improves p95 end-to-end latency over FIFO and that every
+engine's scheduler counters conserve requests and respect the
+starvation bound.
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-from repro.launch.serve import run_service
+import numpy as np
+
+from repro.launch.serve import replay_trace, run_service
 
 from .common import emit
 
 
+def make_wide_head_trace(gid, n, *, width, narrow=10, seed=0,
+                         arrival_rate=100.0, blocker_iters=200):
+    """Seeded wide-head Poisson trace — the workload where backfill
+    admission pays:
+
+    * rid 0: a *blocker* — narrow, unreachable tolerance, so it runs its
+      full ``blocker_iters`` budget holding one lane;
+    * rid 1: a *wide* request (``width`` lanes — the whole engine) that
+      cannot admit until the blocker retires; under FIFO it blocks the
+      head of the queue the entire time;
+    * rid 2..: a Poisson stream of easy narrow requests that FIFO parks
+      behind the wide head while ``width - 1`` lanes idle, and backfill
+      slots straight into the free lanes (until the wide head's
+      starvation bound seals the queue).
+    """
+    from repro.serve import SolveRequest
+    rng = np.random.default_rng(seed)
+
+    def rhs(nrhs):
+        b = rng.normal(size=(nrhs, n) if nrhs > 1 else n)
+        b = b - b.mean(axis=-1, keepdims=True)
+        return b.astype(np.float32)
+
+    reqs = [SolveRequest(rid=0, graph_id=gid, b=rhs(1), tol=1e-30,
+                         maxiter=blocker_iters, arrival_s=0.0),
+            SolveRequest(rid=1, graph_id=gid, b=rhs(width), tol=1e-4,
+                         maxiter=300, arrival_s=0.0)]
+    arrival = 0.0
+    for rid in range(2, 2 + narrow):
+        arrival += float(rng.exponential(1.0 / arrival_rate))
+        reqs.append(SolveRequest(rid=rid, graph_id=gid, b=rhs(1),
+                                 tol=1e-3, maxiter=300,
+                                 arrival_s=arrival))
+    return reqs
+
+
+def run_policy_sweep(cache, gid, n, *, slots=4, iters_per_tick=8, seed=0,
+                     arrival_rate=100.0, narrow=30, max_skips=64,
+                     policies=("fifo", "priority")):
+    """Replay the same seeded wide-head Poisson trace under each
+    admission policy (fresh engine per policy over the shared factor
+    cache; one warmup replay per engine pays the jit compiles) and
+    record queueing vs service latency per policy.  The headline
+    comparison: backfill (``priority``) must beat ``fifo`` on p95
+    end-to-end latency, because FIFO parks every narrow request behind
+    the blocked wide head while ``slots - 1`` lanes idle.
+
+    The trace is deliberately narrow-dominated (``narrow`` ≫ 2): the
+    p95 of the trace must land inside the narrow-request mass, which is
+    the population backfill helps — the wide request's own latency is
+    blocker-bound under *every* policy, so a tail thin enough to reach
+    it (few narrows) would measure the blocker, not the scheduler.
+    ``max_skips`` is likewise generous here: the sweep measures the
+    backfill win, while the starvation *bound* has its own tests and CI
+    counter gate."""
+    from repro.serve import SolveEngine, make_policy
+    out = {"arrival_rate": arrival_rate, "slots": slots,
+           "narrow": narrow, "max_skips": max_skips, "policies": {}}
+    for name in policies:
+        eng = SolveEngine(cache, slots=slots,
+                          iters_per_tick=iters_per_tick,
+                          admission=make_policy(name,
+                                                max_skips=max_skips))
+        # warmup: same shapes as the measured trace (narrow + wide
+        # admits, the bucket step, gathers) so compiles are excluded
+        warm = make_wide_head_trace(gid, n, width=slots, narrow=2,
+                                    seed=seed + 1, arrival_rate=1e6,
+                                    blocker_iters=8)
+        replay_trace(eng, warm)
+        trace = make_wide_head_trace(gid, n, width=slots, narrow=narrow,
+                                     seed=seed, arrival_rate=arrival_rate)
+        metrics, done = replay_trace(eng, trace)
+        metrics["engine"] = eng.stats().as_dict()
+        out["policies"][name] = metrics
+        emit(f"serve/wide_head/{name}/latency_p95_us",
+             metrics["latency_p95_s"] * 1e6,
+             f"queue_p95_us={metrics['queue_wait_p95_s']*1e6:.0f};"
+             f"service_p95_us={metrics['service_p95_s']*1e6:.0f};"
+             f"backfill_skips={metrics['engine']['backfill_skips']}")
+    if {"fifo", "priority"} <= set(out["policies"]):
+        f95 = out["policies"]["fifo"]["latency_p95_s"]
+        b95 = out["policies"]["priority"]["latency_p95_s"]
+        out["backfill_p95_speedup"] = f95 / b95 if b95 > 0 else 0.0
+        emit("serve/wide_head/backfill_p95_speedup",
+             out["backfill_p95_speedup"], "fifo_p95/priority_p95")
+    return out
+
+
 def run(*, suite="tiny", requests=16, slots=8, iters_per_tick=8, seed=0,
-        warm=True, arrival_rate=None):
+        warm=True, arrival_rate=None, policy="fifo", sweep=True,
+        sweep_arrival_rate=100.0):
     """One warmup replay through the same engine (pays jit compiles),
-    then the measured replay."""
-    metrics, _ = run_service(
+    then the measured replay; with ``sweep`` the wide-head policy
+    comparison reuses the already-factored cache."""
+    metrics, _, eng = run_service(
         suite=suite, requests=requests, slots=slots,
         iters_per_tick=iters_per_tick, seed=seed,
         warmup_requests=requests if warm else 0,
-        arrival_rate=arrival_rate)
+        arrival_rate=arrival_rate, policy=policy, return_engine=True)
     emit(f"serve/{suite}/requests_per_s", metrics["requests_per_s"],
          f"completed={metrics['completed']};rhs={metrics['rhs_total']}")
     emit(f"serve/{suite}/ticks_per_s", metrics["ticks_per_s"],
@@ -47,6 +150,14 @@ def run(*, suite="tiny", requests=16, slots=8, iters_per_tick=8, seed=0,
          f"arrival_rate={arrival_rate}")
     emit(f"serve/{suite}/factor_batched_us", metrics["factor_s"] * 1e6,
          f"graphs={metrics['graphs']}")
+    if sweep:
+        # smallest suite graph → one shape bucket, cheapest compiles
+        cache = eng.cache
+        gid = min(cache.graph_ids, key=lambda g: cache.peek(g).n)
+        metrics["policy_sweep"] = run_policy_sweep(
+            cache, gid, cache.peek(gid).n, seed=seed,
+            arrival_rate=sweep_arrival_rate,
+            iters_per_tick=iters_per_tick)
     return metrics
 
 
@@ -65,6 +176,14 @@ def main():
                          "queueing metrics")
     ap.add_argument("--no-warm", action="store_true",
                     help="skip the warmup replay (include compiles)")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "priority", "deadline"],
+                    help="admission policy for the main mixed-trace run")
+    ap.add_argument("--no-sweep", action="store_true",
+                    help="skip the wide-head admission-policy sweep")
+    ap.add_argument("--sweep-arrival-rate", type=float, default=100.0,
+                    help="Poisson rate for the wide-head policy sweep "
+                         "(queueing vs service latency per policy)")
     ap.add_argument("--json", default=None,
                     help="write service metrics to this JSON file "
                          "(uploaded as a CI artifact)")
@@ -72,7 +191,9 @@ def main():
     metrics = run(suite=args.suite, requests=args.requests,
                   slots=args.slots, iters_per_tick=args.iters_per_tick,
                   seed=args.seed, warm=not args.no_warm,
-                  arrival_rate=args.arrival_rate)
+                  arrival_rate=args.arrival_rate, policy=args.policy,
+                  sweep=not args.no_sweep,
+                  sweep_arrival_rate=args.sweep_arrival_rate)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(metrics, fh, indent=2)

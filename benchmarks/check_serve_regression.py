@@ -15,7 +15,17 @@ Two kinds of gate:
   fleet shapes never grow mid-run), not of the engine in general — a
   live service admitting a new factor to a grown bucket legitimately
   retraces.  Within the benchmark it is exactly the mega-batching
-  contract: compiles scale with buckets, never with factors;
+  contract: compiles scale with buckets, never with factors.
+
+  Scheduler invariants (every engine-counter block in the artifact,
+  including each policy-sweep entry): request conservation
+  (``admitted_reqs == completed + in_flight_reqs``) and the backfill
+  starvation bound (``backfill_skips <= max_skips * skipped_reqs``,
+  degenerating to ``backfill_skips == 0`` for FIFO where
+  ``max_skips == 0``).  When the artifact carries a wide-head
+  ``policy_sweep``, the backfill policy must strictly beat FIFO on p95
+  end-to-end latency — the scheduling contract the subsystem exists
+  for;
 * **throughput ratio**: ``ticks_per_s`` vs the committed baseline
   (insensitive to request mix, sensitive to per-tick host glue).  The
   bar is deliberately loose (default: fail only when the baseline is
@@ -31,27 +41,68 @@ import shutil
 import sys
 
 
+def _engine_failures(eng: dict, *, label: str,
+                     require_bucket_compiles: bool) -> list:
+    failures = []
+    if require_bucket_compiles and eng["step_compiles"] != eng["buckets"]:
+        failures.append(
+            f"[{label}] step_compiles={eng['step_compiles']} != "
+            f"buckets={eng['buckets']} (upfront-admission benchmark "
+            f"should compile once per bucket, never per factor)")
+    if eng["cols_in"] != eng["cols_out"]:
+        failures.append(
+            f"[{label}] cols_in={eng['cols_in']} != "
+            f"cols_out={eng['cols_out']} (column traffic not conserved)")
+    # scheduler counters (absent in pre-scheduler artifacts)
+    if "admitted_reqs" in eng:
+        if eng["admitted_reqs"] != eng["completed"] + eng["in_flight_reqs"]:
+            failures.append(
+                f"[{label}] admitted_reqs={eng['admitted_reqs']} != "
+                f"completed={eng['completed']} + "
+                f"in_flight={eng['in_flight_reqs']} "
+                f"(request conservation broken)")
+        bound = eng["max_skips"] * eng["skipped_reqs"]
+        if eng["backfill_skips"] > bound:
+            failures.append(
+                f"[{label}] backfill_skips={eng['backfill_skips']} > "
+                f"max_skips*skipped_reqs={bound} "
+                f"(starvation bound violated)")
+    return failures
+
+
 def check_invariants(current: dict) -> int:
     """Machine-independent engine-counter gates (no baseline needed)."""
     eng = current.get("engine")
     if not eng:
         print("no engine counters in artifact; invariant gate skipped")
         return 0
-    failures = []
-    if eng["step_compiles"] != eng["buckets"]:
-        failures.append(
-            f"step_compiles={eng['step_compiles']} != "
-            f"buckets={eng['buckets']} (upfront-admission benchmark "
-            f"should compile once per bucket, never per factor)")
-    if eng["cols_in"] != eng["cols_out"]:
-        failures.append(
-            f"cols_in={eng['cols_in']} != cols_out={eng['cols_out']} "
-            f"(column traffic not conserved)")
+    failures = _engine_failures(eng, label="main",
+                                require_bucket_compiles=True)
+    sweep = current.get("policy_sweep") or {}
+    for name, m in (sweep.get("policies") or {}).items():
+        if "engine" in m:
+            # sweep engines serve one graph: still one bucket/compile
+            failures += _engine_failures(m["engine"], label=name,
+                                         require_bucket_compiles=True)
+    if {"fifo", "priority"} <= set(sweep.get("policies") or {}):
+        f95 = float(sweep["policies"]["fifo"]["latency_p95_s"])
+        b95 = float(sweep["policies"]["priority"]["latency_p95_s"])
+        if not b95 < f95:
+            failures.append(
+                f"[sweep] backfill did not improve p95 e2e latency on "
+                f"the wide-head trace: priority={b95:.4f}s vs "
+                f"fifo={f95:.4f}s")
+        else:
+            print(f"backfill p95 OK: priority={b95:.4f}s < "
+                  f"fifo={f95:.4f}s "
+                  f"({f95/b95:.1f}x)")
     for msg in failures:
         print(f"INVARIANT VIOLATED: {msg}")
     if not failures:
         print(f"engine invariants OK: step_compiles==buckets=="
-              f"{eng['buckets']}, cols_in==cols_out=={eng['cols_in']}")
+              f"{eng['buckets']}, cols_in==cols_out=={eng['cols_in']}, "
+              f"admitted=={eng.get('admitted_reqs', 'n/a')}==retired+"
+              f"in_flight, backfill_skips<=max_skips*skipped_reqs")
     return 1 if failures else 0
 
 

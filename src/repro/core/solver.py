@@ -159,36 +159,62 @@ class FactorFleet:
         return 0 if self.arrays is None else \
             sum(int(x.nbytes) for x in self.arrays)
 
-    def _free_row(self) -> int:
+    def _free_rows(self, k: int) -> List[int]:
+        """Claim ``k`` distinct rows: dead rows (ascending) first, then
+        fresh rows past the current end.  Ascending by construction."""
+        rows: List[int] = []
         for i, r in enumerate(self._rows):
+            if len(rows) == k:
+                break
             if r is None or r() is None:
-                return i
-        return len(self._rows)
+                rows.append(i)
+        nxt = len(self._rows)
+        while len(rows) < k:
+            rows.append(nxt)
+            nxt += 1
+        return rows
 
     def admit(self, handle: "FactorHandle", pf: _PaddedFactor) -> int:
         """Claim a row for ``pf`` (reusing a dead row when possible) and
         scatter its arrays into the stack.  Returns the row index."""
-        assert pf.n_pad == self.n_pad
-        m_pad = max(self.m_pad, pf.src.shape[0])
-        Kf = max(self.Kf, pf.fwd.K)
-        Kb = max(self.Kb, pf.bwd.K)
-        row = self._free_row()
-        F = max(_next_pow2(row + 1), self.capacity)
+        return self.admit_many([(handle, pf)])[0]
+
+    def admit_many(self, pairs: Sequence[Tuple["FactorHandle",
+                                               _PaddedFactor]]
+                   ) -> List[int]:
+        """Admit ``B`` factors in one stack update: the bucket grows
+        **once** to the batch-wide ``(capacity, m_pad, K)`` envelope and
+        every new row lands in a single scatter per field — O(B) device
+        copies where per-factor ``admit`` paid O(B²) (each ``.at[].set``
+        copies the whole stack).  Row claiming, growth envelopes and
+        padded row contents are identical to ``B`` sequential admits
+        (growth only ever zero-pads), so the resulting stack is
+        bit-identical either way.  Returns the claimed row indices, in
+        ``pairs`` order."""
+        if not pairs:
+            return []
+        assert all(pf.n_pad == self.n_pad for _, pf in pairs)
+        m_pad = max(self.m_pad, *(pf.src.shape[0] for _, pf in pairs))
+        Kf = max(self.Kf, *(pf.fwd.K for _, pf in pairs))
+        Kb = max(self.Kb, *(pf.bwd.K for _, pf in pairs))
+        rows = self._free_rows(len(pairs))
+        F = max(_next_pow2(max(rows) + 1), self.capacity)
         np_ = self.n_pad
+        pf0 = pairs[0][1]
         with jax.ensure_compile_time_eval():
             a = self.arrays
             if a is None:
                 a = FleetArrays(
                     src=jnp.zeros((F, m_pad), jnp.int32),
                     dst=jnp.zeros((F, m_pad), jnp.int32),
-                    w=jnp.zeros((F, m_pad), pf.w.dtype),
+                    w=jnp.zeros((F, m_pad), pf0.w.dtype),
                     fcols=jnp.zeros((F, np_, Kf), jnp.int32),
-                    fvals=jnp.zeros((F, np_, Kf), pf.fwd.vals.dtype),
+                    fvals=jnp.zeros((F, np_, Kf), pf0.fwd.vals.dtype),
                     flevel=jnp.zeros((F, np_), jnp.int32),
                     bcols=jnp.zeros((F, np_, Kb), jnp.int32),
-                    bvals=jnp.zeros((F, np_, Kb), pf.bwd.vals.dtype),
+                    bvals=jnp.zeros((F, np_, Kb), pf0.bwd.vals.dtype),
                     blevel=jnp.zeros((F, np_), jnp.int32),
-                    dinv=jnp.zeros((F, np_), pf.dinv.dtype),
+                    dinv=jnp.zeros((F, np_), pf0.dinv.dtype),
                     nvalid=jnp.zeros((F,), jnp.int32))
             else:
                 a = FleetArrays(
@@ -203,27 +229,42 @@ class FactorFleet:
                     blevel=_grow(a.blevel, (F, np_)),
                     dinv=_grow(a.dinv, (F, np_)),
                     nvalid=_grow(a.nvalid, (F,)))
+            ix = jnp.asarray(np.asarray(rows, np.int32))
             self.arrays = FleetArrays(
-                src=a.src.at[row].set(_pad1(pf.src, m_pad)),
-                dst=a.dst.at[row].set(_pad1(pf.dst, m_pad)),
-                w=a.w.at[row].set(_pad1(pf.w, m_pad)),
-                fcols=a.fcols.at[row].set(_grow(pf.fwd.cols, (np_, Kf))),
-                fvals=a.fvals.at[row].set(_grow(pf.fwd.vals, (np_, Kf))),
-                flevel=a.flevel.at[row].set(pf.fwd.level_of),
-                bcols=a.bcols.at[row].set(_grow(pf.bwd.cols, (np_, Kb))),
-                bvals=a.bvals.at[row].set(_grow(pf.bwd.vals, (np_, Kb))),
-                blevel=a.blevel.at[row].set(pf.bwd.level_of),
-                dinv=a.dinv.at[row].set(pf.dinv),
-                nvalid=a.nvalid.at[row].set(jnp.int32(pf.n)))
+                src=a.src.at[ix].set(jnp.stack(
+                    [_pad1(pf.src, m_pad) for _, pf in pairs])),
+                dst=a.dst.at[ix].set(jnp.stack(
+                    [_pad1(pf.dst, m_pad) for _, pf in pairs])),
+                w=a.w.at[ix].set(jnp.stack(
+                    [_pad1(pf.w, m_pad) for _, pf in pairs])),
+                fcols=a.fcols.at[ix].set(jnp.stack(
+                    [_grow(pf.fwd.cols, (np_, Kf)) for _, pf in pairs])),
+                fvals=a.fvals.at[ix].set(jnp.stack(
+                    [_grow(pf.fwd.vals, (np_, Kf)) for _, pf in pairs])),
+                flevel=a.flevel.at[ix].set(jnp.stack(
+                    [pf.fwd.level_of for _, pf in pairs])),
+                bcols=a.bcols.at[ix].set(jnp.stack(
+                    [_grow(pf.bwd.cols, (np_, Kb)) for _, pf in pairs])),
+                bvals=a.bvals.at[ix].set(jnp.stack(
+                    [_grow(pf.bwd.vals, (np_, Kb)) for _, pf in pairs])),
+                blevel=a.blevel.at[ix].set(jnp.stack(
+                    [pf.bwd.level_of for _, pf in pairs])),
+                dinv=a.dinv.at[ix].set(jnp.stack(
+                    [pf.dinv for _, pf in pairs])),
+                nvalid=a.nvalid.at[ix].set(jnp.asarray(
+                    [pf.n for _, pf in pairs], jnp.int32)))
         self.m_pad, self.Kf, self.Kb = m_pad, Kf, Kb
-        self.f_levels = max(self.f_levels, pf.fwd.n_levels)
-        self.b_levels = max(self.b_levels, pf.bwd.n_levels)
-        ref = weakref.ref(handle)
-        if row == len(self._rows):
-            self._rows.append(ref)
-        else:
-            self._rows[row] = ref
-        return row
+        self.f_levels = max(self.f_levels,
+                            *(pf.fwd.n_levels for _, pf in pairs))
+        self.b_levels = max(self.b_levels,
+                            *(pf.bwd.n_levels for _, pf in pairs))
+        for (handle, _), row in zip(pairs, rows):
+            ref = weakref.ref(handle)
+            if row == len(self._rows):     # rows ascending: appends in order
+                self._rows.append(ref)
+            else:
+                self._rows[row] = ref
+        return rows
 
 
 @dataclasses.dataclass(eq=False)
@@ -494,10 +535,11 @@ class FactorCache:
                 chunk=self.chunk, fill_slack=self.fill_slack,
                 strict=self.strict, max_retries=self.max_retries,
                 dtype=self.dtype, with_schedules=True)
-            for i, f, sch in zip(todo, fs, scheds):
-                fleet[gids[i]] = self.attach(
-                    gs[i], f, graph_id=gids[i], schedules=sch,
-                    ttl_s=ttl_s, max_age_ticks=max_age_ticks)
+            admitted = self._attach_many(
+                [(gs[i], f, sch, gids[i])
+                 for i, f, sch in zip(todo, fs, scheds)],
+                ttl_s=ttl_s, max_age_ticks=max_age_ticks)
+            fleet.update(admitted)
         for gid in gids:
             if gid in self._handles:
                 self._handles.move_to_end(gid)
@@ -513,29 +555,60 @@ class FactorCache:
         lifecycle, no re-factorization.  ``schedules`` short-circuits the
         per-factor schedule build when a batched one already ran."""
         gid = graph_id if graph_id is not None else graph_fingerprint(g)
-        dev = f.to_device()
-        if schedules is None:
-            schedules = build_schedules_batched([dev])[0]
-        fwd, bwd = schedules
-        pf = _PaddedFactor(g, dev, fwd, bwd)
-        fleet = self._fleets.get(pf.n_pad)
-        if fleet is None:
-            fleet = self._fleets[pf.n_pad] = FactorFleet(pf.n_pad)
-        handle = FactorHandle(
-            graph=g, factor=f, fleet=fleet, fleet_row=-1,
-            n_levels_fwd=fwd.n_levels, n_levels_bwd=bwd.n_levels,
-            graph_id=gid, max_cached_solves=self.max_cached_solves,
-            born_s=self._clock(), born_tick=self.now_ticks,
-            ttl_s=self.ttl_s if ttl_s is _UNSET else ttl_s,
-            max_age_ticks=(self.max_age_ticks if max_age_ticks is _UNSET
-                           else max_age_ticks))
-        handle.fleet_row = fleet.admit(handle, pf)
-        if handle.ttl_s is not None or handle.max_age_ticks is not None:
-            self._has_mortal = True
-        self._handles[gid] = handle
-        self._handles.move_to_end(gid)
-        self._shrink()
+        (_, handle), = self._attach_many([(g, f, schedules, gid)],
+                                         ttl_s=ttl_s,
+                                         max_age_ticks=max_age_ticks)
         return handle
+
+    def _attach_many(self, items: Sequence[Tuple[Graph, ACFactor,
+                                                 Optional[Tuple],
+                                                 str]],
+                     *, ttl_s=_UNSET, max_age_ticks=_UNSET
+                     ) -> List[Tuple[str, FactorHandle]]:
+        """Admit a batch of ``(graph, factor, schedules|None, gid)``:
+        factors are grouped by shape bucket and each bucket's stack
+        grows **once**, scattering all its new rows in one update
+        (:meth:`FactorFleet.admit_many`) — per-factor ``attach`` in a
+        loop pays O(B²) device copies for B same-bucket admissions.
+        Handles register in ``items`` order (LRU order preserved); the
+        budget sweep runs once at the end."""
+        built: List[Tuple[FactorFleet, FactorHandle, _PaddedFactor,
+                          str]] = []
+        for g, f, schedules, gid in items:
+            dev = f.to_device()
+            if schedules is None:
+                schedules = build_schedules_batched([dev])[0]
+            fwd, bwd = schedules
+            pf = _PaddedFactor(g, dev, fwd, bwd)
+            fleet = self._fleets.get(pf.n_pad)
+            if fleet is None:
+                fleet = self._fleets[pf.n_pad] = FactorFleet(pf.n_pad)
+            handle = FactorHandle(
+                graph=g, factor=f, fleet=fleet, fleet_row=-1,
+                n_levels_fwd=fwd.n_levels, n_levels_bwd=bwd.n_levels,
+                graph_id=gid, max_cached_solves=self.max_cached_solves,
+                born_s=self._clock(), born_tick=self.now_ticks,
+                ttl_s=self.ttl_s if ttl_s is _UNSET else ttl_s,
+                max_age_ticks=(self.max_age_ticks
+                               if max_age_ticks is _UNSET
+                               else max_age_ticks))
+            built.append((fleet, handle, pf, gid))
+        by_fleet: Dict[int, List[Tuple[FactorHandle, _PaddedFactor]]] = {}
+        for fleet, handle, pf, _ in built:
+            by_fleet.setdefault(fleet.n_pad, []).append((handle, pf))
+        for n_pad, pairs in by_fleet.items():
+            rows = self._fleets[n_pad].admit_many(pairs)
+            for (handle, _), row in zip(pairs, rows):
+                handle.fleet_row = row
+        out: List[Tuple[str, FactorHandle]] = []
+        for _, handle, _, gid in built:
+            if handle.ttl_s is not None or handle.max_age_ticks is not None:
+                self._has_mortal = True
+            self._handles[gid] = handle
+            self._handles.move_to_end(gid)
+            out.append((gid, handle))
+        self._shrink()
+        return out
 
     def _shrink(self):
         """Evict LRU handles until budget/count bounds hold (the newest

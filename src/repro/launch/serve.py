@@ -19,6 +19,18 @@ than all at once, so the report separates *queueing delay*
 latency (admission → finish).  Without it the replay is closed-loop
 (every request arrives at t=0) and queueing delay measures head-of-line
 blocking only.
+
+``--async`` drives the same replay through the
+:class:`repro.serve.SolveFrontend` — a background engine-driver thread
+with futures resolved on retirement and a bounded ingress queue — and
+``--policy {fifo,priority,deadline}`` selects the admission scheduler
+(``--max-skips`` bounds backfill; ``--deadline-ms`` stamps a per-request
+SLO budget that the deadline policy orders by and enforces via
+hopeless-lane eviction):
+
+    PYTHONPATH=src python -m repro.launch.serve --suite tiny \
+        --requests 24 --arrival-rate 50 --async --policy deadline \
+        --deadline-ms 2000
 """
 from __future__ import annotations
 
@@ -38,12 +50,14 @@ def percentile(xs, q):
 
 
 def make_trace(gids, sizes, n_requests, *, seed=0, max_nrhs=4,
-               tols=(1e-4, 1e-6), arrival_rate=None):
+               tols=(1e-4, 1e-6), arrival_rate=None, deadline_s=None):
     """Seeded mixed trace: round-robin-ish graph choice, ~1/3 multi-RHS,
     alternating tolerances — deliberately interleaved so consecutive
     requests rarely share a factor.  All randomness (rhs content *and*
     Poisson arrival gaps) comes from the one seeded generator, so a
-    trace is reproducible across runs and artifacts."""
+    trace is reproducible across runs and artifacts.  ``deadline_s``
+    stamps every request with the same relative SLO budget (deadline
+    policies order by it and evict hopeless lanes)."""
     import numpy as np
     from repro.serve import SolveRequest
     rng = np.random.default_rng(seed)
@@ -60,20 +74,22 @@ def make_trace(gids, sizes, n_requests, *, seed=0, max_nrhs=4,
             arrival += float(rng.exponential(1.0 / arrival_rate))
         reqs.append(SolveRequest(rid=rid, graph_id=gid, b=b,
                                  tol=tols[rid % len(tols)], maxiter=500,
-                                 arrival_s=arrival))
+                                 arrival_s=arrival, deadline_s=deadline_s))
     return reqs
 
 
 def build_service(*, suite="tiny", slots=8, iters_per_tick=8, chunk=128,
-                  fill_slack=32, memory_budget_mb=None):
+                  fill_slack=32, memory_budget_mb=None, policy="fifo",
+                  max_skips=None):
     """Stand up the service: generate the graph suite, admit the fleet
     to a :class:`FactorCache` in one batched factorization, wrap it in a
-    :class:`SolveEngine`.  Returns ``(engine, sizes, factor_s)`` — reuse
-    the engine across trace replays so jitted step programs amortize."""
+    :class:`SolveEngine` with the named admission policy.  Returns
+    ``(engine, sizes, factor_s)`` — reuse the engine across trace
+    replays so jitted step programs amortize."""
     import jax
     from repro.data import graphs
     from repro.core.solver import FactorCache
-    from repro.serve import SolveEngine
+    from repro.serve import SolveEngine, make_policy
 
     spec = graphs.SUITE_TINY if suite == "tiny" else \
         {k: graphs.SUITE[k] for k in SMALL_NAMES}
@@ -87,8 +103,36 @@ def build_service(*, suite="tiny", slots=8, iters_per_tick=8, chunk=128,
                          [jax.random.key(i) for i in range(len(built))],
                          graph_ids=list(built.keys()))
     t_factor = time.perf_counter() - t0
-    eng = SolveEngine(cache, slots=slots, iters_per_tick=iters_per_tick)
+    eng = SolveEngine(cache, slots=slots, iters_per_tick=iters_per_tick,
+                      admission=make_policy(policy, max_skips=max_skips))
     return eng, {name: g.n for name, g in built.items()}, t_factor
+
+
+def trace_metrics(trace, done, t_serve):
+    """Service metrics over completed requests — shared by the sync and
+    async replay paths so their reports are directly comparable."""
+    import numpy as np
+    e2e = [r.latency_s for r in done]
+    queue = [r.queue_wait_s for r in done]
+    service = [r.service_s for r in done]
+    rhs_total = sum(r.nrhs for r in done)
+    return dict(
+        requests=len(trace), completed=len(done), rhs_total=rhs_total,
+        converged=int(sum(bool(r.converged) for r in done)),
+        deadline_missed=int(sum(r.status == "deadline_missed"
+                                for r in done)),
+        serve_s=t_serve,
+        requests_per_s=len(done) / t_serve if t_serve > 0 else 0.0,
+        rhs_per_s=rhs_total / t_serve if t_serve > 0 else 0.0,
+        latency_p50_s=percentile(e2e, 50),
+        latency_p95_s=percentile(e2e, 95),
+        latency_max_s=percentile(e2e, 100),
+        queue_wait_p50_s=percentile(queue, 50),
+        queue_wait_p95_s=percentile(queue, 95),
+        service_p50_s=percentile(service, 50),
+        service_p95_s=percentile(service, 95),
+        iters_total=int(sum(int(np.sum(r.iters)) for r in done
+                            if r.iters is not None)))
 
 
 def replay_trace(eng, trace):
@@ -97,7 +141,6 @@ def replay_trace(eng, trace):
     return service metrics.  Queueing delay (submit → admission) and
     end-to-end latency (submit → finish) are reported separately from
     service latency (admission → finish)."""
-    import numpy as np
     from collections import deque
     pending = deque(trace)
     done = []
@@ -111,50 +154,78 @@ def replay_trace(eng, trace):
         elif pending:
             time.sleep(min(pending[0].arrival_s - now, 0.01))
     t_serve = time.perf_counter() - t0
-    e2e = [r.latency_s for r in done]
-    queue = [r.queue_wait_s for r in done]
-    service = [r.service_s for r in done]
-    rhs_total = sum(r.nrhs for r in done)
-    return dict(
-        requests=len(trace), completed=len(done), rhs_total=rhs_total,
-        converged=int(sum(bool(r.converged) for r in done)),
-        serve_s=t_serve,
-        requests_per_s=len(done) / t_serve if t_serve > 0 else 0.0,
-        rhs_per_s=rhs_total / t_serve if t_serve > 0 else 0.0,
-        latency_p50_s=percentile(e2e, 50),
-        latency_p95_s=percentile(e2e, 95),
-        latency_max_s=percentile(e2e, 100),
-        queue_wait_p50_s=percentile(queue, 50),
-        queue_wait_p95_s=percentile(queue, 95),
-        service_p50_s=percentile(service, 50),
-        service_p95_s=percentile(service, 95),
-        iters_total=int(sum(int(np.sum(r.iters)) for r in done))), done
+    return trace_metrics(trace, done, t_serve), done
+
+
+def replay_trace_async(frontend, trace):
+    """Open-loop replay through the async frontend: the caller thread
+    only *submits* (at each request's ``arrival_s``); the frontend's
+    driver thread runs the engine and resolves futures on retirement.
+    Returns the same metrics dict as :func:`replay_trace`."""
+    import concurrent.futures
+    from repro.serve import EngineOverloadedError
+    futs = []
+    t0 = time.perf_counter()
+    for req in trace:
+        now = time.perf_counter() - t0
+        if req.arrival_s > now:
+            time.sleep(req.arrival_s - now)
+        try:
+            futs.append(frontend.submit_request(req))
+        except EngineOverloadedError:
+            pass           # reject-mode backpressure: shed, keep going
+            # (frontend.stats().rejected counts it; completed < requests
+            # in the metrics shows the shortfall)
+    concurrent.futures.wait(futs)
+    t_serve = time.perf_counter() - t0
+    done = [f.result() for f in futs if f.exception() is None]
+    return trace_metrics(trace, done, t_serve), done
 
 
 def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
                 max_nrhs=4, chunk=128, fill_slack=32, seed=0,
                 memory_budget_mb=None, warmup_requests=0,
-                arrival_rate=None):
+                arrival_rate=None, policy="fifo", max_skips=None,
+                deadline_ms=None, use_async=False, max_queue=256,
+                overload="block", return_engine=False):
     """Build the service, replay a trace, return a metrics dict.  With
     ``warmup_requests`` > 0 a throwaway trace is replayed first through
-    the *same* engine so the measured replay excludes jit compiles."""
+    the *same* engine so the measured replay excludes jit compiles.
+    ``use_async`` routes the replay through :class:`SolveFrontend`
+    (background driver thread, futures, bounded ingress queue)."""
     eng, sizes, t_factor = build_service(
         suite=suite, slots=slots, iters_per_tick=iters_per_tick,
         chunk=chunk, fill_slack=fill_slack,
-        memory_budget_mb=memory_budget_mb)
+        memory_budget_mb=memory_budget_mb, policy=policy,
+        max_skips=max_skips)
     gids = list(sizes)
+    deadline_s = deadline_ms / 1e3 if deadline_ms else None
     if warmup_requests:
         # same seed: the warmup trace is a prefix-identical replay (sans
         # arrival gaps), so every admission shape and bucket step program
-        # of the measured trace is already compiled
+        # of the measured trace is already compiled.  No deadlines: a
+        # slow compile tick must not evict warmup lanes.
         replay_trace(eng, make_trace(gids, sizes, warmup_requests,
                                      seed=seed,
                                      max_nrhs=min(max_nrhs, slots)))
     trace = make_trace(gids, sizes, requests, seed=seed,
                        max_nrhs=min(max_nrhs, slots),
-                       arrival_rate=arrival_rate)
+                       arrival_rate=arrival_rate, deadline_s=deadline_s)
     ticks_before = eng.ticks                 # exclude warmup from metrics
-    metrics, done = replay_trace(eng, trace)
+    frontend_stats = None
+    if use_async:
+        from repro.serve import SolveFrontend
+        with SolveFrontend(eng, max_queue=max_queue,
+                           overload=overload) as fe:
+            metrics, done = replay_trace_async(fe, trace)
+            fs = fe.stats()
+            frontend_stats = dict(submitted=fs.submitted,
+                                  completed=fs.completed,
+                                  failed=fs.failed, rejected=fs.rejected,
+                                  queue_peak=fs.queue_peak,
+                                  max_queue=fs.max_queue)
+    else:
+        metrics, done = replay_trace(eng, trace)
     ticks = eng.ticks - ticks_before
     metrics = dict(suite=suite, graphs=len(gids), slots=slots,
                    iters_per_tick=iters_per_tick, factor_s=t_factor,
@@ -162,9 +233,13 @@ def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
                    ticks_per_s=(ticks / metrics["serve_s"]
                                 if metrics["serve_s"] > 0 else 0.0),
                    arrival_rate=arrival_rate, seed=seed,
+                   policy=policy, mode="async" if use_async else "sync",
+                   frontend=frontend_stats,
                    cache=eng.cache.stats(),
                    engine=eng.stats().as_dict(),
                    **metrics)
+    if return_engine:      # benchmarks reuse the factored cache (sweeps)
+        return metrics, done, eng
     return metrics, done
 
 
@@ -180,6 +255,27 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="open-loop Poisson arrival rate (requests/sec); "
                          "omit for closed-loop (all arrive at t=0)")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="drive the replay through the SolveFrontend "
+                         "(background engine thread + futures)")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "priority", "deadline"],
+                    help="admission scheduler (fifo = head-of-line "
+                         "blocking; priority/deadline backfill narrow "
+                         "requests past a blocked wide head)")
+    ap.add_argument("--max-skips", type=int, default=None,
+                    help="backfill starvation bound (admission rounds a "
+                         "blocked request may be skipped)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="stamp every request with this SLO budget; the "
+                         "deadline policy orders by it and evicts "
+                         "hopeless lanes (status=deadline_missed)")
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="async frontend ingress bound (backpressure)")
+    ap.add_argument("--overload", default="block",
+                    choices=["block", "reject"],
+                    help="async backpressure: block submitters or "
+                         "reject with EngineOverloadedError")
     ap.add_argument("--memory-budget-mb", type=int, default=None)
     ap.add_argument("--json", default=None,
                     help="write service metrics to this JSON file")
@@ -190,10 +286,14 @@ def main():
         iters_per_tick=args.iters_per_tick, max_nrhs=args.max_nrhs,
         chunk=args.chunk, seed=args.seed,
         memory_budget_mb=args.memory_budget_mb,
-        arrival_rate=args.arrival_rate)
+        arrival_rate=args.arrival_rate, policy=args.policy,
+        max_skips=args.max_skips, deadline_ms=args.deadline_ms,
+        use_async=args.use_async, max_queue=args.max_queue,
+        overload=args.overload)
 
     print(f"suite={metrics['suite']} graphs={metrics['graphs']} "
-          f"factor_batched={metrics['factor_s']:.2f}s")
+          f"factor_batched={metrics['factor_s']:.2f}s "
+          f"mode={metrics['mode']} policy={metrics['policy']}")
     print(f"served {metrics['completed']}/{metrics['requests']} requests "
           f"({metrics['rhs_total']} rhs, {metrics['converged']} converged) "
           f"in {metrics['serve_s']:.2f}s over {metrics['slots']} slots, "
@@ -209,6 +309,15 @@ def main():
           f"p95={metrics['service_p95_s']*1e3:.0f}ms"
           + (f"  (open-loop @ {metrics['arrival_rate']:.1f} req/s)"
              if metrics["arrival_rate"] else "  (closed-loop)"))
+    eng_d = metrics["engine"]
+    if eng_d["policy"] != "fifo" or metrics["deadline_missed"]:
+        print(f"scheduler[{eng_d['policy']}]: "
+              f"admitted={eng_d['admitted_reqs']} "
+              f"backfill_skips={eng_d['backfill_skips']} "
+              f"(bound {eng_d['max_skips']}/req, "
+              f"{eng_d['skipped_reqs']} skipped) "
+              f"deadline_evictions={eng_d['deadline_evictions']} "
+              f"missed={metrics['deadline_missed']}")
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(metrics, fh, indent=2)

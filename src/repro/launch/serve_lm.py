@@ -1,6 +1,8 @@
-"""LM serving launcher: continuous-batching token engine over a
-smoke-size model (the seed's original serving workload, kept as a
-substrate exercise — the production service is ``repro.launch.serve``).
+"""LM serving launcher.  **Deprecated** — kept only as a substrate
+exercise over the seed's token engine (``serve.lm_engine``, itself
+deprecated).  It does not share the solve engine, scheduler or async
+frontend; the production service CLI is ``repro.launch.serve`` (use
+``--async --policy {fifo,priority,deadline}`` there).
 
     PYTHONPATH=src python -m repro.launch.serve_lm --arch qwen3-14b \
         --requests 8 --slots 4 --max-new 16

@@ -1,0 +1,198 @@
+"""Pluggable admission scheduling for the solve service.
+
+PR 3 made lane state device-resident; admission stayed an inline FIFO
+inside ``SolveEngine._admit`` — fair, but a wide request at the head of
+the queue idles every free lane behind it (head-of-line blocking).
+This module factors the *decision* out of the engine into a policy
+object the engine consults once per tick:
+
+* :class:`FIFOAdmission` — strict submission order with head-of-line
+  blocking; byte-for-byte the engine's historical behavior (it is the
+  engine's default, so sync ``SolveEngine`` users see no change);
+* :class:`PriorityAdmission` — priority classes (lower value = more
+  urgent) with **backfill**: when the most-urgent waiting request does
+  not fit the free lanes, later narrow requests may skip ahead into
+  them;
+* :class:`DeadlineAdmission` — earliest-deadline-first ordering (then
+  priority, then arrival) with the same backfill machinery, plus
+  ``evict_hopeless = True``: the engine retires lanes whose deadline can
+  no longer be met with a ``deadline_missed`` status instead of letting
+  them squat on fleet slots.
+
+**Starvation bound.**  Backfill is capped: each *admission round* (one
+``select`` call with a non-empty queue) in which at least one request is
+admitted past a blocked, more-urgent request increments the blocked
+request's ``sched_skips``.  Once ``sched_skips == max_skips`` the
+request becomes a **barrier** — nothing behind it in the policy order
+may be admitted until it fits.  Hence a skipped request waits at most
+``max_skips`` backfill rounds once it is the most-urgent blocked
+request, and ``backfill_skips <= max_skips * skipped_reqs`` is a hard
+counter invariant (gated in CI by
+``benchmarks.check_serve_regression``).
+
+Policies only *order and bound* admission; the engine still performs
+the jitted scatter per admitted request, so serving stays bit-exact
+with direct ``FactorHandle.solve`` regardless of policy — scheduling
+changes *when* a request's lanes start, never what they compute.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
+
+if TYPE_CHECKING:                                     # pragma: no cover
+    from .engine import SolveRequest
+
+
+class AdmissionPolicy:
+    """Decides which waiting requests to admit into free lanes.
+
+    ``select`` receives a snapshot of the waiting queue (submission
+    order) and the number of free lanes, and returns the requests to
+    admit *this round*, in admission order; the engine scatters each and
+    removes it from the queue.  The policy must only return requests
+    whose combined ``nrhs`` fits ``free``.
+
+    ``evict_hopeless`` tells the engine to retire active lanes whose
+    request can no longer meet its deadline (see
+    :class:`DeadlineAdmission`).
+    """
+
+    name = "base"
+    max_skips = 0
+    evict_hopeless = False
+
+    def __init__(self) -> None:
+        self.rounds = 0            # select calls with a non-empty queue
+        self.backfill_skips = 0    # total skip increments across requests
+        self.skipped_reqs = 0      # requests that were ever skipped
+        self.barrier_rounds = 0    # rounds cut short by a starvation barrier
+
+    def select(self, waiting: Sequence["SolveRequest"], free: int, *,
+               now: float) -> List["SolveRequest"]:
+        raise NotImplementedError
+
+    def counters(self) -> Dict[str, int]:
+        return dict(sched_rounds=self.rounds,
+                    backfill_skips=self.backfill_skips,
+                    skipped_reqs=self.skipped_reqs,
+                    barrier_rounds=self.barrier_rounds)
+
+
+class _OrderedBackfill(AdmissionPolicy):
+    """Shared machinery: admit greedily in policy order, let later
+    requests backfill past blocked ones, stop at a starvation barrier.
+
+    Subclasses define ``_key(req)`` — the policy order (ascending; ties
+    broken by engine submission sequence, which ``_key`` must include
+    last for stability).
+    """
+
+    def __init__(self, max_skips: int = 8):
+        super().__init__()
+        if max_skips < 0:
+            raise ValueError("max_skips must be >= 0")
+        self.max_skips = max_skips
+
+    def _key(self, req: "SolveRequest", now: float):
+        raise NotImplementedError
+
+    def select(self, waiting: Sequence["SolveRequest"], free: int, *,
+               now: float) -> List["SolveRequest"]:
+        if not waiting:
+            return []
+        self.rounds += 1
+        order = sorted(waiting, key=lambda r: self._key(r, now))
+        take: List["SolveRequest"] = []
+        blocked: List["SolveRequest"] = []   # more-urgent, didn't fit
+        skipped: List["SolveRequest"] = []   # blocked AND passed over
+        for r in order:
+            if r.nrhs <= free:
+                take.append(r)
+                free -= r.nrhs
+                for b in blocked:            # this admission skips past b
+                    if b not in skipped:
+                        skipped.append(b)
+            else:
+                if r.sched_skips >= self.max_skips:
+                    # starvation barrier: r has been skipped its full
+                    # allowance — nothing behind it may backfill until
+                    # it admits (requests *before* it in policy order
+                    # are more urgent, not backfill, so `take` stands).
+                    # Only a real seal counts as a barrier round: under
+                    # max_skips == 0 this branch is plain head-of-line
+                    # blocking, not a seal.
+                    if self.max_skips > 0:
+                        self.barrier_rounds += 1
+                    break
+                blocked.append(r)
+        for b in skipped:
+            if b.sched_skips == 0:
+                self.skipped_reqs += 1
+            b.sched_skips += 1
+            self.backfill_skips += 1
+        return take
+
+
+class FIFOAdmission(_OrderedBackfill):
+    """Strict submission order, head-of-line blocking (the historical
+    inline behavior): ``max_skips = 0`` makes the queue head an
+    immediate barrier, so nothing ever skips ahead."""
+
+    name = "fifo"
+
+    def __init__(self):
+        super().__init__(max_skips=0)
+
+    def _key(self, req: "SolveRequest", now: float):
+        return (req._seq,)
+
+
+class PriorityAdmission(_OrderedBackfill):
+    """Priority classes with bounded backfill.  Order: ``(priority,
+    submission seq)`` — lower priority value is more urgent; within a
+    class, FIFO.  Narrow requests may skip a blocked wide head at most
+    ``max_skips`` rounds."""
+
+    name = "priority"
+
+    def _key(self, req: "SolveRequest", now: float):
+        return (req.priority, req._seq)
+
+
+class DeadlineAdmission(_OrderedBackfill):
+    """Earliest-deadline-first with bounded backfill and hopeless-lane
+    eviction.  Order: ``(deadline, priority, seq)``; requests without a
+    deadline sort last within their priority class.  Sets
+    ``evict_hopeless`` so the engine retires lanes that can no longer
+    finish before their deadline (``status == "deadline_missed"``)
+    instead of letting them hold fleet slots to maxiter."""
+
+    name = "deadline"
+    evict_hopeless = True
+
+    def _key(self, req: "SolveRequest", now: float):
+        dl = req._deadline_abs
+        return (dl if dl is not None else float("inf"),
+                req.priority, req._seq)
+
+
+_POLICIES = {
+    "fifo": FIFOAdmission,
+    "priority": PriorityAdmission,
+    "deadline": DeadlineAdmission,
+}
+
+
+def make_policy(name: str, *, max_skips: Optional[int] = None
+                ) -> AdmissionPolicy:
+    """Build a policy by CLI name (``fifo`` / ``priority`` /
+    ``deadline``).  ``max_skips`` overrides the backfill allowance for
+    the backfilling policies (FIFO is always 0 — that *is* FIFO)."""
+    try:
+        cls = _POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown admission policy {name!r}; "
+                         f"choose from {sorted(_POLICIES)}") from None
+    if cls is FIFOAdmission or max_skips is None:
+        return cls()
+    return cls(max_skips=max_skips)

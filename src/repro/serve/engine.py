@@ -30,6 +30,16 @@ with the data-ownership model inverted relative to the PR-2 engine:
   (device→host traffic = retired columns); freed lanes readmit from the
   queue on the next tick.
 
+Admission *decisions* are delegated to a pluggable
+:class:`admission.AdmissionPolicy` (default :class:`FIFOAdmission`,
+which reproduces the historical inline FIFO with head-of-line blocking
+exactly).  Backfilling policies let narrow requests skip a blocked wide
+head into free lanes, bounded by ``max_skips`` per skipped request;
+deadline-aware policies additionally have the engine retire lanes that
+can no longer meet their deadline (``status == "deadline_missed"``)
+via a jitted deactivate, freeing fleet slots early.  The asyncio-facing
+frontend over this engine lives in :mod:`repro.serve.frontend`.
+
 Because frozen-lane PCG rows are independent and the engine runs the
 same fleet PCG body as ``FactorHandle.solve`` over the same stacked
 arrays, a served request's trajectory is **bit-identical** to a direct
@@ -41,7 +51,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 import jax
@@ -51,6 +61,7 @@ from repro.core.solver import FactorCache, FactorFleet, FactorHandle
 from repro.core.parac import _next_pow2
 from repro.core.pcg import (FleetArrays, FleetPCGState, pcg_fleet_init,
                             pcg_fleet_step)
+from repro.serve.admission import AdmissionPolicy, FIFOAdmission
 
 
 @dataclasses.dataclass(eq=False)          # identity equality: results are
@@ -61,7 +72,13 @@ class SolveRequest:                        # arrays, field-wise == is a trap
     ``nrhs`` lanes and completes when every column has retired.  Result
     fields are populated on completion; ``x`` matches ``b``'s shape.
     ``arrival_s`` is an optional trace-relative arrival offset used by
-    open-loop replay drivers (the engine itself only timestamps)."""
+    open-loop replay drivers (the engine itself only timestamps).
+
+    Scheduling fields: ``priority`` (lower = more urgent; only ordering
+    policies read it), ``deadline_s`` (SLO budget in seconds from
+    submission; deadline-aware policies order by it and the engine
+    evicts lanes that can no longer meet it).  ``status`` on completion
+    is ``"converged"``, ``"maxiter"`` or ``"deadline_missed"``."""
 
     rid: int
     graph_id: str
@@ -69,11 +86,18 @@ class SolveRequest:                        # arrays, field-wise == is a trap
     tol: float = 1e-6
     maxiter: int = 500
     arrival_s: float = 0.0
+    priority: int = 0
+    deadline_s: Optional[float] = None
     # -- filled by the engine -----------------------------------------------
     x: Optional[np.ndarray] = None
     iters: Optional[np.ndarray] = None
     relres: Optional[np.ndarray] = None
     converged: Optional[bool] = None
+    status: str = ""
+    sched_skips: int = 0      # admission rounds this request was skipped
+    _seq: int = -1            # engine submission sequence (policy tiebreak)
+    _deadline_abs: Optional[float] = None   # engine-clock absolute deadline
+    _evicted: bool = False    # deadline eviction marked (once per request)
     submit_time: float = 0.0
     admit_time: float = 0.0
     finish_time: float = 0.0
@@ -114,7 +138,14 @@ class EngineStats:
     counters expose the mega-batching contract: ``step_compiles`` grows
     per *shape bucket*, never per factor; ``cols_in``/``cols_out`` count
     host↔device column transfers, which are O(admitted + retired), never
-    O(slots × ticks)."""
+    O(slots × ticks).
+
+    The scheduler block exposes every admission decision:
+    ``admitted_reqs == completed + in_flight_reqs`` always (gated in
+    CI), ``backfill_skips <= max_skips * skipped_reqs`` is the
+    starvation bound, ``deadline_evictions`` counts requests retired
+    early as hopeless, and ``queue_peak`` is the high-water queue
+    depth."""
 
     ticks: int
     completed: int
@@ -128,6 +159,17 @@ class EngineStats:
     gather_compiles: int
     cols_in: int
     cols_out: int
+    # -- scheduler decisions ------------------------------------------------
+    policy: str
+    max_skips: int
+    admitted_reqs: int
+    in_flight_reqs: int
+    sched_rounds: int
+    backfill_skips: int
+    skipped_reqs: int
+    barrier_rounds: int
+    deadline_evictions: int
+    queue_peak: int
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -214,6 +256,15 @@ def _gather_program(state: FleetPCGState, rows):
     return X, state.it[rows], relres
 
 
+def _evict_program(state: FleetPCGState, rows):
+    """Force-freeze lanes at ``rows`` (deadline eviction): clearing the
+    active flag makes the masked step a no-op for them, so the next
+    retirement gather returns their current partial iterate.  Padding
+    rows carry ``rows == slots`` and drop."""
+    return state._replace(active=state.active.at[rows].set(False,
+                                                           mode="drop"))
+
+
 class SolveEngine:
     """Continuous-batching solve service over a :class:`FactorCache`.
 
@@ -222,12 +273,26 @@ class SolveEngine:
     """
 
     def __init__(self, cache: FactorCache, *, slots: int = 8,
-                 iters_per_tick: int = 8, completed_history: int = 4096):
+                 iters_per_tick: int = 8, completed_history: int = 4096,
+                 admission: Optional[AdmissionPolicy] = None,
+                 clock: Optional[Callable[[], float]] = None):
         if slots < 1:
             raise ValueError("slots must be >= 1")
         self.cache = cache
         self.slots = slots
         self.iters_per_tick = iters_per_tick
+        # pluggable admission scheduler; the default reproduces the
+        # historical inline FIFO (head-of-line blocking) exactly
+        self.admission = admission if admission is not None \
+            else FIFOAdmission()
+        # injectable clock (tests drive deadline eviction without wall
+        # time); every engine timestamp and deadline uses this clock
+        self._clock = clock if clock is not None else time.perf_counter
+        self._est_tick_s = 0.0     # min observed tick duration (s)
+        self._seq = 0              # submission sequence (policy tiebreak)
+        self.admitted_reqs = 0
+        self.deadline_evictions = 0
+        self.queue_peak = 0
         # bounded: a long-running service must not accumulate every
         # finished request's arrays forever (drain return values are the
         # delivery path; this is just recent history)
@@ -248,7 +313,8 @@ class SolveEngine:
         # once per jit specialization (trace time), so the counters
         # count compiled programs; cols_in/cols_out count host↔device
         # column transfers (admitted / retired columns only).
-        self.compile_counts = {"step": 0, "admit": 0, "gather": 0}
+        self.compile_counts = {"step": 0, "admit": 0, "gather": 0,
+                               "evict": 0}
         self.cols_in = 0
         self.cols_out = 0
 
@@ -270,11 +336,16 @@ class SolveEngine:
             counts["gather"] += 1
             return _gather_program(state, rows)
 
+        def evict(state, rows):
+            counts["evict"] += 1
+            return _evict_program(state, rows)
+
         self._admit_fn = jax.jit(
             admit, static_argnames=("f_levels", "b_levels"))
         self._step_fn = jax.jit(
             step, static_argnames=("f_levels", "b_levels"))
         self._gather_fn = jax.jit(gather)
+        self._evict_fn = jax.jit(evict)
 
     # -- request lifecycle --------------------------------------------------
     def submit(self, req: SolveRequest) -> None:
@@ -301,9 +372,15 @@ class SolveEngine:
                 f"engine has {self.slots} slots")
         req._handle = handle
         self._pinned[req.graph_id] = handle
-        req.submit_time = time.perf_counter()
+        if req.submit_time == 0.0:     # a frontend may pre-stamp at ingress
+            req.submit_time = self._clock()
         req.submit_tick = self.ticks
+        req._seq = self._seq
+        self._seq += 1
+        if req.deadline_s is not None:
+            req._deadline_abs = req.submit_time + req.deadline_s
         self.queue.append(req)
+        self.queue_peak = max(self.queue_peak, len(self.queue))
 
     def _bucket(self, fleet: FactorFleet) -> _BucketLanes:
         bl = self._buckets.get(fleet.n_pad)
@@ -312,13 +389,25 @@ class SolveEngine:
         return bl
 
     def _admit(self) -> None:
-        """FIFO admission: scatter queued requests into free lanes until
-        the head request no longer fits (head-of-line blocking keeps
-        completion order fair and shapes static).  One jitted scatter
-        per request; host→device traffic is the request's rhs columns."""
+        """Scheduler-driven admission: the policy orders the waiting
+        queue and decides which requests start this round (FIFO default:
+        strict order with head-of-line blocking; backfill policies let
+        narrow requests skip a blocked wide head, bounded by
+        ``max_skips``).  One jitted scatter per admitted request;
+        host→device traffic is the request's rhs columns."""
         free = [i for i, lane in enumerate(self.lanes) if lane is None]
-        while self.queue and self.queue[0].nrhs <= len(free):
-            req = self.queue.popleft()
+        if not self.queue or not free:
+            return
+        picked = self.admission.select(list(self.queue), len(free),
+                                       now=self._clock())
+        for req in picked:
+            if req.nrhs > len(free):   # defensive: policy overcommitted
+                raise RuntimeError(
+                    f"admission policy {self.admission.name!r} admitted "
+                    f"rid={req.rid} ({req.nrhs} lanes) with only "
+                    f"{len(free)} free")
+            self.queue.remove(req)     # identity match (eq=False)
+            self.admitted_reqs += 1
             handle = req._handle       # fixed at submit: re-attaching the
             fleet = handle.fleet       # graph_id cannot hijack this request
             bl = self._bucket(fleet)
@@ -345,7 +434,7 @@ class SolveEngine:
             bl.n_active += int(act0.sum())
             self.cols_in += j
             req.admit_tick = self.ticks
-            req.admit_time = time.perf_counter()
+            req.admit_time = self._clock()
             for col, lane_i in enumerate(rows):
                 self.lanes[lane_i] = _LaneRef(req, col, bl)
 
@@ -355,7 +444,10 @@ class SolveEngine:
         ``iters_per_tick`` PCG iterations (one jitted step per bucket —
         all factors in the bucket ride the same program), retire finished
         lanes.  Returns requests completed this tick."""
+        t_tick0 = self._clock()
         self._admit()
+        if self.admission.evict_hopeless:
+            self._evict_hopeless()
         done: List[SolveRequest] = []
         for n_pad in sorted(self._buckets):
             bl = self._buckets[n_pad]
@@ -375,7 +467,46 @@ class SolveEngine:
         self._unpin_idle()
         self.ticks += 1
         self.cache.advance_ticks(1)
+        # running *minimum* tick duration — the deadline-eviction lower
+        # bound for "one more tick".  A minimum (not a mean) is the
+        # safe estimator: compile-heavy first ticks must not inflate it
+        # and spuriously evict meetable requests; underestimating only
+        # delays eviction until the deadline has truly passed.  (An
+        # injected constant clock keeps this at 0, so tests evict
+        # exactly when the deadline passes.)
+        dur = self._clock() - t_tick0
+        self._est_tick_s = dur if self._est_tick_s == 0.0 else \
+            min(self._est_tick_s, dur)
         return done
+
+    def _evict_hopeless(self) -> None:
+        """Deadline eviction: a lane is *hopeless* once even an
+        immediately-converging column could not retire before its
+        deadline — it still needs at least one more tick, so
+        ``now + est_tick_s`` (``est_tick_s`` = minimum observed tick
+        duration, a lower bound) crossing the deadline proves the miss.
+        Hopeless lanes are force-frozen on device (one jitted flag
+        scatter per bucket) and retire through the normal gather this
+        same tick with ``status == "deadline_missed"``, freeing their
+        fleet slots instead of iterating on to maxiter."""
+        now = self._clock()
+        doomed: Dict[_BucketLanes, List[int]] = {}
+        for i, lane in enumerate(self.lanes):
+            if lane is None:
+                continue
+            dl = lane.req._deadline_abs
+            if dl is None:
+                continue
+            if lane.req._evicted or now + self._est_tick_s > dl:
+                if not lane.req._evicted:
+                    lane.req._evicted = True
+                    self.deadline_evictions += 1
+                doomed.setdefault(lane.bucket, []).append(i)
+        for bl, rows in doomed.items():
+            jp = _next_pow2(len(rows))
+            rows_a = np.full(jp, self.slots, np.int32)   # pads drop
+            rows_a[:len(rows)] = rows
+            bl.state = self._evict_fn(bl.state, jnp.asarray(rows_a))
 
     def _retire(self, bl: _BucketLanes,
                 rows: List[int]) -> List[SolveRequest]:
@@ -406,8 +537,18 @@ class SolveEngine:
                 req.relres = np.array([c[2] for c in cols])
                 req.converged = bool(np.all(req.relres <= req.tol))
                 req.x = Xr[0] if np.ndim(req.b) == 1 else Xr
-                req.finish_time = time.perf_counter()
+                req.finish_time = self._clock()
                 req.finish_tick = self.ticks
+                if req.converged:
+                    req.status = "converged"
+                elif req._evicted or (
+                        req._deadline_abs is not None
+                        and req.finish_time > req._deadline_abs):
+                    # hopeless lane retired early, or a deadline request
+                    # that ran its maxiter budget out past the deadline
+                    req.status = "deadline_missed"
+                else:
+                    req.status = "maxiter"
                 # release the factor ref: a completed request sitting in
                 # the bounded history must not keep an evicted handle's
                 # fleet row claimed (row recycling is weakref-driven)
@@ -446,6 +587,8 @@ class SolveEngine:
 
     def stats(self) -> EngineStats:
         active = sum(l is not None for l in self.lanes)
+        in_flight = len({id(l.req) for l in self.lanes if l is not None})
+        sched = self.admission.counters()
         return EngineStats(
             ticks=self.ticks, completed=self.n_completed,
             queued=len(self.queue), active_lanes=active, slots=self.slots,
@@ -453,4 +596,14 @@ class SolveEngine:
             step_compiles=self.compile_counts["step"],
             admit_compiles=self.compile_counts["admit"],
             gather_compiles=self.compile_counts["gather"],
-            cols_in=self.cols_in, cols_out=self.cols_out)
+            cols_in=self.cols_in, cols_out=self.cols_out,
+            policy=self.admission.name,
+            max_skips=self.admission.max_skips,
+            admitted_reqs=self.admitted_reqs,
+            in_flight_reqs=in_flight,
+            sched_rounds=sched["sched_rounds"],
+            backfill_skips=sched["backfill_skips"],
+            skipped_reqs=sched["skipped_reqs"],
+            barrier_rounds=sched["barrier_rounds"],
+            deadline_evictions=self.deadline_evictions,
+            queue_peak=self.queue_peak)

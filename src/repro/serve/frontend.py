@@ -1,0 +1,257 @@
+"""Async serving frontend: a background-thread driver over
+:class:`SolveEngine` with an asyncio-friendly submit/await API and a
+bounded ingress queue with backpressure.
+
+The engine itself is deliberately single-threaded (its lane maps, pin
+table and jitted-program counters are plain Python state), so the
+frontend owns **one driver thread** that is the only thread ever
+touching the engine or its :class:`FactorCache`:
+
+* ``submit()`` validates nothing itself — it enqueues ``(request,
+  future)`` onto a bounded ingress deque and wakes the driver.  The
+  driver forwards ingress to ``engine.submit`` (validation errors
+  resolve the future exceptionally), ticks while the engine is busy,
+  and resolves each request's future the moment it retires;
+* **backpressure**: when ``ingress + engine queue`` reaches
+  ``max_queue``, ``submit`` either blocks until the scheduler drains
+  (``overload="block"``) or raises :class:`EngineOverloadedError`
+  (``overload="reject"``) — rejected submissions are counted and never
+  reach the engine;
+* ``await frontend.solve(graph_id, b)`` is the asyncio face: it wraps
+  the concurrent future for the running event loop, so a service can
+  multiplex thousands of callers over one engine without threads of its
+  own.
+
+Results are the engine's: the driver thread runs the same tick loop as
+the synchronous ``run_until_drained``, so a request served through the
+frontend is **bit-exact** with a direct ``FactorHandle.solve`` of the
+same rhs block (tested), whatever the admission policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from concurrent.futures import Future
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .engine import EngineStats, SolveEngine, SolveRequest
+
+
+class EngineOverloadedError(RuntimeError):
+    """Raised by ``submit`` under ``overload="reject"`` when the bounded
+    request queue is full (the backpressure signal a load balancer turns
+    into HTTP 429 / retry-after)."""
+
+
+@dataclasses.dataclass
+class FrontendStats:
+    """Queue-depth and lifecycle counters for the async frontend.
+    ``queue_depth``/``queue_peak`` count requests waiting *anywhere*
+    before lane admission (frontend ingress + engine queue)."""
+
+    submitted: int
+    completed: int
+    failed: int
+    rejected: int
+    queue_depth: int
+    queue_peak: int
+    max_queue: int
+    engine: EngineStats
+
+    def as_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["engine"] = self.engine.as_dict()
+        return d
+
+
+class SolveFrontend:
+    """Asyncio-friendly service frontend over a :class:`SolveEngine`.
+
+    ::
+
+        eng = SolveEngine(cache, admission=make_policy("deadline"))
+        with SolveFrontend(eng, max_queue=256) as fe:
+            res = await fe.solve("grid2d_64", b, deadline_s=0.5)
+            # res.x, res.status in {"converged", "deadline_missed", ...}
+
+    ``submit`` / ``submit_request`` return a
+    :class:`concurrent.futures.Future` resolving to the completed
+    :class:`SolveRequest`; ``solve`` awaits it on the caller's event
+    loop.  Thread-safe: any number of producer threads / event loops may
+    submit concurrently.
+    """
+
+    def __init__(self, engine: SolveEngine, *, max_queue: int = 256,
+                 overload: str = "block", idle_wait_s: float = 0.05):
+        if max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        if overload not in ("block", "reject"):
+            raise ValueError("overload must be 'block' or 'reject'")
+        self.engine = engine
+        self.max_queue = max_queue
+        self.overload = overload
+        self.idle_wait_s = idle_wait_s
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)    # driver wake-up
+        self._space = threading.Condition(self._lock)   # submitter wake-up
+        self._ingress: Deque[Tuple[SolveRequest, Future]] = deque()
+        self._futures: Dict[SolveRequest, Future] = {}
+        self._closed = False
+        self._seq = 0
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0          # futures resolved exceptionally
+        self.rejected = 0
+        self.queue_peak = 0
+        self._thread = threading.Thread(target=self._run,
+                                        name="solve-frontend", daemon=True)
+        self._thread.start()
+
+    # -- submission (any thread) --------------------------------------------
+    def _depth(self) -> int:
+        # ingress + engine queue = requests waiting for a lane; reading
+        # len() of the engine deque cross-thread is atomic under the GIL
+        # and only feeds backpressure, never engine decisions
+        return len(self._ingress) + len(self.engine.queue)
+
+    def submit_request(self, req: SolveRequest) -> "Future[SolveRequest]":
+        """Queue a pre-built :class:`SolveRequest`; returns a future that
+        resolves to the same (completed) request object on retirement,
+        or raises the engine's validation error."""
+        fut: "Future[SolveRequest]" = Future()
+        with self._work:
+            if self._closed:
+                raise RuntimeError("submit on a closed SolveFrontend")
+            while self._depth() >= self.max_queue:
+                if self.overload == "reject":
+                    self.rejected += 1
+                    raise EngineOverloadedError(
+                        f"request queue full ({self.max_queue} waiting)")
+                self._space.wait(timeout=self.idle_wait_s)
+                if self._closed:
+                    raise RuntimeError("SolveFrontend closed while "
+                                       "blocked on backpressure")
+            # pre-stamp submission so queueing delay includes ingress
+            # time (the engine keeps a pre-stamped submit_time)
+            if req.submit_time == 0.0:
+                req.submit_time = self.engine._clock()
+            self._ingress.append((req, fut))
+            self.submitted += 1
+            self.queue_peak = max(self.queue_peak, self._depth())
+            self._work.notify_all()
+        return fut
+
+    def submit(self, graph_id: str, b, *, tol: float = 1e-6,
+               maxiter: int = 500, priority: int = 0,
+               deadline_s: Optional[float] = None,
+               rid: Optional[int] = None) -> "Future[SolveRequest]":
+        """Build and queue a solve request (``b``: ``(n,)`` or
+        ``(nrhs, n)``)."""
+        with self._lock:
+            self._seq += 1
+            auto_rid = self._seq
+        return self.submit_request(SolveRequest(
+            rid=rid if rid is not None else auto_rid, graph_id=graph_id,
+            b=np.asarray(b), tol=tol, maxiter=maxiter, priority=priority,
+            deadline_s=deadline_s))
+
+    async def solve(self, graph_id: str, b, **kw) -> SolveRequest:
+        """Asyncio face: ``res = await frontend.solve(gid, b)``."""
+        import asyncio
+        return await asyncio.wrap_future(self.submit(graph_id, b, **kw))
+
+    # -- driver thread (sole owner of the engine) ---------------------------
+    def _run(self) -> None:
+        # sole owner of the engine; `_futures` is touched only here
+        # (dict get/set/pop are GIL-atomic, so stats/drain may peek)
+        eng = self.engine
+        while True:
+            with self._work:
+                while (not self._ingress and not eng.busy
+                       and not self._closed):
+                    self._work.wait(timeout=self.idle_wait_s)
+                if self._closed:
+                    # close(drain=True) already waited for idle; a hard
+                    # close abandons in-flight work deliberately
+                    break
+                batch = list(self._ingress)
+                self._ingress.clear()
+                if batch:
+                    self._space.notify_all()
+            for req, fut in batch:
+                try:
+                    eng.submit(req)
+                except Exception as exc:   # unknown graph / bad rhs shape
+                    self.failed += 1
+                    if not fut.done():     # caller may have cancelled
+                        fut.set_exception(exc)
+                else:
+                    self._futures[req] = fut
+            if eng.busy:
+                for done in eng.tick():
+                    fut = self._futures.pop(done, None)
+                    if fut is None:
+                        continue   # submitted directly to the engine,
+                        # not through the frontend: not ours to count
+                    self.completed += 1
+                    if not fut.done():
+                        fut.set_result(done)
+                with self._space:
+                    self._space.notify_all()   # lanes freed → queue drained
+        # closed: fail whatever never completed
+        for req, fut in list(self._futures.items()):
+            self.failed += 1
+            if not fut.done():
+                fut.set_exception(RuntimeError("SolveFrontend closed"))
+        self._futures.clear()
+        for req, fut in list(self._ingress):
+            self.failed += 1
+            if not fut.done():
+                fut.set_exception(RuntimeError("SolveFrontend closed"))
+        self._ingress.clear()
+
+    # -- lifecycle ----------------------------------------------------------
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every submitted request has resolved (or timeout;
+        returns False on timeout).  The driver keeps running.  Counts,
+        not queue emptiness: work the driver holds between ingress and
+        engine submission is still pending."""
+        import time as _time
+        deadline = None if timeout is None else _time.monotonic() + timeout
+        while self.submitted > self.completed + self.failed:
+            if deadline is not None and _time.monotonic() > deadline:
+                return False
+            _time.sleep(0.001)
+        return True
+
+    def close(self, *, drain: bool = True,
+              timeout: Optional[float] = None) -> None:
+        """Stop the driver thread.  With ``drain`` (default) in-flight
+        and queued work finishes first; otherwise pending futures fail
+        with ``RuntimeError``."""
+        if drain:
+            self.drain(timeout=timeout)
+        with self._work:
+            self._closed = True
+            self._work.notify_all()
+            self._space.notify_all()
+        self._thread.join(timeout=10.0)
+
+    def __enter__(self) -> "SolveFrontend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))
+
+    def stats(self) -> FrontendStats:
+        with self._lock:
+            depth = self._depth()
+            peak = max(self.queue_peak, depth)
+        return FrontendStats(
+            submitted=self.submitted, completed=self.completed,
+            failed=self.failed, rejected=self.rejected,
+            queue_depth=depth, queue_peak=peak,
+            max_queue=self.max_queue, engine=self.engine.stats())

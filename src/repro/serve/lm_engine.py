@@ -1,4 +1,15 @@
-"""Slot-based continuous-batching serving engine.
+"""Slot-based continuous-batching *token* engine.  **Deprecated.**
+
+.. deprecated::
+    This is the seed's original LM serving workload, kept only as a
+    substrate exercise (covered by one smoke test in
+    ``test_substrates.py``; excluded from serve-layer coverage
+    expectations).  It shares **no** code with the production solve
+    service — that stack is ``serve.engine.SolveEngine`` (device-
+    resident continuous batching), ``serve.admission`` (SLO-aware
+    scheduling) and ``serve.frontend.SolveFrontend`` (async API) — so
+    fixes there do not propagate here.  Do not extend this module; new
+    serving features belong to the solve stack.
 
 A fixed number of decode slots share one jitted decode step (static
 shapes).  Requests are queued, prefilled into a free slot's cache

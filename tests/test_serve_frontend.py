@@ -1,0 +1,347 @@
+"""Async serving frontend + SLO-aware admission scheduling: policy
+unit semantics (backfill, starvation bound), engine-level backfill and
+deadline eviction, and the :class:`SolveFrontend` submit/await surface
+(bit-exact with direct solves, backpressure, error futures)."""
+import asyncio
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.solver import FactorCache
+from repro.serve import (DeadlineAdmission, EngineOverloadedError,
+                         FIFOAdmission, PriorityAdmission, SolveEngine,
+                         SolveFrontend, SolveRequest, make_policy)
+from repro.data import graphs
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    gs = {"g2d": graphs.grid2d(12, 12, seed=3),       # n = 144
+          "pl": graphs.powerlaw(300, 5, seed=3),      # n = 300
+          "road": graphs.road_like(10, seed=4)}       # n = 100
+    keys = {name: jax.random.key(i) for i, name in enumerate(gs)}
+    return gs, keys
+
+
+@pytest.fixture(scope="module")
+def cache(fleet):
+    gs, keys = fleet
+    c = FactorCache(chunk=32, fill_slack=64)
+    c.factor_batched(list(gs.values()), [keys[k] for k in gs],
+                     graph_ids=list(gs))
+    return c
+
+
+def _rhs(rng, n, nrhs):
+    b = rng.normal(size=(nrhs, n) if nrhs > 1 else n).astype(np.float32)
+    return b - b.mean(axis=-1, keepdims=True)
+
+
+def _fake(rid, nrhs, *, seq, priority=0, skips=0):
+    """Policy-only request: admission reads nrhs/priority/_seq/skips."""
+    r = SolveRequest(rid=rid, graph_id="x", b=np.zeros((nrhs, 4)),
+                     priority=priority)
+    r._seq = seq
+    r.sched_skips = skips
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Admission policies: pure unit semantics (no engine, no device)
+# ---------------------------------------------------------------------------
+
+def test_fifo_is_head_of_line_blocking():
+    p = FIFOAdmission()
+    wide = _fake(0, 4, seq=0)
+    narrow = _fake(1, 1, seq=1)
+    assert p.select([wide, narrow], 2, now=0.0) == []   # head blocks all
+    assert narrow.sched_skips == 0 and p.backfill_skips == 0
+    assert p.select([wide, narrow], 5, now=0.0) == [wide, narrow]
+    assert p.max_skips == 0                              # FIFO never skips
+
+
+def test_priority_orders_classes_before_arrival():
+    p = PriorityAdmission(max_skips=4)
+    late_urgent = _fake(0, 1, seq=5, priority=0)
+    early_lazy = _fake(1, 1, seq=1, priority=5)
+    assert p.select([early_lazy, late_urgent], 2, now=0.0) == \
+        [late_urgent, early_lazy]
+
+
+def test_backfill_skips_blocked_head_and_counts():
+    p = PriorityAdmission(max_skips=3)
+    wide = _fake(0, 4, seq=0)
+    n1, n2 = _fake(1, 1, seq=1), _fake(2, 1, seq=2)
+    take = p.select([wide, n1, n2], 2, now=0.0)
+    assert take == [n1, n2]                 # backfilled past the wide head
+    assert wide.sched_skips == 1            # one skip *round*, not per req
+    assert p.backfill_skips == 1 and p.skipped_reqs == 1
+
+
+def test_starvation_bound_seals_queue_at_max_skips():
+    p = PriorityAdmission(max_skips=2)
+    wide = _fake(0, 4, seq=0)
+    rounds_with_backfill = 0
+    for i in range(6):                       # endless narrow stream
+        narrow = _fake(10 + i, 1, seq=10 + i)
+        if p.select([wide, narrow], 2, now=0.0):
+            rounds_with_backfill += 1
+    # once the bound is hit the wide head seals the queue: free lanes or
+    # not, nothing behind it admits
+    assert rounds_with_backfill == 2 == wide.sched_skips == p.max_skips
+    assert p.backfill_skips <= p.max_skips * p.skipped_reqs
+    assert p.barrier_rounds == 4
+    # ...until it fits: the wide admits and the seal lifts
+    assert p.select([wide, _fake(99, 1, seq=99)], 4, now=0.0)[0] is wide
+
+
+def test_deadline_policy_orders_edf():
+    p = DeadlineAdmission(max_skips=2)
+    assert p.evict_hopeless
+    no_dl = _fake(0, 1, seq=0)
+    soon = _fake(1, 1, seq=1)
+    soon._deadline_abs = 5.0
+    later = _fake(2, 1, seq=2)
+    later._deadline_abs = 50.0
+    assert p.select([no_dl, later, soon], 3, now=0.0) == \
+        [soon, later, no_dl]
+
+
+def test_make_policy_names():
+    assert isinstance(make_policy("fifo"), FIFOAdmission)
+    assert make_policy("priority", max_skips=7).max_skips == 7
+    assert make_policy("deadline").name == "deadline"
+    with pytest.raises(ValueError):
+        make_policy("lifo")
+
+
+# ---------------------------------------------------------------------------
+# Engine-level backfill: wide blocked head, bounded skip, throughput
+# ---------------------------------------------------------------------------
+
+def _wide_head_reqs(n, rng, *, slots, narrows, maxiter_blocker=64):
+    blocker = SolveRequest(rid=0, graph_id="road", b=_rhs(rng, n, 1),
+                           tol=1e-30, maxiter=maxiter_blocker)
+    wide = SolveRequest(rid=1, graph_id="road", b=_rhs(rng, n, slots),
+                        tol=1e-4, maxiter=300)
+    ns = [SolveRequest(rid=2 + i, graph_id="road", b=_rhs(rng, n, 1),
+                       tol=1e-3, maxiter=300) for i in range(narrows)]
+    return blocker, wide, ns
+
+
+def test_engine_backfill_beats_fifo_and_respects_bound(fleet, cache):
+    """Acceptance: a wide blocked head + narrow stream shows backfill
+    throughput (narrow requests retire while FIFO would park them), the
+    wide request still completes within its bounded wait, and the
+    scheduler counters satisfy the starvation-bound invariant."""
+    gs, _ = fleet
+    n = gs["road"].n
+    ticks_narrow = {}
+    for policy in ("fifo", "priority"):
+        rng = np.random.default_rng(21)            # identical rhs content
+        eng = SolveEngine(cache, slots=3, iters_per_tick=8,
+                          admission=make_policy(policy, max_skips=8))
+        blocker, wide, ns = _wide_head_reqs(n, rng, slots=3, narrows=4)
+        for r in (blocker, wide, *ns):
+            eng.submit(r)
+        done = eng.run_until_drained()
+        assert len(done) == 6
+        st = eng.stats()
+        assert st.admitted_reqs == st.completed == 6
+        assert st.in_flight_reqs == 0 and st.queued == 0
+        assert st.backfill_skips <= st.max_skips * max(st.skipped_reqs, 0)
+        ticks_narrow[policy] = [r.finish_tick for r in ns]
+        if policy == "fifo":
+            assert st.backfill_skips == 0 and st.max_skips == 0
+            # head-of-line: every narrow waits for the wide
+            assert all(t > wide.admit_tick for t in ticks_narrow["fifo"])
+        else:
+            assert st.backfill_skips > 0
+            assert wide.sched_skips <= st.max_skips
+            # backfill throughput: narrows retire before the wide even
+            # admits (they rode the free lanes behind the blocked head)
+            assert all(t < wide.admit_tick
+                       for t in ticks_narrow["priority"])
+            assert wide.converged          # bounded wait: it still ran
+    assert max(ticks_narrow["priority"]) < min(ticks_narrow["fifo"])
+
+
+def test_engine_starvation_bound_admits_wide_after_max_skips(fleet, cache):
+    """With ``max_skips=1`` exactly one backfill round passes the wide
+    head; after that the queue is sealed — later narrows admit only
+    once the wide request has its lanes."""
+    gs, _ = fleet
+    n = gs["road"].n
+    rng = np.random.default_rng(33)
+    eng = SolveEngine(cache, slots=3, iters_per_tick=8,
+                      admission=make_policy("priority", max_skips=1))
+    blocker, wide, ns = _wide_head_reqs(n, rng, slots=3, narrows=4)
+    for r in (blocker, wide, *ns):
+        eng.submit(r)
+    done = eng.run_until_drained()
+    assert len(done) == 6
+    assert wide.sched_skips == 1                    # the bound, exactly
+    early = [r for r in ns if r.admit_tick < wide.admit_tick]
+    late = [r for r in ns if r.admit_tick >= wide.admit_tick]
+    # one round of backfill fits two narrows (3 slots - blocker's lane)
+    assert len(early) == 2 and len(late) == 2
+    st = eng.stats()
+    assert st.backfill_skips == 1 and st.skipped_reqs == 1
+    assert st.barrier_rounds > 0                    # the seal was real
+
+
+# ---------------------------------------------------------------------------
+# Deadline eviction: hopeless lanes free their slots
+# ---------------------------------------------------------------------------
+
+def test_deadline_eviction_frees_slot_and_reports_missed(fleet, cache):
+    """A lane that cannot meet its deadline retires early with
+    ``deadline_missed`` (partial iterate returned, slot freed for the
+    next request) — driven by an injected clock, no wall time."""
+    gs, _ = fleet
+    n = gs["road"].n
+    now = [0.0]
+    eng = SolveEngine(cache, slots=1, iters_per_tick=4,
+                      admission=make_policy("deadline"),
+                      clock=lambda: now[0])
+    rng = np.random.default_rng(41)
+    hopeless = SolveRequest(rid=0, graph_id="road", b=_rhs(rng, n, 1),
+                            tol=1e-30, maxiter=10_000, deadline_s=5.0)
+    follower = SolveRequest(rid=1, graph_id="road", b=_rhs(rng, n, 1),
+                            tol=1e-3, maxiter=300)
+    eng.submit(hopeless)
+    eng.submit(follower)
+    done = eng.tick()                   # admits + steps; deadline still ok
+    assert done == [] and not hopeless._evicted
+    now[0] = 6.0                        # past the 5s deadline
+    done = eng.tick()                   # hopeless evicted, slot freed
+    assert done == [hopeless]
+    assert hopeless.status == "deadline_missed"
+    assert not hopeless.converged and hopeless.x is not None
+    assert int(hopeless.iters[0]) < 10_000      # retired early, not maxiter
+    assert eng.deadline_evictions == 1
+    done = eng.run_until_drained()
+    assert done == [follower] and follower.status == "converged"
+    st = eng.stats()
+    assert st.deadline_evictions == 1
+    assert st.admitted_reqs == st.completed == 2
+
+
+def test_deadline_met_keeps_converged_status(fleet, cache):
+    gs, _ = fleet
+    n = gs["road"].n
+    eng = SolveEngine(cache, slots=2, iters_per_tick=8,
+                      admission=make_policy("deadline"))
+    rng = np.random.default_rng(43)
+    req = SolveRequest(rid=0, graph_id="road", b=_rhs(rng, n, 1),
+                       tol=1e-4, maxiter=300, deadline_s=600.0)
+    eng.submit(req)
+    done = eng.run_until_drained()
+    assert done == [req] and req.status == "converged" and req.converged
+    assert eng.deadline_evictions == 0
+
+
+def test_maxiter_without_deadline_reports_maxiter(fleet, cache):
+    gs, _ = fleet
+    n = gs["road"].n
+    eng = SolveEngine(cache, slots=1, iters_per_tick=8)
+    rng = np.random.default_rng(44)
+    req = SolveRequest(rid=0, graph_id="road", b=_rhs(rng, n, 1),
+                       tol=1e-30, maxiter=16)
+    eng.submit(req)
+    done = eng.run_until_drained()
+    assert done == [req] and req.status == "maxiter"
+    assert not req.converged and int(req.iters[0]) == 16
+
+
+# ---------------------------------------------------------------------------
+# SolveFrontend: async submit/await, bit-exactness, backpressure, errors
+# ---------------------------------------------------------------------------
+
+def test_frontend_async_bit_exact_vs_direct(fleet, cache):
+    """Acceptance: the mixed 3-graph trace served through the async
+    frontend (futures resolved by the background driver thread) is
+    **bit-exact** with direct ``FactorHandle.solve`` — x, iters and
+    relres — exactly like the synchronous engine path."""
+    gs, _ = fleet
+    rng = np.random.default_rng(11)
+    spec = [("g2d", 1, 1e-6), ("pl", 2, 1e-5), ("road", 1, 1e-6),
+            ("g2d", 3, 1e-6), ("pl", 1, 1e-6), ("road", 2, 1e-5),
+            ("g2d", 1, 1e-4), ("pl", 2, 1e-6)]
+    blocks = [(gid, _rhs(rng, gs[gid].n, nr), tol)
+              for gid, nr, tol in spec]
+    eng = SolveEngine(cache, slots=6, iters_per_tick=8)
+
+    async def drive(fe):
+        return await asyncio.gather(*[
+            fe.solve(gid, b, tol=tol, maxiter=500)
+            for gid, b, tol in blocks])
+
+    with SolveFrontend(eng, max_queue=64) as fe:
+        results = asyncio.run(drive(fe))
+        fs = fe.stats()
+    assert fs.submitted == fs.completed == len(spec)
+    assert fs.failed == 0 and fs.rejected == 0
+    for (gid, b, tol), req in zip(blocks, results):
+        assert req.status == "converged"
+        ref = cache.get(gid).solve(jnp.asarray(np.atleast_2d(b)),
+                                   tol=tol, maxiter=500)
+        assert np.array_equal(np.atleast_2d(req.x), np.asarray(ref.x))
+        assert np.array_equal(np.atleast_1d(req.iters),
+                              np.asarray(ref.iters))
+        assert np.array_equal(np.atleast_1d(req.relres),
+                              np.atleast_1d(np.asarray(ref.relres)))
+    st = eng.stats()
+    assert st.admitted_reqs == st.completed == len(spec)
+    assert st.cols_in == st.cols_out == sum(nr for _, nr, _ in spec)
+
+
+def test_frontend_error_futures(fleet, cache):
+    gs, _ = fleet
+    eng = SolveEngine(cache, slots=2)
+    with SolveFrontend(eng) as fe:
+        bad_graph = fe.submit("nope", np.zeros(4, np.float32))
+        with pytest.raises(KeyError):
+            bad_graph.result(timeout=30)
+        bad_shape = fe.submit("road", np.zeros(7, np.float32))
+        with pytest.raises(ValueError):
+            bad_shape.result(timeout=30)
+        fs = fe.stats()
+        assert fs.failed == 2 and fs.completed == 0
+
+
+def test_frontend_backpressure_rejects_when_full(fleet, cache):
+    """Bounded queue + reject policy: once ingress + engine queue hold
+    ``max_queue`` waiting requests, submit raises
+    ``EngineOverloadedError`` instead of growing without bound."""
+    gs, _ = fleet
+    n = gs["road"].n
+    rng = np.random.default_rng(51)
+    eng = SolveEngine(cache, slots=1, iters_per_tick=4)
+    fe = SolveFrontend(eng, max_queue=2, overload="reject")
+    try:
+        futs = [fe.submit("road", _rhs(rng, n, 1), tol=1e-30, maxiter=64)]
+        rejected = 0
+        for _ in range(8):
+            try:
+                futs.append(fe.submit("road", _rhs(rng, n, 1), tol=1e-3,
+                                      maxiter=300))
+            except EngineOverloadedError:
+                rejected += 1
+        assert rejected >= 1                 # the bound actually bites
+        assert fe.stats().rejected == rejected
+        for f in futs:
+            assert f.result(timeout=120).x is not None
+    finally:
+        fe.close()
+    assert fe.stats().queue_depth == 0
+
+
+def test_frontend_close_rejects_new_submits(fleet, cache):
+    eng = SolveEngine(cache, slots=2)
+    fe = SolveFrontend(eng)
+    fe.close()
+    with pytest.raises(RuntimeError):
+        fe.submit("road", np.zeros(4, np.float32))

@@ -109,6 +109,44 @@ def test_factorize_batched_masked_retry(fleet):
         assert np.array_equal(a.D, b.D)
 
 
+def test_fleet_admit_many_bit_identical_to_sequential(fleet):
+    """Satellite: ``FactorFleet.admit_many`` (grow the bucket stack once,
+    scatter all B rows in one update) leaves every fleet bit-identical
+    to B sequential ``admit`` calls — same rows, same padded envelopes,
+    same stacked arrays — across a batch that mixes two same-bucket
+    factors with a different-bucket one."""
+    gs, keys = fleet
+    g_b = graphs.grid2d(12, 12, seed=8)       # same bucket as g2d, new factor
+    batch = [("g2d", gs["g2d"], keys["g2d"]),
+             ("g2d_b", g_b, jax.random.key(9)),
+             ("road", gs["road"], keys["road"])]
+    seq = FactorCache(chunk=32, fill_slack=64)
+    for name, g, k in batch:                  # one admit per factor
+        seq.factor(g, k, graph_id=name)
+    bat = FactorCache(chunk=32, fill_slack=64)
+    bat.factor_batched([g for _, g, _ in batch],
+                       [k for _, _, k in batch],
+                       graph_ids=[name for name, _, _ in batch])
+    assert seq.fleets.keys() == bat.fleets.keys()
+    for name, _, _ in batch:
+        assert seq.get(name).fleet_row == bat.get(name).fleet_row
+    for n_pad, fs in seq.fleets.items():
+        fb = bat.fleets[n_pad]
+        assert (fs.m_pad, fs.Kf, fs.Kb) == (fb.m_pad, fb.Kf, fb.Kb)
+        assert (fs.f_levels, fs.b_levels) == (fb.f_levels, fb.b_levels)
+        assert fs.capacity == fb.capacity
+        for field, a, b in zip(fs.arrays._fields, fs.arrays, fb.arrays):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                (n_pad, field)
+    # and the solves they serve are byte-for-byte the same
+    rng = np.random.default_rng(29)
+    b = jnp.asarray(_rhs(rng, gs["g2d"].n, 2))
+    ra = seq.solve("g2d_b", b, tol=1e-6, maxiter=300)
+    rb = bat.solve("g2d_b", b, tol=1e-6, maxiter=300)
+    assert np.array_equal(np.asarray(ra.x), np.asarray(rb.x))
+    assert np.array_equal(np.asarray(ra.iters), np.asarray(rb.iters))
+
+
 def test_factorize_batched_key_count_mismatch(fleet):
     gs, keys = fleet
     with pytest.raises(ValueError):

@@ -168,6 +168,11 @@ def test_schedules():
 # ---------------------------------------------------------------------------
 
 def test_serve_engine_batched_requests():
+    """Sole remaining coverage of the *deprecated* token engine
+    (``serve.lm_engine`` — a substrate exercise, not part of the solve
+    service); its unique assertions are the drain-return contract and
+    slot recycling below.  The production serving stack is covered by
+    ``test_serve_solver.py`` / ``test_serve_frontend.py``."""
     from repro.serve import ServeEngine, Request
     from repro.models import transformer as tf
     from repro.models.common import init_params
