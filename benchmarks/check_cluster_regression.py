@@ -1,0 +1,117 @@
+"""CI gate over the ``BENCH_cluster.json`` artifact: machine-independent
+cluster invariants, no committed baseline needed.
+
+    python -m benchmarks.check_cluster_regression BENCH_cluster.json
+
+Per routing-policy block:
+
+* **request conservation across replicas** — every submitted request is
+  either routed to exactly one replica or shed
+  (``submitted == routed + shed``); every routed request reached a
+  replica frontend (``routed == Σ frontend.submitted``) and resolved
+  there (``Σ frontend.submitted == Σ (completed + failed)`` after the
+  replay's drain — nothing blackholed);
+* **per-replica engine invariants** — the same scheduler gates
+  ``check_serve_regression`` applies to single engines (request
+  conservation, starvation bound, no sealed backfill under
+  ``max_skips == 0``), applied to every replica's engine counters;
+* **routing counters** — ``affinity_hits + affinity_misses == routed``.
+
+Across policies:
+
+* ``factor_affinity`` must achieve a **strictly higher** affinity-hit
+  rate than ``round_robin`` on the skewed trace — the economics the
+  cluster exists for;
+* when the artifact was produced with hot-factor replication enabled
+  (``replicate_above`` set), the affinity run must show the replication
+  path exercised (``replications >= 1``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .check_serve_regression import _engine_failures
+
+
+def _cluster_failures(name: str, metrics: dict) -> list:
+    failures = []
+    c = metrics.get("cluster")
+    if not c:
+        return [f"[{name}] no cluster counters in artifact"]
+    if c["submitted"] != c["routed"] + c["shed"]:
+        failures.append(
+            f"[{name}] submitted={c['submitted']} != routed={c['routed']}"
+            f" + shed={c['shed']} (cluster request conservation broken)")
+    if c["affinity_hits"] + c["affinity_misses"] != c["routed"]:
+        failures.append(
+            f"[{name}] hits={c['affinity_hits']} + "
+            f"misses={c['affinity_misses']} != routed={c['routed']} "
+            f"(every route is a hit or a miss)")
+    fe_submitted = fe_completed = fe_failed = 0
+    for r in c["per_replica"]:
+        fe = r["frontend"]
+        fe_submitted += fe["submitted"]
+        fe_completed += fe["completed"]
+        fe_failed += fe["failed"]
+        failures += _engine_failures(
+            fe["engine"], label=f"{name}/replica{r['index']}",
+            require_bucket_compiles=False)
+    if fe_submitted != c["routed"]:
+        failures.append(
+            f"[{name}] sum of replica frontend.submitted={fe_submitted} "
+            f"!= routed={c['routed']} (a routed request never reached "
+            f"its replica)")
+    if fe_completed + fe_failed != fe_submitted:
+        failures.append(
+            f"[{name}] replica completed+failed="
+            f"{fe_completed}+{fe_failed} != submitted={fe_submitted} "
+            f"(requests blackholed after drain)")
+    return failures
+
+
+def check(path: str) -> int:
+    with open(path) as fh:
+        art = json.load(fh)
+    failures = []
+    pols = art.get("policies") or {}
+    for name, metrics in pols.items():
+        failures += _cluster_failures(name, metrics)
+    if {"affinity", "rr"} <= set(pols):
+        a = float(pols["affinity"]["cluster"]["hit_rate"])
+        r = float(pols["rr"]["cluster"]["hit_rate"])
+        if not a > r:
+            failures.append(
+                f"[hit-rate] factor_affinity hit rate {a:.3f} is not "
+                f"strictly higher than round_robin {r:.3f} on the "
+                f"skewed trace")
+        else:
+            print(f"affinity hit rate OK: {a:.3f} > rr {r:.3f}")
+    if "affinity" in pols and \
+            pols["affinity"].get("replicate_above") is not None:
+        reps = int(pols["affinity"]["cluster"]["replications"])
+        if reps < 1:
+            failures.append(
+                "[replication] replicate_above was set but the affinity "
+                "run promoted no hot factor to a second replica")
+        else:
+            print(f"replication path exercised: {reps} promotion(s)")
+    for msg in failures:
+        print(f"INVARIANT VIOLATED: {msg}")
+    if not failures:
+        print(f"cluster invariants OK over {len(pols)} policies: "
+              f"request conservation across replicas, hit/miss "
+              f"accounting, per-replica scheduler gates")
+    return 1 if failures else 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh BENCH_cluster.json")
+    args = ap.parse_args()
+    sys.exit(check(args.current))
+
+
+if __name__ == "__main__":
+    main()

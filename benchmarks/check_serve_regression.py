@@ -22,7 +22,11 @@ Two kinds of gate:
   (``admitted_reqs == completed + in_flight_reqs``) and the backfill
   starvation bound (``backfill_skips <= max_skips * skipped_reqs``,
   degenerating to ``backfill_skips == 0`` for FIFO where
-  ``max_skips == 0``).  When the artifact carries a wide-head
+  ``max_skips == 0``).  Work-conserving admissions past a starvation
+  seal are counted separately (``sealed_backfills``) and must never
+  appear under a policy that cannot seal (``max_skips == 0``), so the
+  starvation bound holds with seal backfill enabled.  When the
+  artifact carries a wide-head
   ``policy_sweep``, the backfill policy must strictly beat FIFO on p95
   end-to-end latency — the scheduling contract the subsystem exists
   for;
@@ -67,6 +71,14 @@ def _engine_failures(eng: dict, *, label: str,
                 f"[{label}] backfill_skips={eng['backfill_skips']} > "
                 f"max_skips*skipped_reqs={bound} "
                 f"(starvation bound violated)")
+        # work-conserving seal admissions are counted separately and must
+        # never leak into the skip counters; a policy that cannot seal
+        # (max_skips == 0, i.e. FIFO) must report none at all
+        if eng["max_skips"] == 0 and eng.get("sealed_backfills", 0) != 0:
+            failures.append(
+                f"[{label}] sealed_backfills="
+                f"{eng['sealed_backfills']} under max_skips=0 "
+                f"(a policy that never seals cannot seal-backfill)")
     return failures
 
 

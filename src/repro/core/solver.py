@@ -143,6 +143,13 @@ class FactorFleet:
         return sum(r is not None and r() is not None for r in self._rows)
 
     @property
+    def free_rows(self) -> int:
+        """Rows admittable without growing the stack: dead rows awaiting
+        reuse plus pow2 capacity slack past the current end."""
+        dead = sum(r is None or r() is None for r in self._rows)
+        return dead + max(self.capacity - len(self._rows), 0)
+
+    @property
     def bytes_per_row(self) -> int:
         if self.arrays is None:
             return 0
@@ -627,6 +634,40 @@ class FactorCache:
         staleness (lets a serving engine check whether its pinned handle
         is still the cached one)."""
         return self._handles.get(graph_id)
+
+    def fresh(self, graph_id: str) -> bool:
+        """Non-mutating freshness probe: True iff ``graph_id`` has a live
+        handle that would *not* be swept as stale on the next lookup.
+        Unlike ``get`` it never sweeps, never touches LRU order and only
+        reads — safe for a cluster router to call from outside the
+        engine's driver thread."""
+        h = self._handles.get(graph_id)
+        return h is not None and not self._stale(h, self._clock())
+
+    def capacity_probe(self) -> Dict[str, Optional[int]]:
+        """Read-only headroom snapshot for cluster placement decisions:
+        how much more factor state this cache can admit before evicting.
+        ``free_bytes``/``free_handles`` are ``None`` when the matching
+        bound is unset (unbounded); ``fleet_free_rows`` counts bucket
+        rows reusable without growing any stack.
+
+        Called from router threads while the serving driver thread may
+        be admitting — the handle/fleet dicts are snapshotted with
+        ``list()`` (one GIL-atomic copy) before iteration, so a
+        concurrent insert can never raise mid-iteration; the numbers
+        are advisory and may be one admission stale."""
+        handles = list(self._handles.values())
+        fleets = list(self._fleets.values())
+        used = sum(h.device_bytes for h in handles)
+        free_bytes = None if self.memory_budget_bytes is None else \
+            max(self.memory_budget_bytes - used, 0)
+        free_handles = None if self.max_handles is None else \
+            max(self.max_handles - len(handles), 0)
+        return dict(handles=len(handles),
+                    free_handles=free_handles,
+                    device_bytes=used,
+                    free_bytes=free_bytes,
+                    fleet_free_rows=sum(f.free_rows for f in fleets))
 
     def get(self, graph_id: str) -> FactorHandle:
         self.sweep_stale()

@@ -121,6 +121,14 @@ def random_regular(n: int, d: int = 4, seed: int = 0) -> Graph:
                  e.max(axis=1).astype(np.int32), w).coalesce()
 
 
+SUITE_MICRO = {
+    # sub-100-vertex graphs (two shape buckets) for tests and benchmarks
+    # that measure orchestration — routing, scheduling — not solve scale
+    "grid2d_micro": lambda: grid2d(6, 6, seed=3),
+    "powerlaw_micro": lambda: powerlaw(80, 4, seed=3),
+    "road_micro": lambda: road_like(6, seed=4),
+}
+
 SUITE_TINY = {
     # sub-second graphs for CI smoke jobs and service traces
     "grid2d_tiny": lambda: grid2d(12, 12, seed=3),

@@ -1,0 +1,182 @@
+"""Solve-cluster launcher: replay a seeded request trace through a
+multi-replica :class:`repro.serve.SolveCluster` and report routing and
+latency numbers per policy.
+
+    PYTHONPATH=src python -m repro.launch.cluster --suite tiny \
+        --replicas 2 --routing affinity --requests 48 --skew 1.2 \
+        --arrival-rate 100 --replicate-above 50
+
+The trace is the same seeded-Poisson mixed trace the single-engine
+service replays (``repro.launch.serve.make_trace``), optionally
+**skewed** (Zipf-like graph choice) so one hot graph dominates — the
+workload where factor-affinity routing and hot-factor replication pay.
+Requests are *registered* with the cluster, never pre-factored: the
+replay shows the cold-placement cost on first touch, the affinity-hit
+economics after, and (with ``--replicate-above``) the hot graph being
+promoted onto a second replica.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def build_cluster(*, suite="tiny", replicas=2, routing="affinity",
+                  slots=8, iters_per_tick=8, chunk=128, fill_slack=32,
+                  policy="fifo", max_skips=None, max_queue=256,
+                  overload="reject", replicate_above=None,
+                  rate_window_s=1.0, replica_ttl_s=30.0, seed=0):
+    """Stand up the cluster and register (not factor) the suite graphs.
+    Returns ``(cluster, sizes)`` with graph ids = suite names."""
+    from repro.data import graphs
+    from repro.serve import SolveCluster
+    from repro.launch.serve import SMALL_NAMES
+
+    spec = graphs.SUITE_MICRO if suite == "micro" else \
+        graphs.SUITE_TINY if suite == "tiny" else \
+        {k: graphs.SUITE[k] for k in SMALL_NAMES}
+    built = {name: make() for name, make in spec.items()}
+    cluster = SolveCluster(
+        replicas=replicas, routing=routing, slots=slots,
+        iters_per_tick=iters_per_tick, admission=policy,
+        max_skips=max_skips, max_queue=max_queue, overload=overload,
+        replicate_above=replicate_above, rate_window_s=rate_window_s,
+        replica_ttl_s=replica_ttl_s, seed=seed,
+        cache_kw=dict(chunk=chunk, fill_slack=fill_slack, strict=False))
+    import jax
+    for i, (name, g) in enumerate(built.items()):
+        cluster.register(g, jax.random.key(i), graph_id=name)
+    return cluster, {name: g.n for name, g in built.items()}
+
+
+def replay_trace_cluster(cluster, trace):
+    """Open-loop replay: submit each request at its ``arrival_s`` (the
+    router runs in the submitting thread; replica driver threads do the
+    serving), wait for all futures, return the shared service metrics
+    plus routing counters.  Shed requests (ClusterOverloadedError) are
+    dropped and counted, exactly like the frontend's reject mode."""
+    import concurrent.futures
+    from repro.serve import ClusterOverloadedError
+    from repro.launch.serve import trace_metrics
+    futs = []
+    t0 = time.perf_counter()
+    for req in trace:
+        now = time.perf_counter() - t0
+        if req.arrival_s > now:
+            time.sleep(req.arrival_s - now)
+        try:
+            futs.append(cluster.submit_request(req))
+        except ClusterOverloadedError:
+            pass                       # shed: counted in ClusterStats
+    concurrent.futures.wait(futs)
+    t_serve = time.perf_counter() - t0
+    done = [f.result() for f in futs if f.exception() is None]
+    metrics = trace_metrics(trace, done, t_serve)
+    cs = cluster.stats()
+    metrics["cluster"] = cs.as_dict()
+    metrics["per_replica_completed"] = {
+        r.index: r.frontend.completed for r in cs.per_replica}
+    return metrics, done
+
+
+def run_cluster(*, suite="tiny", requests=48, replicas=2,
+                routing="affinity", slots=8, iters_per_tick=8,
+                max_nrhs=4, chunk=128, seed=0, skew=None,
+                arrival_rate=None, policy="fifo", max_skips=None,
+                max_queue=256, overload="reject", replicate_above=None,
+                rate_window_s=1.0, replica_ttl_s=30.0):
+    """Build the cluster, replay one trace, close, return metrics."""
+    from repro.launch.serve import make_trace
+    cluster, sizes = build_cluster(
+        suite=suite, replicas=replicas, routing=routing, slots=slots,
+        iters_per_tick=iters_per_tick, chunk=chunk, policy=policy,
+        max_skips=max_skips, max_queue=max_queue, overload=overload,
+        replicate_above=replicate_above, rate_window_s=rate_window_s,
+        replica_ttl_s=replica_ttl_s, seed=seed)
+    gids = list(sizes)
+    trace = make_trace(gids, sizes, requests, seed=seed,
+                       max_nrhs=min(max_nrhs, slots),
+                       arrival_rate=arrival_rate, skew=skew)
+    try:
+        metrics, done = replay_trace_cluster(cluster, trace)
+    finally:
+        cluster.close()
+    metrics = dict(suite=suite, graphs=len(gids), replicas=replicas,
+                   routing=routing, slots=slots, policy=policy,
+                   skew=skew, arrival_rate=arrival_rate, seed=seed,
+                   **metrics)
+    return metrics, done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="tiny",
+                    choices=["micro", "tiny", "small"])
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--routing", default="affinity",
+                    choices=["affinity", "p2c", "rr"],
+                    help="cluster routing policy (factor affinity / "
+                         "power-of-two-choices / round robin)")
+    ap.add_argument("--replicate-above", type=float, default=None,
+                    help="hot-factor replication threshold (req/s over "
+                         "the rate window); omit to disable")
+    ap.add_argument("--replica-ttl-s", type=float, default=30.0,
+                    help="TTL stamped on replicated hot-factor copies "
+                         "(drives demotion via cache staleness)")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--iters-per-tick", type=int, default=8)
+    ap.add_argument("--max-nrhs", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skew", type=float, default=None,
+                    help="Zipf-like graph-choice skew (hot-graph trace); "
+                         "omit for the round-robin mixed trace")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="open-loop Poisson arrival rate (req/s)")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "priority", "deadline"],
+                    help="per-replica admission policy")
+    ap.add_argument("--max-skips", type=int, default=None)
+    ap.add_argument("--max-queue", type=int, default=256)
+    ap.add_argument("--overload", default="reject",
+                    choices=["block", "reject"])
+    ap.add_argument("--json", default=None,
+                    help="write metrics (incl. ClusterStats) to JSON")
+    args = ap.parse_args()
+
+    metrics, done = run_cluster(
+        suite=args.suite, requests=args.requests, replicas=args.replicas,
+        routing=args.routing, slots=args.slots,
+        iters_per_tick=args.iters_per_tick, max_nrhs=args.max_nrhs,
+        chunk=args.chunk, seed=args.seed, skew=args.skew,
+        arrival_rate=args.arrival_rate, policy=args.policy,
+        max_skips=args.max_skips, max_queue=args.max_queue,
+        overload=args.overload, replicate_above=args.replicate_above,
+        replica_ttl_s=args.replica_ttl_s)
+
+    c = metrics["cluster"]
+    print(f"suite={metrics['suite']} replicas={metrics['replicas']} "
+          f"routing={c['policy']} policy={metrics['policy']} "
+          f"skew={metrics['skew']}")
+    print(f"served {metrics['completed']}/{metrics['requests']} requests "
+          f"({metrics['rhs_total']} rhs, {metrics['converged']} converged) "
+          f"in {metrics['serve_s']:.2f}s; shed={c['shed']}")
+    print(f"routing: hit_rate={c['hit_rate']:.2f} "
+          f"(hits={c['affinity_hits']} misses={c['affinity_misses']}) "
+          f"replications={c['replications']} demotions={c['demotions']} "
+          f"ejections={c['ejections']} hot_graphs={c['hot_graphs']}")
+    print(f"e2e p50={metrics['latency_p50_s']*1e3:.0f}ms "
+          f"p95={metrics['latency_p95_s']*1e3:.0f}ms  "
+          f"queueing p95={metrics['queue_wait_p95_s']*1e3:.0f}ms  "
+          f"per-replica completed="
+          f"{metrics['per_replica_completed']}")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(metrics, fh, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -50,21 +50,31 @@ def percentile(xs, q):
 
 
 def make_trace(gids, sizes, n_requests, *, seed=0, max_nrhs=4,
-               tols=(1e-4, 1e-6), arrival_rate=None, deadline_s=None):
+               tols=(1e-4, 1e-6), arrival_rate=None, deadline_s=None,
+               skew=None):
     """Seeded mixed trace: round-robin-ish graph choice, ~1/3 multi-RHS,
     alternating tolerances — deliberately interleaved so consecutive
     requests rarely share a factor.  All randomness (rhs content *and*
     Poisson arrival gaps) comes from the one seeded generator, so a
     trace is reproducible across runs and artifacts.  ``deadline_s``
     stamps every request with the same relative SLO budget (deadline
-    policies order by it and evict hopeless lanes)."""
+    policies order by it and evict hopeless lanes).
+
+    ``skew`` switches graph choice from round-robin to a seeded
+    Zipf-like draw (weight ∝ 1/(rank+1)^skew over ``gids`` order) — the
+    hot-graph workload the cluster's factor-affinity routing and
+    hot-factor replication are measured on."""
     import numpy as np
     from repro.serve import SolveRequest
     rng = np.random.default_rng(seed)
+    if skew is not None:
+        w = 1.0 / np.arange(1, len(gids) + 1) ** float(skew)
+        picks = rng.choice(len(gids), size=n_requests, p=w / w.sum())
     reqs = []
     arrival = 0.0
     for rid in range(n_requests):
-        gid = gids[rid % len(gids)]
+        gid = gids[int(picks[rid])] if skew is not None \
+            else gids[rid % len(gids)]
         n = sizes[gid]
         nrhs = int(rng.integers(2, max_nrhs + 1)) \
             if (max_nrhs > 1 and rid % 3 == 2) else 1

@@ -3,4 +3,6 @@ from .admission import (AdmissionPolicy, FIFOAdmission,  # noqa: F401
                         PriorityAdmission, DeadlineAdmission, make_policy)
 from .frontend import (SolveFrontend, FrontendStats,  # noqa: F401
                        EngineOverloadedError)
-from .lm_engine import ServeEngine, Request  # noqa: F401  (deprecated)
+from .cluster import (SolveCluster, ClusterStats,  # noqa: F401
+                      ClusterOverloadedError, EngineReplica, ReplicaStats,
+                      make_routing)

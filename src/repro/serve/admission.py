@@ -30,6 +30,26 @@ request, and ``backfill_skips <= max_skips * skipped_reqs`` is a hard
 counter invariant (gated in CI by
 ``benchmarks.check_serve_regression``).
 
+**Work-conserving backfill under seal.**  A sealed queue idles free
+lanes even when the sealed request will be waiting on *busy* lanes for
+many more ticks.  Backfilling policies therefore still admit, past a
+seal, any request whose worst-case duration **provably** cannot extend
+the wait bound of the sealer or of any blocked more-urgent request: the
+engine passes per-occupied-lane worst-case remaining ticks
+(``busy_bounds``, from ``maxiter`` budgets and admit ticks — a lane
+retires by maxiter whatever happens), a candidate's worst case is
+``ceil(maxiter / iters_per_tick)`` ticks, and a blocked request needing
+``need`` more lanes admits — in the worst case — when the ``need``-th
+soonest-bounded busy lane retires.  A candidate no longer-lived than
+that bound occupies a lane that is provably free again by then, so the
+seal's guarantee is unchanged.  (Ticks are the sound currency here: the
+engine's running-min tick estimate converts the bound to seconds only
+for reporting — a *minimum* per-tick duration cannot prove an earlier
+finish.)  Sealed backfills never touch ``sched_skips`` — they are
+counted separately as ``sealed_backfills`` — so the starvation-bound
+invariant above is untouched (also CI-gated: FIFO, whose ``max_skips``
+is 0 and which never seals, must report zero).
+
 Policies only *order and bound* admission; the engine still performs
 the jitted scatter per admitted request, so serving stays bit-exact
 with direct ``FactorHandle.solve`` regardless of policy — scheduling
@@ -66,16 +86,22 @@ class AdmissionPolicy:
         self.backfill_skips = 0    # total skip increments across requests
         self.skipped_reqs = 0      # requests that were ever skipped
         self.barrier_rounds = 0    # rounds cut short by a starvation barrier
+        self.sealed_backfills = 0  # provably-short admissions past a seal
 
     def select(self, waiting: Sequence["SolveRequest"], free: int, *,
-               now: float) -> List["SolveRequest"]:
+               now: float, busy_bounds: Sequence[int] = (),
+               iters_per_tick: int = 1) -> List["SolveRequest"]:
+        """``busy_bounds``: one worst-case-remaining-ticks entry per
+        occupied lane (the engine derives them from maxiter budgets);
+        only the work-conserving seal path reads them."""
         raise NotImplementedError
 
     def counters(self) -> Dict[str, int]:
         return dict(sched_rounds=self.rounds,
                     backfill_skips=self.backfill_skips,
                     skipped_reqs=self.skipped_reqs,
-                    barrier_rounds=self.barrier_rounds)
+                    barrier_rounds=self.barrier_rounds,
+                    sealed_backfills=self.sealed_backfills)
 
 
 class _OrderedBackfill(AdmissionPolicy):
@@ -87,17 +113,25 @@ class _OrderedBackfill(AdmissionPolicy):
     last for stability).
     """
 
-    def __init__(self, max_skips: int = 8):
+    def __init__(self, max_skips: int = 8, work_conserving: bool = True):
         super().__init__()
         if max_skips < 0:
             raise ValueError("max_skips must be >= 0")
         self.max_skips = max_skips
+        self.work_conserving = work_conserving
 
     def _key(self, req: "SolveRequest", now: float):
         raise NotImplementedError
 
+    @staticmethod
+    def _worst_ticks(req: "SolveRequest", ipt: int) -> int:
+        """Upper bound on a not-yet-admitted request's lane lifetime:
+        it retires by ``maxiter`` iterations whatever happens."""
+        return max(-(-req.maxiter // ipt), 1)
+
     def select(self, waiting: Sequence["SolveRequest"], free: int, *,
-               now: float) -> List["SolveRequest"]:
+               now: float, busy_bounds: Sequence[int] = (),
+               iters_per_tick: int = 1) -> List["SolveRequest"]:
         if not waiting:
             return []
         self.rounds += 1
@@ -123,6 +157,10 @@ class _OrderedBackfill(AdmissionPolicy):
                     # blocking, not a seal.
                     if self.max_skips > 0:
                         self.barrier_rounds += 1
+                        if self.work_conserving and free > 0:
+                            take += self._seal_backfill(
+                                order, r, blocked, take, free,
+                                busy_bounds, iters_per_tick)
                     break
                 blocked.append(r)
         for b in skipped:
@@ -131,6 +169,48 @@ class _OrderedBackfill(AdmissionPolicy):
             b.sched_skips += 1
             self.backfill_skips += 1
         return take
+
+    def _seal_backfill(self, order: List["SolveRequest"],
+                       sealer: "SolveRequest",
+                       blocked: List["SolveRequest"],
+                       take: List["SolveRequest"], free: int,
+                       busy_bounds: Sequence[int],
+                       ipt: int) -> List["SolveRequest"]:
+        """Work-conserving admission past a starvation seal.
+
+        A blocked request ``g`` needing ``need = g.nrhs - free`` more
+        lanes admits, in the *worst* case, when the ``need``-th
+        soonest-bounded occupied lane retires (every lane retires by its
+        maxiter budget).  A candidate whose own worst-case tick count is
+        ≤ every guarded request's bound occupies a free lane that is
+        provably free again before any of them could have admitted
+        anyway — so admitting it cannot extend the seal's wait bound.
+        Sealed admissions never increment ``sched_skips`` (the
+        starvation-bound counters are untouched); they count in
+        ``sealed_backfills``."""
+        wt = self._worst_ticks
+        busy = list(busy_bounds)
+        for t in take:                       # this round's admissions
+            busy += [wt(t, ipt)] * t.nrhs    # occupy lanes too
+        guarded = blocked + [sealer]
+        out: List["SolveRequest"] = []
+        for c in order[order.index(sealer) + 1:]:
+            if c.nrhs > free:
+                continue
+            w = wt(c, ipt)
+            b = sorted(busy)
+            ok = True
+            for g in guarded:
+                need = g.nrhs - free         # busy lanes g waits for
+                if need > len(b) or w > b[need - 1]:
+                    ok = False               # no provable headroom
+                    break
+            if ok:
+                out.append(c)
+                free -= c.nrhs
+                busy += [w] * c.nrhs
+                self.sealed_backfills += 1
+        return out
 
 
 class FIFOAdmission(_OrderedBackfill):
@@ -183,16 +263,20 @@ _POLICIES = {
 }
 
 
-def make_policy(name: str, *, max_skips: Optional[int] = None
-                ) -> AdmissionPolicy:
+def make_policy(name: str, *, max_skips: Optional[int] = None,
+                work_conserving: bool = True) -> AdmissionPolicy:
     """Build a policy by CLI name (``fifo`` / ``priority`` /
     ``deadline``).  ``max_skips`` overrides the backfill allowance for
-    the backfilling policies (FIFO is always 0 — that *is* FIFO)."""
+    the backfilling policies (FIFO is always 0 — that *is* FIFO);
+    ``work_conserving=False`` disables provably-short admissions past a
+    starvation seal (FIFO never seals, so it has neither)."""
     try:
         cls = _POLICIES[name]
     except KeyError:
         raise ValueError(f"unknown admission policy {name!r}; "
                          f"choose from {sorted(_POLICIES)}") from None
-    if cls is FIFOAdmission or max_skips is None:
+    if cls is FIFOAdmission:
         return cls()
-    return cls(max_skips=max_skips)
+    if max_skips is None:
+        return cls(work_conserving=work_conserving)
+    return cls(max_skips=max_skips, work_conserving=work_conserving)

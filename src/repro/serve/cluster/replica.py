@@ -1,0 +1,101 @@
+"""One solve-cluster replica: a **private** ``FactorCache`` (and with it
+private ``FactorFleet`` stacks and jitted fleet programs) behind a
+``SolveEngine`` + ``SolveFrontend`` driver thread.
+
+The replica is the cluster's unit of isolation and of state: holding a
+factor *is* holding device memory, so the router's whole job is to send
+a ``graph_id`` where its factor already lives.  All engine/cache
+**mutation** goes through the frontend's driver thread — ``factor()``
+rides the frontend control channel (``SolveFrontend.call``), so a
+router thread never races the driver inside the cache.  The read-only
+probes the router needs (``fresh``/``load``/``capacity_probe``) are
+plain GIL-atomic reads of host bookkeeping and are safe from any
+thread.
+"""
+from __future__ import annotations
+
+from concurrent.futures import Future
+from typing import Callable, Dict, Optional
+
+from repro.core.solver import FactorCache, FactorHandle
+from repro.serve.admission import AdmissionPolicy
+from repro.serve.engine import SolveEngine, SolveRequest
+from repro.serve.frontend import SolveFrontend
+
+
+class EngineReplica:
+    """``SolveFrontend`` + private ``FactorCache`` as one unit of a
+    :class:`~repro.serve.cluster.router.SolveCluster`.
+
+    ``overload`` defaults to ``"reject"`` (unlike a standalone
+    frontend's ``"block"``): the router wants the backpressure signal
+    immediately so it can spill to another replica instead of stalling
+    its submit path on one hot engine.
+    """
+
+    def __init__(self, index: int, *, slots: int = 8,
+                 iters_per_tick: int = 8,
+                 admission: Optional[AdmissionPolicy] = None,
+                 max_queue: int = 256, overload: str = "reject",
+                 clock: Optional[Callable[[], float]] = None,
+                 cache_kw: Optional[Dict] = None):
+        self.index = index
+        kw = dict(cache_kw or {})
+        if clock is not None:
+            kw.setdefault("clock", clock)
+        self.cache = FactorCache(**kw)
+        self.engine = SolveEngine(self.cache, slots=slots,
+                                  iters_per_tick=iters_per_tick,
+                                  admission=admission, clock=clock)
+        self.frontend = SolveFrontend(self.engine, max_queue=max_queue,
+                                      overload=overload)
+
+    # -- read-only probes (any thread) --------------------------------------
+    def fresh(self, graph_id: str) -> bool:
+        """Resident and not TTL/tick-stale: routable without factoring."""
+        return self.cache.fresh(graph_id)
+
+    @property
+    def load(self) -> int:
+        """Requests waiting anywhere plus lanes in flight — the routing
+        load signal.  ``queue_depth`` is the frontend's own backpressure
+        read; the lane scan is the same advisory GIL-atomic contract."""
+        return (self.frontend.queue_depth
+                + sum(l is not None for l in self.engine.lanes))
+
+    def capacity_probe(self) -> Dict[str, Optional[int]]:
+        return self.cache.capacity_probe()
+
+    @property
+    def alive(self) -> bool:
+        return self.frontend.alive
+
+    # -- mutation (driver thread via the control channel) -------------------
+    def factor(self, g, key, *, graph_id: str,
+               ttl_s: Optional[float] = None) -> "Future[FactorHandle]":
+        """Factor ``g`` into this replica's private cache **on the
+        driver thread**; resolves to the admitted handle.  ``ttl_s``
+        carries the hot-replica demotion TTL (``None`` = immortal
+        primary placement)."""
+        return self.frontend.call(self.cache.factor, g, key,
+                                  graph_id=graph_id, ttl_s=ttl_s)
+
+    def submit(self, req: SolveRequest) -> "Future[SolveRequest]":
+        """Queue a routed request.  *This* replica's factor is pinned
+        on the request first (a non-mutating ``peek``): a TTL expiry or
+        LRU eviction while the request sits in the ingress queue must
+        not fail it — the engine falls back to the strong ref, exactly
+        like its own mid-flight pinning.  The pin is unconditional: an
+        overload retry must not carry a previously-tried replica's
+        handle here, or the fallback could serve the request out of
+        another replica's private fleet."""
+        req._handle = self.cache.peek(req.graph_id)
+        return self.frontend.submit_request(req)
+
+    # -- lifecycle ----------------------------------------------------------
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        return self.frontend.drain(timeout=timeout)
+
+    def close(self, *, drain: bool = True,
+              timeout: Optional[float] = None) -> None:
+        self.frontend.close(drain=drain, timeout=timeout)

@@ -1,0 +1,87 @@
+"""Cluster-wide telemetry: per-replica serving stats plus the router's
+decision counters.
+
+``ClusterStats`` is the one artifact a fleet operator (or the CI gate in
+``benchmarks.check_cluster_regression``) needs: every replica's
+:class:`~repro.serve.frontend.FrontendStats` (which nests its engine's
+:class:`~repro.serve.engine.EngineStats`), and the routing counters that
+summarize what the cluster-level scheduler did — affinity hits/misses,
+hot-factor replications and TTL demotions, health ejections and
+re-admissions, and requests shed because the cluster could not serve
+them.  Request conservation across the cluster is
+``routed == Σ replica completed+failed+pending`` and
+``routed + shed == submitted`` — both CI-gated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.serve.frontend import FrontendStats
+
+
+@dataclasses.dataclass
+class ReplicaStats:
+    """One replica's view: router-side counters (``routed``,
+    ``rejections`` — overload errors the *router* observed submitting
+    here) next to the replica's own frontend/engine counters."""
+
+    index: int
+    healthy: bool
+    ejected: bool
+    load: int            # ingress + engine queue + active lanes
+    placements: int      # graphs the router holds live on this replica
+    routed: int          # requests the router sent here
+    rejections: int      # EngineOverloadedError seen routing here
+    frontend: FrontendStats
+
+    def as_dict(self) -> Dict:
+        # shallow: asdict() would deep-convert the nested frontend and
+        # engine stats only for as_dict() below to rebuild them
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self) if f.name != "frontend"}
+        d["frontend"] = self.frontend.as_dict()
+        return d
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    """Routing counters + per-replica stats (``SolveCluster.stats()``).
+
+    ``affinity_hits`` counts requests routed to a replica already
+    holding (a live placement of) their factor; ``affinity_misses``
+    counts routes that had to place the factor first — the
+    factor-once/serve-many economics of the cluster live in this ratio
+    (``hit_rate``).  ``replications`` / ``demotions`` count hot-factor
+    copies promoted to a second replica and TTL-expired copies dropped;
+    ``ejections`` / ``readmissions`` the health loop's decisions;
+    ``shed`` the requests the cluster could not serve at all — no
+    healthy replica, unregistered graph, or factor failure — so
+    ``submitted == routed + shed`` holds on every exit path."""
+
+    policy: str
+    replicas: int
+    healthy: int
+    submitted: int
+    routed: int
+    affinity_hits: int
+    affinity_misses: int
+    replications: int
+    demotions: int
+    ejections: int
+    readmissions: int
+    shed: int
+    hot_graphs: int      # graphs currently holding >= 2 live placements
+    per_replica: List[ReplicaStats]
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.affinity_hits + self.affinity_misses
+        return self.affinity_hits / n if n else 0.0
+
+    def as_dict(self) -> Dict:
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self) if f.name != "per_replica"}
+        d["per_replica"] = [r.as_dict() for r in self.per_replica]
+        d["hit_rate"] = self.hit_rate
+        return d

@@ -88,6 +88,7 @@ class SolveRequest:                        # arrays, field-wise == is a trap
     arrival_s: float = 0.0
     priority: int = 0
     deadline_s: Optional[float] = None
+    replica: int = -1         # filled by the cluster router (serving replica)
     # -- filled by the engine -----------------------------------------------
     x: Optional[np.ndarray] = None
     iters: Optional[np.ndarray] = None
@@ -132,6 +133,17 @@ class SolveRequest:                        # arrays, field-wise == is a trap
         return self.finish_time - self.admit_time
 
 
+def make_request(graph_id: str, b, *, rid: int, tol: float = 1e-6,
+                 maxiter: int = 500, priority: int = 0,
+                 deadline_s: Optional[float] = None) -> SolveRequest:
+    """Canonical request builder shared by every submit face
+    (``SolveFrontend.submit``, ``SolveCluster.submit``) so new
+    per-request fields are threaded through one kwarg list, not N."""
+    return SolveRequest(rid=rid, graph_id=graph_id, b=np.asarray(b),
+                        tol=tol, maxiter=maxiter, priority=priority,
+                        deadline_s=deadline_s)
+
+
 @dataclasses.dataclass
 class EngineStats:
     """Service-level counters (``SolveEngine.stats()``).  The compile
@@ -168,6 +180,7 @@ class EngineStats:
     backfill_skips: int
     skipped_reqs: int
     barrier_rounds: int
+    sealed_backfills: int
     deadline_evictions: int
     queue_peak: int
 
@@ -358,7 +371,14 @@ class SolveEngine:
         try:
             handle = self.cache.get(req.graph_id)  # raises on unknown graph
         except KeyError:
+            # fallbacks, in order: a handle pinned by earlier traffic on
+            # this graph, then a handle pre-pinned on the request itself
+            # (a cluster router pins the routed factor so a TTL expiry /
+            # LRU eviction between routing and this driver-side submit
+            # cannot fail the request)
             handle = self._pinned.get(req.graph_id)
+            if handle is None:
+                handle = req._handle
             if handle is None:
                 raise
         b = np.asarray(req.b)
@@ -398,8 +418,20 @@ class SolveEngine:
         free = [i for i, lane in enumerate(self.lanes) if lane is None]
         if not self.queue or not free:
             return
+        # per-occupied-lane worst-case remaining ticks (a lane retires by
+        # its maxiter budget; active lanes advance exactly iters_per_tick
+        # iterations per tick) — the work-conserving seal path proves
+        # candidates short against these bounds
+        ipt = self.iters_per_tick
+        busy = []
+        for lane in self.lanes:
+            if lane is not None:
+                done = (self.ticks - lane.req.admit_tick) * ipt
+                busy.append(-(-max(lane.req.maxiter - done, 1) // ipt))
         picked = self.admission.select(list(self.queue), len(free),
-                                       now=self._clock())
+                                       now=self._clock(),
+                                       busy_bounds=tuple(busy),
+                                       iters_per_tick=ipt)
         for req in picked:
             if req.nrhs > len(free):   # defensive: policy overcommitted
                 raise RuntimeError(
@@ -605,5 +637,6 @@ class SolveEngine:
             backfill_skips=sched["backfill_skips"],
             skipped_reqs=sched["skipped_reqs"],
             barrier_rounds=sched["barrier_rounds"],
+            sealed_backfills=sched.get("sealed_backfills", 0),
             deadline_evictions=self.deadline_evictions,
             queue_peak=self.queue_peak)

@@ -20,7 +20,15 @@ touching the engine or its :class:`FactorCache`:
 * ``await frontend.solve(graph_id, b)`` is the asyncio face: it wraps
   the concurrent future for the running event loop, so a service can
   multiplex thousands of callers over one engine without threads of its
-  own.
+  own;
+* ``call(fn, ...)`` runs a callable **on the driver thread** between
+  engine rounds — the only safe way for another thread to mutate the
+  engine or its cache (a cluster router uses it to factor graphs onto
+  this replica);
+* a driver-thread crash (engine exception outside per-request
+  validation) fails every pending future with the crash recorded in
+  ``driver_error`` instead of hanging them; ``alive`` exposes liveness
+  to a cluster router's ejection loop.
 
 Results are the engine's: the driver thread runs the same tick loop as
 the synchronous ``run_until_drained``, so a request served through the
@@ -33,11 +41,9 @@ import dataclasses
 import threading
 from collections import deque
 from concurrent.futures import Future
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
-import numpy as np
-
-from .engine import EngineStats, SolveEngine, SolveRequest
+from .engine import EngineStats, SolveEngine, SolveRequest, make_request
 
 
 class EngineOverloadedError(RuntimeError):
@@ -59,6 +65,7 @@ class FrontendStats:
     queue_depth: int
     queue_peak: int
     max_queue: int
+    alive: bool
     engine: EngineStats
 
     def as_dict(self) -> Dict:
@@ -98,8 +105,10 @@ class SolveFrontend:
         self._work = threading.Condition(self._lock)    # driver wake-up
         self._space = threading.Condition(self._lock)   # submitter wake-up
         self._ingress: Deque[Tuple[SolveRequest, Future]] = deque()
+        self._control: Deque[Tuple[Callable, tuple, dict, Future]] = deque()
         self._futures: Dict[SolveRequest, Future] = {}
         self._closed = False
+        self.driver_error: Optional[BaseException] = None
         self._seq = 0
         self.submitted = 0
         self.completed = 0
@@ -116,6 +125,13 @@ class SolveFrontend:
         # len() of the engine deque cross-thread is atomic under the GIL
         # and only feeds backpressure, never engine decisions
         return len(self._ingress) + len(self.engine.queue)
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests waiting anywhere before lane admission (ingress +
+        engine queue) — the same advisory cross-thread read that drives
+        backpressure; a cluster router's load signal."""
+        return self._depth()
 
     def submit_request(self, req: SolveRequest) -> "Future[SolveRequest]":
         """Queue a pre-built :class:`SolveRequest`; returns a future that
@@ -144,24 +160,46 @@ class SolveFrontend:
             self._work.notify_all()
         return fut
 
-    def submit(self, graph_id: str, b, *, tol: float = 1e-6,
-               maxiter: int = 500, priority: int = 0,
-               deadline_s: Optional[float] = None,
-               rid: Optional[int] = None) -> "Future[SolveRequest]":
+    def submit(self, graph_id: str, b, *, rid: Optional[int] = None,
+               **kw) -> "Future[SolveRequest]":
         """Build and queue a solve request (``b``: ``(n,)`` or
-        ``(nrhs, n)``)."""
+        ``(nrhs, n)``; ``kw`` = ``tol``/``maxiter``/``priority``/
+        ``deadline_s``, see :func:`repro.serve.engine.make_request`)."""
         with self._lock:
             self._seq += 1
             auto_rid = self._seq
-        return self.submit_request(SolveRequest(
-            rid=rid if rid is not None else auto_rid, graph_id=graph_id,
-            b=np.asarray(b), tol=tol, maxiter=maxiter, priority=priority,
-            deadline_s=deadline_s))
+        return self.submit_request(make_request(
+            graph_id, b, rid=rid if rid is not None else auto_rid, **kw))
 
     async def solve(self, graph_id: str, b, **kw) -> SolveRequest:
         """Asyncio face: ``res = await frontend.solve(gid, b)``."""
         import asyncio
         return await asyncio.wrap_future(self.submit(graph_id, b, **kw))
+
+    # -- control channel (any thread) ---------------------------------------
+    def call(self, fn: Callable, *args, **kw) -> "Future[Any]":
+        """Run ``fn(*args, **kw)`` **on the driver thread**, between
+        engine rounds, returning a future for its result.  This is the
+        only safe way for another thread to touch the engine or its
+        ``FactorCache`` (e.g. a cluster router factoring a graph onto
+        this replica): the driver thread is their sole owner.  ``fn``
+        exceptions resolve the future exceptionally; they never kill the
+        driver."""
+        fut: "Future[Any]" = Future()
+        with self._work:
+            if self._closed:
+                raise RuntimeError("call on a closed SolveFrontend")
+            self._control.append((fn, args, kw, fut))
+            self._work.notify_all()
+        return fut
+
+    @property
+    def alive(self) -> bool:
+        """Driver-thread liveness — the health signal a cluster router
+        keys ejection on.  False once the driver crashed (see
+        ``driver_error``) or the frontend closed."""
+        return (self._thread.is_alive() and self.driver_error is None
+                and not self._closed)
 
     # -- driver thread (sole owner of the engine) ---------------------------
     def _run(self) -> None:
@@ -170,8 +208,8 @@ class SolveFrontend:
         eng = self.engine
         while True:
             with self._work:
-                while (not self._ingress and not eng.busy
-                       and not self._closed):
+                while (not self._ingress and not self._control
+                       and not eng.busy and not self._closed):
                     self._work.wait(timeout=self.idle_wait_s)
                 if self._closed:
                     # close(drain=True) already waited for idle; a hard
@@ -179,39 +217,69 @@ class SolveFrontend:
                     break
                 batch = list(self._ingress)
                 self._ingress.clear()
+                control = list(self._control)
+                self._control.clear()
                 if batch:
                     self._space.notify_all()
-            for req, fut in batch:
+            for fn, args, kw, cfut in control:
                 try:
-                    eng.submit(req)
-                except Exception as exc:   # unknown graph / bad rhs shape
-                    self.failed += 1
-                    if not fut.done():     # caller may have cancelled
-                        fut.set_exception(exc)
+                    res = fn(*args, **kw)
+                except Exception as exc:
+                    if not cfut.done():
+                        cfut.set_exception(exc)
                 else:
-                    self._futures[req] = fut
-            if eng.busy:
-                for done in eng.tick():
-                    fut = self._futures.pop(done, None)
-                    if fut is None:
-                        continue   # submitted directly to the engine,
-                        # not through the frontend: not ours to count
-                    self.completed += 1
-                    if not fut.done():
-                        fut.set_result(done)
-                with self._space:
-                    self._space.notify_all()   # lanes freed → queue drained
-        # closed: fail whatever never completed
+                    if not cfut.done():
+                        cfut.set_result(res)
+            try:
+                for req, fut in batch:
+                    try:
+                        eng.submit(req)
+                    except Exception as exc:  # unknown graph / bad shape
+                        self.failed += 1
+                        if not fut.done():    # caller may have cancelled
+                            fut.set_exception(exc)
+                    else:
+                        self._futures[req] = fut
+                if eng.busy:
+                    for done in eng.tick():
+                        fut = self._futures.pop(done, None)
+                        if fut is None:
+                            continue  # submitted directly to the engine,
+                            # not through the frontend: not ours to count
+                        self.completed += 1
+                        if not fut.done():
+                            fut.set_result(done)
+                    with self._space:
+                        self._space.notify_all()  # lanes freed → drained
+            except Exception as exc:
+                # a wedged engine must fail fast, not hang every future:
+                # record the crash (surfaced as `alive == False` — the
+                # router's ejection signal), close, and fall through to
+                # the cleanup below so pending futures resolve
+                # exceptionally instead of blackholing
+                self.driver_error = exc
+                with self._work:
+                    self._closed = True
+                    self._work.notify_all()
+                    self._space.notify_all()
+                break
+        # closed (or crashed): fail whatever never completed
+        why = ("SolveFrontend closed" if self.driver_error is None
+               else f"engine driver crashed: {self.driver_error!r}")
         for req, fut in list(self._futures.items()):
             self.failed += 1
             if not fut.done():
-                fut.set_exception(RuntimeError("SolveFrontend closed"))
+                fut.set_exception(RuntimeError(why))
         self._futures.clear()
         for req, fut in list(self._ingress):
             self.failed += 1
             if not fut.done():
-                fut.set_exception(RuntimeError("SolveFrontend closed"))
+                fut.set_exception(RuntimeError(why))
         self._ingress.clear()
+        for fn, args, kw, cfut in list(self._control):
+            if not cfut.done():
+                cfut.set_exception(RuntimeError(why))
+        self._control.clear()
 
     # -- lifecycle ----------------------------------------------------------
     def drain(self, timeout: Optional[float] = None) -> bool:
@@ -254,4 +322,5 @@ class SolveFrontend:
             submitted=self.submitted, completed=self.completed,
             failed=self.failed, rejected=self.rejected,
             queue_depth=depth, queue_peak=peak,
-            max_queue=self.max_queue, engine=self.engine.stats())
+            max_queue=self.max_queue, alive=self.alive,
+            engine=self.engine.stats())

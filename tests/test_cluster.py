@@ -1,0 +1,313 @@
+"""Solve cluster: routing-policy units, cluster bit-exactness vs direct
+per-replica solves, affinity-hit economics, hot-factor replication with
+TTL demotion, replica health ejection/re-admission, and the core cache
+probes the router rides on."""
+import numpy as np
+import jax
+import pytest
+
+from repro.core.solver import FactorCache
+from repro.data import graphs
+from repro.serve import ClusterOverloadedError, SolveCluster
+from repro.serve.cluster import (FactorAffinityRouting, LeastLoadedRouting,
+                                 RoundRobinRouting, make_routing)
+
+CACHE_KW = dict(chunk=32, fill_slack=64, strict=False)
+
+
+@pytest.fixture(scope="module")
+def gset():
+    return {"g2d": graphs.grid2d(6, 6, seed=3),      # n = 36
+            "road": graphs.road_like(6, seed=4),     # n = 36
+            "pl": graphs.powerlaw(80, 4, seed=3)}    # n = 80
+
+
+def _rhs(rng, n, nrhs=1):
+    b = rng.normal(size=(nrhs, n) if nrhs > 1 else n).astype(np.float32)
+    return b - b.mean(axis=-1, keepdims=True)
+
+
+def _cluster(gset, **kw):
+    kw.setdefault("replicas", 2)
+    kw.setdefault("slots", 4)
+    kw.setdefault("iters_per_tick", 8)
+    kw.setdefault("cache_kw", CACHE_KW)
+    cl = SolveCluster(**kw)
+    for i, (name, g) in enumerate(gset.items()):
+        cl.register(g, jax.random.key(i), graph_id=name)
+    return cl
+
+
+# ---------------------------------------------------------------------------
+# Core cache probes (the read-only surface the router rides on)
+# ---------------------------------------------------------------------------
+
+def test_cache_fresh_and_capacity_probe(gset):
+    now = [0.0]
+    c = FactorCache(clock=lambda: now[0], max_handles=4, **CACHE_KW)
+    c.factor(gset["road"], jax.random.key(0), graph_id="road", ttl_s=5.0)
+    assert c.fresh("road") and not c.fresh("nope")
+    p = c.capacity_probe()
+    assert p["handles"] == 1 and p["free_handles"] == 3
+    assert p["free_bytes"] is None          # no byte budget set
+    assert p["device_bytes"] > 0
+    now[0] = 6.0                            # past the TTL
+    assert not c.fresh("road")
+    assert "road" in c                      # fresh() never sweeps
+    c.sweep_stale()
+    assert "road" not in c                  # the sweep does
+
+
+# ---------------------------------------------------------------------------
+# Routing policies: pure unit semantics over stub replicas
+# ---------------------------------------------------------------------------
+
+class _Stub:
+    def __init__(self, index, load=0, handles=0, free_rows=0):
+        self.index = index
+        self.load = load
+        self._p = dict(handles=handles, free_handles=None,
+                       device_bytes=0, free_bytes=None,
+                       fleet_free_rows=free_rows)
+
+    def capacity_probe(self):
+        return self._p
+
+
+def test_round_robin_cycles_and_ignores_state():
+    p = RoundRobinRouting()
+    a, b = _Stub(0, load=100), _Stub(1, load=0)
+    picks = [p.choose("g", [b], [a, b]).index for _ in range(4)]
+    assert picks == [0, 1, 0, 1]            # blind to holders and load
+
+
+def test_p2c_prefers_lower_load():
+    p = LeastLoadedRouting(seed=0)
+    a, b = _Stub(0, load=9), _Stub(1, load=1)
+    assert p.choose("g", [], [a, b]) is b   # 2 candidates: plain min
+    c = _Stub(2, load=5)
+    picks = {p.choose("g", [], [a, b, c]).index for _ in range(20)}
+    assert 0 not in picks                   # the loaded one never wins p2c
+
+
+def test_affinity_prefers_holders_then_capacity():
+    p = FactorAffinityRouting()
+    a, b = _Stub(0, load=7), _Stub(1, load=2)
+    assert p.choose("g", [a], [a, b]) is a  # holder beats lighter load
+    assert p.choose("g", [a, b], [a, b]) is b   # holders tie-break: load
+    roomy = _Stub(2, handles=0, free_rows=3)
+    full = _Stub(3, handles=5)
+    assert p.choose("g", [], [full, roomy]) is roomy   # miss: capacity
+    assert make_routing("affinity").name == "affinity"
+    with pytest.raises(ValueError):
+        make_routing("random")
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: cluster serving is bit-exact with direct per-replica solves
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("routing", ["affinity", "rr"])
+def test_cluster_bit_exact_mixed_trace(gset, routing):
+    """The mixed 3-graph trace routed through a 2-replica cluster (any
+    policy) yields per-request x/iters/relres **identical** to a direct
+    ``FactorHandle.solve`` on whichever replica served each request —
+    the cluster's signature invariant."""
+    rng = np.random.default_rng(11)
+    spec = [("g2d", 1, 1e-6), ("pl", 2, 1e-5), ("road", 1, 1e-6),
+            ("g2d", 3, 1e-6), ("pl", 1, 1e-6), ("road", 2, 1e-5),
+            ("g2d", 1, 1e-4), ("pl", 2, 1e-6)]
+    blocks = [(gid, _rhs(rng, gset[gid].n, nr), tol)
+              for gid, nr, tol in spec]
+    with _cluster(gset, routing=routing) as cl:
+        futs = [cl.submit(gid, b, tol=tol, maxiter=400)
+                for gid, b, tol in blocks]
+        done = [f.result(timeout=300) for f in futs]
+        assert cl.drain(timeout=120)
+        served = {r.replica for r in done}
+        assert served <= {0, 1} and len(served) == 2   # both replicas
+        for (gid, b, tol), req in zip(blocks, done):
+            assert req.status == "converged" and req.replica >= 0
+            rep = cl.replicas[req.replica]
+            ref = rep.cache.get(gid).solve(np.atleast_2d(b), tol=tol,
+                                           maxiter=400)
+            assert np.array_equal(np.atleast_2d(req.x), np.asarray(ref.x))
+            assert np.array_equal(np.atleast_1d(req.iters),
+                                  np.asarray(ref.iters))
+            assert np.array_equal(np.atleast_1d(req.relres),
+                                  np.atleast_1d(np.asarray(ref.relres)))
+        st = cl.stats()
+        assert st.submitted == st.routed == len(spec) and st.shed == 0
+        assert st.affinity_hits + st.affinity_misses == st.routed
+
+
+def test_affinity_hit_rate_beats_rr_on_skewed_traffic(gset):
+    """Skewed traffic (one hot graph): affinity pays one placement per
+    graph; rr keeps landing graphs on replicas that don't hold them."""
+    hit_rates = {}
+    for routing in ("affinity", "rr"):
+        rng = np.random.default_rng(7)
+        gids = ["g2d", "road", "pl"]
+        picks = [gids[i] for i in rng.choice(3, size=18, p=[.7, .2, .1])]
+        with _cluster(gset, routing=routing) as cl:
+            futs = [cl.submit(g, _rhs(rng, gset[g].n), tol=1e-4,
+                              maxiter=300) for g in picks]
+            for f in futs:
+                f.result(timeout=300)
+            st = cl.stats()
+            hit_rates[routing] = st.hit_rate
+            assert st.routed == len(picks)
+    assert hit_rates["affinity"] > hit_rates["rr"]
+
+
+# ---------------------------------------------------------------------------
+# Hot-factor replication and TTL demotion
+# ---------------------------------------------------------------------------
+
+def test_hot_factor_replication_splits_then_demotes(gset):
+    """A graph crossing the replication threshold is factored onto a
+    second replica (TTL'd), traffic splits across both copies while it
+    is hot, and the TTL expiry demotes the copy via the cache's own
+    staleness sweep."""
+    now = [0.0]
+    with _cluster(gset, routing="affinity", replicate_above=3.0,
+                  rate_window_s=1.0, replica_ttl_s=5.0,
+                  clock=lambda: now[0]) as cl:
+        rng = np.random.default_rng(5)
+        n = gset["road"].n
+        futs = [cl.submit("road", _rhs(rng, n), tol=1e-30, maxiter=100)
+                for _ in range(8)]
+        for f in futs:
+            f.result(timeout=300)
+        st = cl.stats()
+        assert st.replications >= 1            # promoted to a 2nd replica
+        # wait for the async twin factor to land on the second replica
+        import time
+        for _ in range(600):
+            if any(rep.fresh("road") for rep in cl.replicas[1:]):
+                break
+            time.sleep(0.05)
+        assert any(rep.fresh("road") for rep in cl.replicas[1:])
+        # twin is live: a hot burst splits across both copies
+        futs = [cl.submit("road", _rhs(rng, n), tol=1e-30, maxiter=100)
+                for _ in range(6)]
+        served = {f.result(timeout=300).replica for f in futs}
+        assert served == {0, 1}                # traffic actually split
+        st = cl.stats()
+        assert st.hot_graphs == 1
+        assert sum(r.placements for r in st.per_replica) == 2
+        # TTL expiry: next route observes the stale copy and demotes
+        now[0] = 10.0
+        cl.submit("road", _rhs(rng, n), tol=1e-4,
+                  maxiter=300).result(timeout=300)
+        st = cl.stats()
+        assert st.demotions >= 1 and st.hot_graphs == 0
+
+
+# ---------------------------------------------------------------------------
+# Health: ejection, re-admission, shed
+# ---------------------------------------------------------------------------
+
+def test_dead_replica_ejected_and_rerouted(gset):
+    """A replica whose driver thread is gone is ejected (permanently)
+    and its graphs re-place on the survivors — requests keep completing
+    instead of blackholing."""
+    with _cluster(gset, routing="affinity") as cl:
+        rng = np.random.default_rng(3)
+        n = gset["road"].n
+        first = cl.submit("road", _rhs(rng, n), tol=1e-4,
+                          maxiter=300).result(timeout=300)
+        cl.replicas[first.replica].frontend.close(drain=True)  # wedge it
+        second = cl.submit("road", _rhs(rng, n), tol=1e-4,
+                           maxiter=300).result(timeout=300)
+        assert second.replica != first.replica
+        assert second.status == "converged"
+        st = cl.stats()
+        assert st.ejections == 1 and st.healthy == 1
+        assert st.readmissions == 0            # dead drivers stay out
+
+
+def test_overload_ejection_and_readmission(gset):
+    """Backpressure rejections inside the health window eject a replica
+    for the cooldown; it re-admits after.  Driven by an injected clock
+    so the window/cooldown arithmetic is deterministic."""
+    now = [0.0]
+    cl = _cluster(gset, routing="affinity", replicas=2, slots=1,
+                  max_queue=1, overload="reject", eject_rejections=1,
+                  health_window_s=1.0, readmit_cooldown_s=2.0,
+                  clock=lambda: now[0])
+    try:
+        rng = np.random.default_rng(9)
+        n = gset["road"].n
+        # a blocker pins replica 0's only lane; the next submit fills
+        # its 1-deep queue, the one after rejects -> instant ejection
+        blocker = cl.submit("road", _rhs(rng, n), tol=1e-30, maxiter=4000)
+        futs = [blocker]
+        ejected = False
+        for _ in range(6):
+            futs.append(cl.submit("road", _rhs(rng, n), tol=1e-4,
+                                  maxiter=300))
+            st = cl.stats()
+            if st.ejections >= 1:
+                ejected = True
+                break
+        assert ejected
+        st = cl.stats()
+        assert st.healthy == 1                 # replica 0 in cooldown
+        # let the rerouted request finish so the survivor's 1-deep
+        # queue is empty before the spillover submit
+        futs[-1].result(timeout=300)
+        spill = cl.submit("road", _rhs(rng, n), tol=1e-4, maxiter=300)
+        assert spill.result(timeout=300).status == "converged"
+        now[0] = 5.0                           # past the cooldown
+        st = cl.stats()
+        assert st.healthy == 2                 # routable again (pure read)
+        assert st.readmissions == 0            # ...but stats never advances
+        cl.submit("road", _rhs(rng, n), tol=1e-4,
+                  maxiter=300).result(timeout=300)
+        st = cl.stats()                        # a route re-admitted it
+        assert st.healthy == 2 and st.readmissions == 1
+    finally:
+        cl.close(drain=False)
+
+
+def test_all_replicas_down_sheds_with_cluster_overload(gset):
+    with _cluster(gset, replicas=2) as cl:
+        for rep in cl.replicas:
+            rep.frontend.close(drain=True)
+        rng = np.random.default_rng(1)
+        with pytest.raises(ClusterOverloadedError):
+            cl.submit("road", _rhs(rng, gset["road"].n))
+        st = cl.stats()
+        assert st.shed == 1 and st.healthy == 0
+        assert st.submitted == st.routed + st.shed
+
+
+def test_unregistered_graph_raises_keyerror_and_counts_shed(gset):
+    with _cluster(gset) as cl:
+        with pytest.raises(KeyError):
+            cl.submit("mystery", np.zeros(8, np.float32))
+        st = cl.stats()
+        assert st.submitted == st.routed + st.shed == 1  # conservation
+        assert not cl.router.placements                  # no stray entry
+
+
+def test_routed_request_survives_eviction_before_engine_submit(gset):
+    """The expiry race: a factor evicted between the router's freshness
+    snapshot and the driver-side engine submit must not fail the
+    request — the replica pins the routed handle on the request and the
+    engine falls back to it."""
+    from repro.core.solver import FactorCache
+    from repro.serve import SolveEngine, SolveRequest
+    c = FactorCache(**CACHE_KW)
+    g = gset["road"]
+    c.factor(g, jax.random.key(0), graph_id="road")
+    eng = SolveEngine(c, slots=2, iters_per_tick=8)
+    rng = np.random.default_rng(17)
+    req = SolveRequest(rid=0, graph_id="road", b=_rhs(rng, g.n),
+                       tol=1e-4, maxiter=300)
+    req._handle = c.peek("road")     # what EngineReplica.submit does
+    c.evict("road")                  # TTL sweep / LRU between route+submit
+    eng.submit(req)
+    done = eng.run_until_drained()
+    assert done == [req] and req.status == "converged"

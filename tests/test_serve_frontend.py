@@ -345,3 +345,174 @@ def test_frontend_close_rejects_new_submits(fleet, cache):
     fe.close()
     with pytest.raises(RuntimeError):
         fe.submit("road", np.zeros(4, np.float32))
+
+
+def test_frontend_close_drain_resolves_in_flight(fleet, cache):
+    """close(drain=True) with queued + in-flight work: every future
+    resolves with its result before the driver stops."""
+    gs, _ = fleet
+    n = gs["road"].n
+    rng = np.random.default_rng(61)
+    eng = SolveEngine(cache, slots=2, iters_per_tick=4)
+    fe = SolveFrontend(eng, max_queue=64)
+    futs = [fe.submit("road", _rhs(rng, n, 1), tol=1e-3, maxiter=300)
+            for _ in range(5)]
+    fe.close(drain=True, timeout=300)
+    for f in futs:
+        assert f.done()
+        assert f.result(timeout=0).status == "converged"
+    fs = fe.stats()
+    assert fs.completed == 5 and fs.failed == 0
+    assert not fe.alive
+
+
+def test_frontend_close_nodrain_fails_in_flight_deterministically(
+        fleet, cache):
+    """close(drain=False) with an admitted lane and queued work: every
+    unresolved future fails with RuntimeError promptly — resolved or
+    failed, never hanging."""
+    gs, _ = fleet
+    n = gs["road"].n
+    rng = np.random.default_rng(62)
+    eng = SolveEngine(cache, slots=1, iters_per_tick=4)
+    fe = SolveFrontend(eng, max_queue=64)
+    blocker = fe.submit("road", _rhs(rng, n, 1), tol=1e-30, maxiter=40_000)
+    queued = [fe.submit("road", _rhs(rng, n, 1), tol=1e-3, maxiter=300)
+              for _ in range(3)]
+    # wait until the blocker actually holds the lane (it is in flight,
+    # not just queued) so the abandon path is exercised for both states
+    import time
+    for _ in range(600):
+        if eng.stats().in_flight_reqs >= 1:
+            break
+        time.sleep(0.01)
+    fe.close(drain=False)
+    for f in (blocker, *queued):
+        with pytest.raises(RuntimeError):
+            f.result(timeout=30)       # resolves exceptionally, no hang
+    fs = fe.stats()
+    assert fs.submitted == 4 and fs.completed + fs.failed == 4
+
+
+def test_frontend_call_runs_on_driver_thread(fleet, cache):
+    """The control channel runs callables on the driver thread (the
+    engine/cache owner), resolves their results and exceptions, and
+    refuses after close."""
+    import threading
+    eng = SolveEngine(cache, slots=2)
+    with SolveFrontend(eng) as fe:
+        ident = fe.call(lambda: threading.current_thread().name)
+        assert ident.result(timeout=30) == "solve-frontend"
+
+        def boom():
+            raise ValueError("nope")
+        bad = fe.call(boom)
+        with pytest.raises(ValueError):
+            bad.result(timeout=30)
+        assert fe.alive                    # fn exceptions never kill it
+        assert fe.call(lambda: 42).result(timeout=30) == 42
+    with pytest.raises(RuntimeError):
+        fe.call(lambda: 0)
+
+
+def test_frontend_driver_crash_fails_futures_not_hangs(fleet, cache):
+    """An engine exception outside per-request validation kills the
+    driver loop: pending futures fail with the crash recorded, `alive`
+    flips False (the cluster router's ejection signal), and new submits
+    are refused — nothing blackholes."""
+    gs, _ = fleet
+    n = gs["road"].n
+    rng = np.random.default_rng(63)
+    eng = SolveEngine(cache, slots=1, iters_per_tick=4)
+    fe = SolveFrontend(eng, max_queue=16)
+    fut = fe.submit("road", _rhs(rng, n, 1), tol=1e-30, maxiter=40_000)
+    eng._step_fn = None                    # wedge the engine mid-flight
+    with pytest.raises(RuntimeError, match="driver crashed"):
+        fut.result(timeout=60)
+    assert not fe.alive and fe.driver_error is not None
+    with pytest.raises(RuntimeError):
+        fe.submit("road", _rhs(rng, n, 1))
+    fe.close(drain=False)                  # idempotent on a dead driver
+
+
+# ---------------------------------------------------------------------------
+# Work-conserving backfill under seal
+# ---------------------------------------------------------------------------
+
+def test_seal_backfill_admits_only_provably_short(fleet, cache):
+    """Policy unit: a sealed queue still admits candidates whose
+    worst-case tick count fits under the sealer's wait bound, and only
+    those; sealed admissions never touch the skip counters."""
+    p = PriorityAdmission(max_skips=1)
+    wide = _fake(0, 3, seq=0, skips=1)          # already at its bound
+    short = _fake(1, 1, seq=1)
+    short.maxiter = 16                          # 2 ticks at ipt=8
+    long_ = _fake(2, 1, seq=2)
+    long_.maxiter = 300                         # 38 ticks
+    take = p.select([wide, short, long_], 2, now=0.0,
+                    busy_bounds=(10,), iters_per_tick=8)
+    # wide needs 3 lanes, 2 free -> waits on the 1 busy lane (<= 10
+    # ticks); short (2) fits under that bound, long (38) does not
+    assert take == [short]
+    assert p.sealed_backfills == 1
+    assert p.backfill_skips == 0 and wide.sched_skips == 1  # untouched
+    assert p.barrier_rounds == 1
+
+
+def test_seal_backfill_disabled_and_unprovable(fleet, cache):
+    p = PriorityAdmission(max_skips=1, work_conserving=False)
+    wide = _fake(0, 3, seq=0, skips=1)
+    short = _fake(1, 1, seq=1)
+    short.maxiter = 8
+    assert p.select([wide, short], 2, now=0.0, busy_bounds=(10,),
+                    iters_per_tick=8) == []
+    assert p.sealed_backfills == 0
+    # enabled but no busy-lane bounds -> nothing is provable -> seal holds
+    p2 = PriorityAdmission(max_skips=1)
+    assert p2.select([wide, short], 2, now=0.0) == []
+    assert p2.sealed_backfills == 0
+
+
+def test_engine_seal_backfill_work_conserving(fleet, cache):
+    """Engine acceptance: under a sealed wide head, a provably-short
+    narrow request rides a free lane and retires before the wide even
+    admits; an unprovable one waits.  The starvation-bound invariant
+    holds throughout and `sealed_backfills` surfaces in EngineStats."""
+    gs, _ = fleet
+    n = gs["road"].n
+    rng = np.random.default_rng(64)
+    eng = SolveEngine(cache, slots=3, iters_per_tick=8,
+                      admission=make_policy("priority", max_skips=1))
+    # blocker holds one lane for exactly 20 ticks (160/8); two easy
+    # narrows ride the first backfill round, sealing the wide
+    blocker = SolveRequest(rid=0, graph_id="road", b=_rhs(rng, n, 1),
+                           tol=1e-30, maxiter=160)
+    wide = SolveRequest(rid=1, graph_id="road", b=_rhs(rng, n, 3),
+                        tol=1e-4, maxiter=300)
+    n1 = SolveRequest(rid=2, graph_id="road", b=_rhs(rng, n, 1),
+                      tol=1e-3, maxiter=300)
+    n2 = SolveRequest(rid=3, graph_id="road", b=_rhs(rng, n, 1),
+                      tol=1e-3, maxiter=300)
+    for r in (blocker, wide, n1, n2):
+        eng.submit(r)
+    done = []
+    done += eng.tick()
+    done += eng.tick()                         # n1/n2 may retire here
+    assert wide.sched_skips == 1               # sealed from here on
+    # short candidate: 16 iters = 2 ticks << blocker's remaining bound;
+    # long candidate: 38 ticks, not provable -> waits for the wide
+    short = SolveRequest(rid=4, graph_id="road", b=_rhs(rng, n, 1),
+                         tol=1e-30, maxiter=16)
+    long_ = SolveRequest(rid=5, graph_id="road", b=_rhs(rng, n, 1),
+                         tol=1e-3, maxiter=300)
+    eng.submit(short)
+    eng.submit(long_)
+    done += eng.run_until_drained()
+    assert len(done) == 6
+    st = eng.stats()
+    assert st.sealed_backfills >= 1
+    assert short.finish_tick < wide.admit_tick  # rode a sealed-idle lane
+    assert long_.admit_tick >= wide.admit_tick  # bound not provable
+    assert wide.converged
+    assert st.backfill_skips <= st.max_skips * max(st.skipped_reqs, 0)
+    assert wide.sched_skips <= st.max_skips

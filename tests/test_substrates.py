@@ -164,36 +164,6 @@ def test_schedules():
 
 
 # ---------------------------------------------------------------------------
-# serving engine
-# ---------------------------------------------------------------------------
-
-def test_serve_engine_batched_requests():
-    """Sole remaining coverage of the *deprecated* token engine
-    (``serve.lm_engine`` — a substrate exercise, not part of the solve
-    service); its unique assertions are the drain-return contract and
-    slot recycling below.  The production serving stack is covered by
-    ``test_serve_solver.py`` / ``test_serve_frontend.py``."""
-    from repro.serve import ServeEngine, Request
-    from repro.models import transformer as tf
-    from repro.models.common import init_params
-    cfg = _tiny_cfg()
-    params = init_params(tf.pdefs(cfg), jax.random.key(0), jnp.float32)
-    eng = ServeEngine(cfg, params, slots=2, max_len=32)
-    rng = np.random.default_rng(0)
-    reqs = [Request(rid=i, prompt=rng.integers(1, cfg.vocab, 4,
-                                               dtype=np.int32),
-                    max_new_tokens=5) for i in range(3)]
-    for r in reqs:
-        eng.submit(r)
-    done = eng.run_until_drained(max_ticks=100)
-    # drain hands back every finished request (seed bug: always-empty list)
-    assert {d.rid for d in done} == {r.rid for r in reqs}
-    for r in reqs:
-        assert len(r.out_tokens) == 5
-        assert all(0 <= t < cfg.vocab for t in r.out_tokens)
-
-
-# ---------------------------------------------------------------------------
 # dry-run integration (subprocess with 8 forced host devices)
 # ---------------------------------------------------------------------------
 
