@@ -7,9 +7,26 @@ Columns: factor time, solve time, iterations, relative residual for
   jacobi     — diagonal preconditioner
   none       — plain CG
   amg        — smoothed-aggregation V-cycle (HyPre/AmgX stand-in)
+
+Run bare (``python -m benchmarks.bench_convergence``) for the legacy
+host-side Table-2 sweep over the full suite.  With ``--json PATH`` it
+instead produces the **serving-zoo artifact** the ``bench-precond`` CI
+job gates on (``benchmarks.check_precond_regression``):
+
+* ``families`` — the family matrix: every registered preconditioner
+  family (:data:`repro.core.solver.PRECOND_FAMILIES`) constructed and
+  served through the *device fleet* path (``FactorCache.factor`` →
+  ``PreconditionerHandle.solve``) on every suite graph, reporting
+  construction seconds, solve seconds, iterations, relative residual
+  and device bytes — the table ``docs/preconditioners.md`` renders;
+* ``replay`` — always-AC vs ``--precond auto`` on the same skewed
+  open-loop deadline trace (``repro.launch.serve.run_service``), the
+  deadline-hit-rate comparison the adaptive selector is gated on.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -131,5 +148,126 @@ def run(suite=None, tol=1e-6, maxiter=1000):
     return rows
 
 
+def run_family_matrix(suite=None, *, tol=1e-6, maxiter=500, seed=0):
+    """Serve every registered preconditioner family on every suite
+    graph through the device-fleet path and tabulate cost/quality.
+    Returns ``{graph: {family: row}}`` with construction seconds, solve
+    seconds, block iterations, relative residual, convergence and
+    device footprint per row."""
+    from repro.core.solver import FactorCache, PRECOND_FAMILIES
+    suite = suite or graphs.SUITE_TINY
+    key = jax.random.key(0)
+    rng = np.random.default_rng(seed)
+    matrix = {}
+    for name, make in suite.items():
+        g = make()
+        b = rng.normal(size=g.n).astype(np.float32)
+        b -= b.mean()
+        row = {}
+        for fam in sorted(PRECOND_FAMILIES):
+            cache = FactorCache(strict=False)
+            h = cache.factor(g, key, graph_id=name, family=fam)
+            t0 = time.perf_counter()
+            res = h.solve(b, tol=tol, maxiter=maxiter)
+            t_solve = time.perf_counter() - t0
+            iters = int(np.max(res.iters))
+            relres = float(np.max(res.relres))
+            row[fam] = dict(construct_s=h.construct_s, solve_s=t_solve,
+                            iters=iters, relres=relres,
+                            converged=bool(relres <= 10 * tol),
+                            kind=h.kind, device_bytes=h.device_bytes)
+            emit(f"precond/{name}/{fam}/iters", iters,
+                 f"relres={relres:.2e};construct_s={h.construct_s:.2f}")
+        matrix[name] = row
+    return matrix
+
+
+def run_auto_replay(*, suite="tiny", requests=24, warmup=16, slots=4,
+                    iters_per_tick=8, deadline_ms=1500.0, skew=1.5,
+                    arrival_rate=20.0, seed=0, select_epsilon=0.25):
+    """Replay one skewed open-loop deadline trace twice — always-AC vs
+    adaptive family selection — and report the deadline outcome per
+    mode.  Both replays share the trace seed (identical requests and
+    arrivals) and warm up through the same engine first, so the
+    comparison isolates the selector's family choices.
+
+    Deadlines are accounted **post hoc** (a request missed its SLO when
+    its end-to-end latency exceeded ``deadline_ms``) under the plain
+    FIFO scheduler rather than via the deadline policy's hopeless-lane
+    eviction: eviction retires a request the moment its budget is
+    blown, which truncates the very latencies the two modes are being
+    compared on (and its first eviction per bucket pays a jit compile
+    that would punish whichever mode evicts first)."""
+    from repro.launch.serve import run_service
+    out = {}
+    for mode in ("ac", "auto"):
+        m, done = run_service(
+            suite=suite, requests=requests, slots=slots,
+            iters_per_tick=iters_per_tick, seed=seed,
+            warmup_requests=warmup, arrival_rate=arrival_rate,
+            policy="fifo", deadline_ms=deadline_ms, precond=mode,
+            select_epsilon=select_epsilon, skew=skew)
+        slo_missed = sum(1 for r in done
+                         if r.deadline_s is not None
+                         and r.latency_s > r.deadline_s)
+        out[mode] = dict(
+            requests=m["requests"], completed=m["completed"],
+            converged=m["converged"], slo_missed=slo_missed,
+            deadline_missed=m["deadline_missed"],
+            latency_p95_s=m["latency_p95_s"],
+            service_p95_s=m["service_p95_s"],
+            selector=m["selector"])
+        emit(f"precond/replay/{mode}/slo_missed", slo_missed,
+             f"completed={m['completed']};requests={m['requests']}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write the serving-zoo artifact (family matrix "
+                         "+ auto-vs-AC deadline replay) to this file; "
+                         "omit for the legacy host Table-2 sweep")
+    ap.add_argument("--suite", default="tiny",
+                    choices=["micro", "tiny", "full"])
+    ap.add_argument("--tol", type=float, default=1e-6)
+    ap.add_argument("--maxiter", type=int, default=500)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--warmup", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--deadline-ms", type=float, default=1500.0)
+    ap.add_argument("--skew", type=float, default=1.5)
+    ap.add_argument("--arrival-rate", type=float, default=20.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.json is None:
+        run()
+        return
+    spec = {"micro": graphs.SUITE_MICRO, "tiny": graphs.SUITE_TINY,
+            "full": graphs.SUITE}[args.suite]
+    matrix = run_family_matrix(spec, tol=args.tol, maxiter=args.maxiter,
+                               seed=args.seed)
+    replay = run_auto_replay(
+        suite=args.suite if args.suite != "full" else "tiny",
+        requests=args.requests, warmup=args.warmup, slots=args.slots,
+        deadline_ms=args.deadline_ms, skew=args.skew,
+        arrival_rate=args.arrival_rate, seed=args.seed)
+    artifact = dict(suite=args.suite, tol=args.tol, maxiter=args.maxiter,
+                    seed=args.seed, deadline_ms=args.deadline_ms,
+                    skew=args.skew, families=matrix, replay=replay)
+    with open(args.json, "w") as fh:
+        json.dump(artifact, fh, indent=2)
+    print(f"wrote {args.json}")
+    for name, row in matrix.items():
+        cells = "  ".join(f"{fam}:{r['iters']}it"
+                          f"{'' if r['converged'] else '(!)'}"
+                          for fam, r in row.items())
+        print(f"{name:16s} {cells}")
+    print(f"replay: ac missed={replay['ac']['slo_missed']} "
+          f"auto missed={replay['auto']['slo_missed']} "
+          f"(of {replay['ac']['requests']})")
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,0 +1,118 @@
+"""CI gate: validate a fresh ``BENCH_precond.json`` (the serving-zoo
+artifact ``bench_convergence --json`` writes) against invariants and
+the committed baseline.
+
+    python -m benchmarks.check_precond_regression BENCH_precond.json \
+        benchmarks/baselines/BENCH_precond.json
+
+Three kinds of gate:
+
+* **zoo health** (machine-independent): every registered family must
+  have converged on every suite graph through the device-fleet serving
+  path — a family that stops converging is broken, not slow;
+* **AC iteration count** vs the committed baseline, per graph: the
+  paper's preconditioner must stay within ``--max-iter-ratio`` of its
+  recorded iterations (iterations are deterministic given the trace
+  seed, so the default bar of 1.5 only absorbs intentional numeric
+  changes — refresh with ``--write-baseline`` when construction
+  changes on purpose);
+* **adaptive selection**: on the recorded skewed deadline replay,
+  ``--precond auto`` must never miss more SLOs than always-AC
+  (``auto.slo_missed <= ac.slo_missed``) and both modes must complete
+  the full trace.  The bound is relative *within one artifact*, so CI
+  runner speed cancels: a machine where both modes miss everything
+  still passes, a selector that picks pathological families does not.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+
+def check(artifact: dict, baseline: dict, *,
+          max_iter_ratio: float) -> list:
+    failures = []
+
+    fams = artifact.get("families", {})
+    if not fams:
+        failures.append("artifact has no family matrix "
+                        "(families == {})")
+    for graph, row in fams.items():
+        for fam, r in row.items():
+            if not r.get("converged", False):
+                failures.append(
+                    f"[{graph}/{fam}] did not converge "
+                    f"(iters={r.get('iters')}, relres={r.get('relres')})")
+
+    base_fams = baseline.get("families", {})
+    for graph, row in fams.items():
+        base_ac = base_fams.get(graph, {}).get("ac")
+        ac = row.get("ac")
+        if base_ac is None or ac is None:
+            continue
+        bound = max_iter_ratio * base_ac["iters"]
+        if ac["iters"] > bound:
+            failures.append(
+                f"[{graph}/ac] iterations regressed: {ac['iters']} > "
+                f"{max_iter_ratio} * baseline {base_ac['iters']}")
+
+    replay = artifact.get("replay", {})
+    ac_r, auto_r = replay.get("ac"), replay.get("auto")
+    if ac_r is None or auto_r is None:
+        failures.append("artifact replay section missing ac/auto modes")
+    else:
+        for mode, r in (("ac", ac_r), ("auto", auto_r)):
+            if r["completed"] != r["requests"]:
+                failures.append(
+                    f"[replay/{mode}] completed={r['completed']} != "
+                    f"requests={r['requests']} (trace not fully served)")
+        if auto_r["slo_missed"] > ac_r["slo_missed"]:
+            failures.append(
+                f"[replay] adaptive selection missed more SLOs than "
+                f"always-AC: auto={auto_r['slo_missed']} > "
+                f"ac={ac_r['slo_missed']} "
+                f"(of {ac_r['requests']} requests)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifact", help="fresh BENCH_precond.json")
+    ap.add_argument("baseline",
+                    help="committed benchmarks/baselines/BENCH_precond.json")
+    ap.add_argument("--max-iter-ratio", type=float, default=1.5,
+                    help="AC iterations may grow to at most this ratio "
+                         "of the baseline per graph")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="copy the fresh artifact over the baseline "
+                         "instead of gating (intentional refresh)")
+    args = ap.parse_args()
+
+    with open(args.artifact) as fh:
+        artifact = json.load(fh)
+    if args.write_baseline:
+        shutil.copyfile(args.artifact, args.baseline)
+        print(f"baseline refreshed: {args.baseline}")
+        return 0
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+
+    failures = check(artifact, baseline,
+                     max_iter_ratio=args.max_iter_ratio)
+    if failures:
+        print(f"PRECOND GATE FAILED ({len(failures)}):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    rep = artifact["replay"]
+    print(f"precond gate OK: {len(artifact['families'])} graphs x "
+          f"{len(next(iter(artifact['families'].values())))} families "
+          f"converged; replay auto={rep['auto']['slo_missed']} <= "
+          f"ac={rep['ac']['slo_missed']} SLO misses")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+"""Check that every intra-repo link in the markdown docs resolves.
+
+    python scripts/check_doc_links.py [README.md docs/*.md ...]
+
+With no arguments, checks ``README.md``, ``ROADMAP.md`` and every
+``.md`` under ``docs/``.  External links (``http(s)://``, ``mailto:``)
+are ignored; relative links are resolved against the linking file's
+directory and must point at an existing file (anchors are stripped —
+``foo.md#section`` checks ``foo.md``).  Exit code 1 lists every broken
+link.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def broken_links(path: pathlib.Path, root: pathlib.Path) -> list:
+    bad = []
+    text = path.read_text(encoding="utf-8")
+    for m in LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(EXTERNAL) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            line = text[:m.start()].count("\n") + 1
+            bad.append((f"{path.relative_to(root)}:{line}", target))
+    return bad
+
+
+def main(argv: list) -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    if argv:
+        files = [pathlib.Path(a).resolve() for a in argv]
+    else:
+        files = [root / "README.md", root / "ROADMAP.md"]
+        files += sorted((root / "docs").glob("**/*.md"))
+    files = [f for f in files if f.exists()]
+    bad = []
+    for f in files:
+        bad.extend(broken_links(f, root))
+    if bad:
+        print(f"BROKEN DOC LINKS ({len(bad)}):")
+        for where, target in bad:
+            print(f"  {where}: {target}")
+        return 1
+    print(f"doc links OK: {len(files)} files checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

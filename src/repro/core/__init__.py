@@ -10,5 +10,7 @@ from .pcg import (pcg_jax, pcg_jax_batched, pcg_np,                  # noqa: F40
                   laplacian_pcg_jax, laplacian_pcg_jax_batched,
                   laplacian_pcg_np)
 from .solver import (Solver, FactorCache, FactorHandle,              # noqa: F401
-                     FactorFleet)
+                     PreconditionerHandle, FactorFleet,
+                     PrecondFamily, PRECOND_FAMILIES,
+                     register_family, get_family)
 from .ordering import ORDERINGS                                      # noqa: F401

@@ -13,14 +13,17 @@ from typing import Callable, List
 import numpy as np
 import scipy.sparse as sp
 
-from .laplacian import Graph
+from .laplacian import Graph, grounded_laplacian_coo
+from .spai import EllPrecond, dense_to_ell
 
 
 def _laplacian_csr(g: Graph) -> sp.csr_matrix:
-    i = np.concatenate([g.src, g.dst, np.arange(g.n)])
-    j = np.concatenate([g.dst, g.src, np.arange(g.n)])
-    wd = g.weighted_degrees()
-    v = np.concatenate([-g.w, -g.w, wd + 1e-12 * (wd.max() or 1.0)])
+    # grounding shared with ichol (an absolute 1e-12 diagonal epsilon):
+    # the previous amg-local variant scaled the epsilon by
+    # ``wd.max() or 1.0``, an ``or`` over a numpy float whose truthiness
+    # silently rewrote a 0.0 maximum — and meant the two baselines
+    # factored *different* operators.  Both now ground identically.
+    i, j, v = grounded_laplacian_coo(g)
     return sp.coo_matrix((v, (i, j)), shape=(g.n, g.n)).tocsr()
 
 
@@ -103,3 +106,55 @@ def smoothed_aggregation_preconditioner(g: Graph) -> Callable:
         return _jacobi(L["A"], L["Dinv"], x, b)
 
     return lambda r: cycle(0, np.asarray(r, np.float64))
+
+
+def amg_ell_precond(g: Graph, *, droptol: float = 1e-3,
+                    dtype=np.float32) -> EllPrecond:
+    """Flatten the V(1,1)-cycle into a materialized ELL operator.
+
+    The smoothed-aggregation V-cycle is a fixed **linear** operator
+    ``M ≈ L⁺`` (Jacobi smoothing, Galerkin coarse operators and the
+    coarse pseudo-inverse are all linear, and the hierarchy is frozen at
+    construction), so applying it to the ``n`` basis vectors
+    materializes it exactly.  The dense result is symmetrized (the
+    V(1,1) cycle with matched pre/post smoothing is symmetric up to
+    roundoff) and packed into ELL rows, turning every serving-side apply
+    into a single lane-batched SpMV — the same fleet kernel the SPAI
+    family rides — instead of a host V-cycle per iteration.
+
+    Materialization costs ``n`` cycle applies and densifies rows, so
+    this is for serving-scale graphs (the suites this repo benches);
+    ``docs/preconditioners.md`` documents the restriction.
+
+    Args:
+        g: graph to precondition.
+        droptol: relative drop threshold on the flattened operator
+            (``1e-3`` trims roundoff-level fill; ``0.0`` keeps the
+            cycle exactly).
+        dtype: value dtype of the packed rows.
+
+    Returns:
+        The packed :class:`~repro.core.spai.EllPrecond` with
+        ``meta["levels"]`` recording the hierarchy depth.
+    """
+    cycle = smoothed_aggregation_preconditioner(g)
+    n = g.n
+    M = np.empty((n, n), np.float64)
+    e = np.zeros(n, np.float64)
+    for j in range(n):
+        e[j] = 1.0
+        M[:, j] = cycle(e)
+        e[j] = 0.0
+    M = 0.5 * (M + M.T)
+    # Deflate the constant mode: the cycle approximates the inverse of
+    # the *grounded* Laplacian, whose 1e-12 epsilon makes it amplify
+    # span(1) by ~1e12 — harmless to the float64 host PCG (projection
+    # kills it to roundoff) but catastrophic in the float32 fleet apply,
+    # and it would dominate the relative droptol.  Serving PCG iterates
+    # mean-zero, so ``P M P`` (P = I - 11ᵀ/n) is the operator that
+    # actually acts — SPD on the mean-zero subspace.
+    M = M - M.mean(axis=1, keepdims=True) - M.mean(axis=0, keepdims=True) \
+        + M.mean()
+    out = dense_to_ell(M, droptol=droptol, dtype=dtype)
+    out.meta.update(family="amg")
+    return out

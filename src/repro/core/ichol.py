@@ -19,14 +19,11 @@ from typing import Callable, Tuple
 import numpy as np
 import scipy.sparse as sp
 
-from .laplacian import Graph
+from .laplacian import Graph, grounded_laplacian_coo
 
 
 def _laplacian_csc(g: Graph, shift: float) -> sp.csc_matrix:
-    i = np.concatenate([g.src, g.dst, np.arange(g.n)])
-    j = np.concatenate([g.dst, g.src, np.arange(g.n)])
-    wd = g.weighted_degrees()
-    v = np.concatenate([-g.w, -g.w, wd * (1.0 + shift) + 1e-12])
+    i, j, v = grounded_laplacian_coo(g, shift)
     return sp.coo_matrix((v, (i, j)), shape=(g.n, g.n)).tocsc()
 
 
@@ -101,6 +98,61 @@ def ichol(g: Graph, droptol: float = 0.0, max_shift_tries: int = 8) -> ICholFact
         except FloatingPointError:
             shift = max(2 * shift, 1e-3)
     raise RuntimeError("ichol breakdown even with diagonal shift")
+
+
+def ichol_device_factor(g: Graph, droptol: float = 0.0,
+                        max_shift_tries: int = 8, dtype=np.float32):
+    """Incomplete Cholesky re-expressed as the fleet's ``(G, D)`` form.
+
+    ``L_ic L_icᵀ = G D Gᵀ`` with ``G = L_ic · diag(1/ℓ_kk)`` unit lower
+    triangular and ``D = diag(ℓ_kk²)`` — exactly the shape the
+    randomized AC factor ships in, so an ichol preconditioner rides the
+    same ``DeviceFactor → PackedSchedule → FactorFleet`` admission path
+    and the same masked fleet trisolves as AC, with zero new kernels.
+
+    Args:
+        g: graph whose grounded Laplacian to factor.
+        droptol: threshold-drop tolerance (``0.0`` = IC(0) pattern).
+        max_shift_tries: Manteuffel shift retries on IC breakdown.
+        dtype: device value dtype.
+
+    Returns:
+        A :class:`~repro.core.ref_ac.DeviceFactor` (strict-lower ``G``
+        in CSC plus ``D``) whose implied preconditioner equals
+        ``ichol(g, droptol).apply`` up to dtype rounding.
+
+    Raises:
+        RuntimeError: IC broke down even with the maximum shift.
+    """
+    from .ref_ac import DeviceFactor
+    import jax
+    import jax.numpy as jnp
+
+    ic = ichol(g, droptol=droptol, max_shift_tries=max_shift_tries)
+    L = ic.L.tocsc()
+    n = g.n
+    col_ptr = np.zeros(n + 1, np.int64)
+    rows_l: list = []
+    vals_l: list = []
+    D = np.zeros(n, np.float64)
+    for k in range(n):
+        lo, hi = L.indptr[k], L.indptr[k + 1]
+        idx = L.indices[lo:hi]
+        val = L.data[lo:hi]
+        dpos = np.nonzero(idx == k)[0]
+        lkk = float(val[dpos[0]])
+        D[k] = lkk * lkk
+        off = idx != k
+        rows_l.append(idx[off].astype(np.int32))
+        vals_l.append(val[off] / lkk)
+        col_ptr[k + 1] = col_ptr[k] + int(off.sum())
+    rows = np.concatenate(rows_l) if rows_l else np.zeros(0, np.int32)
+    vals = np.concatenate(vals_l) if vals_l else np.zeros(0, np.float64)
+    with jax.ensure_compile_time_eval():
+        return DeviceFactor(col_ptr=jnp.asarray(col_ptr, jnp.int32),
+                            rows=jnp.asarray(rows, jnp.int32),
+                            vals=jnp.asarray(vals.astype(dtype)),
+                            D=jnp.asarray(D.astype(dtype)))
 
 
 def jacobi_preconditioner(g: Graph) -> Callable:

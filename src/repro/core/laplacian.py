@@ -78,6 +78,35 @@ class Graph:
         return Graph(self.n, lo, hi, self.w.copy())
 
 
+def grounded_laplacian_coo(g: Graph, shift: float = 0.0):
+    """COO triples ``(i, j, v)`` of the grounded (SPD) Laplacian
+    ``L + shift·diag(L) + 1e-12·I`` — the operator every host baseline
+    factors.
+
+    The grounding term is an **absolute** ``1e-12`` on the diagonal
+    (plus the optional Manteuffel-style relative ``shift`` used by the
+    incomplete-Cholesky breakdown retry): one definition shared by
+    ``ichol`` and ``amg`` so both baselines precondition exactly the
+    same matrix.  An earlier ``amg``-local variant scaled the epsilon by
+    ``wd.max() or 1.0``, whose truthiness guard silently misfired on a
+    numpy float equal to 0.0; keeping the guard-free absolute form here
+    removes that class of bug.
+
+    Args:
+        g: graph whose Laplacian to ground.
+        shift: relative diagonal shift (``0.0`` = plain grounding).
+
+    Returns:
+        ``(i, j, v)`` int/float numpy arrays suitable for
+        ``scipy.sparse.coo_matrix((v, (i, j)), shape=(g.n, g.n))``.
+    """
+    i = np.concatenate([g.src, g.dst, np.arange(g.n)])
+    j = np.concatenate([g.dst, g.src, np.arange(g.n)])
+    wd = g.weighted_degrees()
+    v = np.concatenate([-g.w, -g.w, wd * (1.0 + shift) + 1e-12])
+    return i, j, v
+
+
 def laplacian_dense(g: Graph, dtype=np.float64) -> np.ndarray:
     """Dense Laplacian — tests/small benchmarks only."""
     L = np.zeros((g.n, g.n), dtype=dtype)

@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 
 from .laplacian import Graph, laplacian_matvec, laplacian_matvec_np
-from repro.kernels.ops import trisolve_fleet
 
 
 class PCGResult(NamedTuple):
@@ -255,12 +254,33 @@ def fleet_matvec(fa: FleetArrays, fidx: jnp.ndarray,
 
 def fleet_precondition(fa: FleetArrays, fidx: jnp.ndarray, R: jnp.ndarray,
                        *, f_levels: int, b_levels: int,
+                       kind: str = "factor",
                        interpret: bool = True) -> jnp.ndarray:
-    """Per-lane ``(G D Gᵀ)⁺`` apply: forward masked trisolve → D⁻¹ scale
-    → backward masked trisolve, panels gathered per lane.  The level
-    bounds are bucket-wide maxima; lanes whose factor has fewer levels
-    stop selecting rows early (masked no-op), so over-padding the bound
-    never changes a lane's result."""
+    """Per-lane preconditioner apply, dispatched on the **static** apply
+    ``kind`` of the family that owns the fleet:
+
+    * ``"factor"`` — ``(G D Gᵀ)⁺`` apply: forward masked trisolve → D⁻¹
+      scale → backward masked trisolve, panels gathered per lane.  The
+      level bounds are bucket-wide maxima; lanes whose factor has fewer
+      levels stop selecting rows early (masked no-op), so over-padding
+      the bound never changes a lane's result.  Used by the randomized
+      AC factor and the incomplete-Cholesky families.
+    * ``"spmv"`` — ``M r``: one lane-batched ELL SpMV of a materialized
+      approximate inverse whose rows live in the forward-panel slots
+      (``fcols``/``fvals``); the backward panels and ``dinv`` are inert.
+      Used by SPAI and the flattened AMG operator — a single kernel
+      launch per apply instead of ``f_levels + b_levels`` masked sweeps.
+
+    ``kind`` must be static under jit (it selects the traced program).
+    """
+    # deferred: kernels.ops pulls in kernels.ref → repro.core, so a
+    # top-level import here is a cycle whenever kernels.ops loads first
+    from repro.kernels.ops import ell_spmv_fleet, trisolve_fleet
+    if kind == "spmv":
+        return ell_spmv_fleet(fa.fcols[fidx], fa.fvals[fidx], R,
+                              interpret=interpret)
+    if kind != "factor":
+        raise ValueError(f"unknown preconditioner apply kind: {kind!r}")
     Y = trisolve_fleet(fa.fcols[fidx], fa.fvals[fidx], fa.flevel[fidx], R,
                        n_levels=f_levels, interpret=interpret)
     Z = Y * fa.dinv[fidx]
@@ -280,12 +300,14 @@ def _fleet_project(Y: jnp.ndarray, nvalid: jnp.ndarray) -> jnp.ndarray:
 
 
 def pcg_fleet_init(fa: FleetArrays, fidx, B, tol, maxiter, *,
-                   f_levels: int, b_levels: int, project: bool = True,
+                   f_levels: int, b_levels: int, kind: str = "factor",
+                   project: bool = True,
                    interpret: bool = True) -> FleetPCGState:
     """Set up the fleet PCG carry for columns ``B`` of shape
     ``(L, n_pad)`` (each zero-padded past its factor's true n).  ``tol``
     and ``maxiter`` are per-lane arrays; lane ``l`` solves against
-    factor ``fidx[l]``."""
+    factor ``fidx[l]``.  ``kind`` is the fleet's static apply kind (see
+    :func:`fleet_precondition`)."""
     fidx = jnp.asarray(fidx, jnp.int32)
     nvalid = fa.nvalid[fidx]
     if project:
@@ -294,7 +316,8 @@ def pcg_fleet_init(fa: FleetArrays, fidx, B, tol, maxiter, *,
     bnorm = jnp.where(bnorm > 0, bnorm, 1.0)
     R0 = B
     Z0 = fleet_precondition(fa, fidx, R0, f_levels=f_levels,
-                            b_levels=b_levels, interpret=interpret)
+                            b_levels=b_levels, kind=kind,
+                            interpret=interpret)
     if project:
         Z0 = _fleet_project(Z0, nvalid)
     rz0 = jnp.sum(R0 * Z0, axis=1)
@@ -308,7 +331,7 @@ def pcg_fleet_init(fa: FleetArrays, fidx, B, tol, maxiter, *,
 
 
 def _pcg_fleet_body(fa: FleetArrays, *, f_levels: int, b_levels: int,
-                    project: bool, interpret: bool):
+                    kind: str = "factor", project: bool, interpret: bool):
     """One frozen-lane fleet PCG iteration as a pure
     ``FleetPCGState -> FleetPCGState`` closure over the **traced** fleet
     arrays — the factor-as-data restatement of ``_pcg_batched_body``.
@@ -324,7 +347,8 @@ def _pcg_fleet_body(fa: FleetArrays, *, f_levels: int, b_levels: int,
         Xn = s.X + alpha[:, None] * s.P
         Rn = s.R - alpha[:, None] * AP
         Zn = fleet_precondition(fa, s.fidx, Rn, f_levels=f_levels,
-                                b_levels=b_levels, interpret=interpret)
+                                b_levels=b_levels, kind=kind,
+                                interpret=interpret)
         if project:
             Zn = _fleet_project(Zn, nvalid)
         rz_new = jnp.sum(Rn * Zn, axis=1)
@@ -348,13 +372,14 @@ def _pcg_fleet_body(fa: FleetArrays, *, f_levels: int, b_levels: int,
 
 
 def pcg_fleet_step(fa: FleetArrays, state: FleetPCGState, *, k: int,
-                   f_levels: int, b_levels: int, project: bool = True,
+                   f_levels: int, b_levels: int, kind: str = "factor",
+                   project: bool = True,
                    interpret: bool = True) -> FleetPCGState:
     """Advance every active lane by up to ``k`` iterations (early exit
     when all lanes freeze).  Step slicing is exact, as in
     ``pcg_batched_step``."""
     body = _pcg_fleet_body(fa, f_levels=f_levels, b_levels=b_levels,
-                           project=project, interpret=interpret)
+                           kind=kind, project=project, interpret=interpret)
 
     def cond(c):
         s, j = c
@@ -369,16 +394,17 @@ def pcg_fleet_step(fa: FleetArrays, state: FleetPCGState, *, k: int,
 
 
 def pcg_fleet_solve(fa: FleetArrays, fidx, B, tol, maxiter, *,
-                    f_levels: int, b_levels: int, project: bool = True,
+                    f_levels: int, b_levels: int, kind: str = "factor",
+                    project: bool = True,
                     interpret: bool = True) -> FleetPCGState:
     """One-shot fleet solve: init then iterate until every lane freezes.
     Runs the same body as ``pcg_fleet_step``, so an engine slicing the
     same solve into ticks takes bit-identical per-lane iterates."""
     state = pcg_fleet_init(fa, fidx, B, tol, maxiter, f_levels=f_levels,
-                           b_levels=b_levels, project=project,
+                           b_levels=b_levels, kind=kind, project=project,
                            interpret=interpret)
     body = _pcg_fleet_body(fa, f_levels=f_levels, b_levels=b_levels,
-                           project=project, interpret=interpret)
+                           kind=kind, project=project, interpret=interpret)
     return jax.lax.while_loop(lambda s: jnp.any(s.active), body, state)
 
 

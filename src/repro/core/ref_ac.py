@@ -45,6 +45,12 @@ class DeviceFactor(NamedTuple):
     def nnz(self) -> int:
         return int(self.rows.shape[0])
 
+    def to_device(self) -> "DeviceFactor":
+        """Already device-resident — lets a bare ``DeviceFactor`` stand
+        in wherever an ``ACFactor``-style payload is expected (e.g. the
+        ichol family's cache attach path)."""
+        return self
+
 
 @dataclasses.dataclass
 class ACFactor:

@@ -50,6 +50,9 @@ from .laplacian import Graph
 from .ref_ac import ACFactor, DeviceFactor
 from .parac import factorize_wavefront, factorize_batched, _next_pow2
 from .trisolve import PackedSchedule, build_schedules_batched, _pad_dev
+from .ichol import ichol_device_factor
+from .amg import amg_ell_precond
+from .spai import EllPrecond, spai_ell_precond
 from .pcg import (PCGResult, FleetArrays, fleet_matvec,
                   fleet_precondition, pcg_fleet_solve, pcg_fleet_result)
 
@@ -57,10 +60,26 @@ from .pcg import (PCGResult, FleetArrays, fleet_matvec,
 _UNSET = object()
 
 
-def graph_fingerprint(g: Graph, key: Optional[jax.Array] = None) -> str:
-    """Content hash of a graph (and optionally the factorization key) —
-    the cache identity of a factor.  Two structurally identical systems
-    share a fingerprint, so resubmitting a known graph is a cache hit."""
+def graph_fingerprint(g: Graph, key: Optional[jax.Array] = None, *,
+                      family: str = "ac",
+                      params: Optional[Dict] = None) -> str:
+    """Content hash of a graph (and optionally the factorization key,
+    preconditioner family and construction params) — the cache identity
+    of a preconditioner.  Two structurally identical systems built the
+    same way share a fingerprint, so resubmitting a known graph is a
+    cache hit; the same graph under two families (or two droptols) gets
+    two distinct fingerprints and two cache rows.
+
+    Args:
+        g: the graph.
+        key: factorization PRNG key (randomized families only).
+        family: preconditioner family name (``"ac"`` leaves the hash
+            identical to the historical graph-only fingerprint).
+        params: family construction parameters (hashed by sorted repr).
+
+    Returns:
+        Hex digest string.
+    """
     h = hashlib.blake2b(digest_size=12)
     h.update(np.int64(g.n).tobytes())
     h.update(np.ascontiguousarray(g.src).tobytes())
@@ -68,7 +87,94 @@ def graph_fingerprint(g: Graph, key: Optional[jax.Array] = None) -> str:
     h.update(np.ascontiguousarray(g.w).tobytes())
     if key is not None:
         h.update(np.ascontiguousarray(jax.random.key_data(key)).tobytes())
+    if family != "ac" or params:
+        h.update(family.encode())
+        h.update(repr(sorted((params or {}).items())).encode())
     return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Preconditioner family registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PrecondFamily:
+    """One registered preconditioner family.
+
+    ``kind`` selects the fleet's **static** apply program (see
+    ``pcg.fleet_precondition``): ``"factor"`` families ship a
+    ``(G, D)`` triangular factor and apply via two masked fleet
+    trisolves; ``"spmv"`` families ship a materialized approximate
+    inverse in ELL rows and apply via one lane-batched SpMV.  ``build``
+    constructs the host/device payload: ``build(g, key, dtype=...,
+    **params)`` returning either an ``ACFactor``/``DeviceFactor``
+    (factor kind) or an :class:`~repro.core.spai.EllPrecond` (spmv
+    kind)."""
+
+    name: str
+    kind: str
+    build: Callable
+
+
+PRECOND_FAMILIES: Dict[str, PrecondFamily] = {}
+
+
+def register_family(name: str, kind: str, build: Callable) -> PrecondFamily:
+    """Register (or replace) a preconditioner family.
+
+    Args:
+        name: family name (``FactorCache.factor(..., family=name)``).
+        kind: ``"factor"`` or ``"spmv"``.
+        build: constructor ``(g, key, *, dtype, **params) -> payload``.
+
+    Returns:
+        The registered :class:`PrecondFamily`.
+
+    Raises:
+        ValueError: unknown ``kind``.
+    """
+    if kind not in ("factor", "spmv"):
+        raise ValueError(f"unknown apply kind {kind!r}")
+    fam = PrecondFamily(name=name, kind=kind, build=build)
+    PRECOND_FAMILIES[name] = fam
+    return fam
+
+
+def get_family(name: str) -> PrecondFamily:
+    """Look up a registered family.
+
+    Raises:
+        KeyError: no family registered under ``name``.
+    """
+    fam = PRECOND_FAMILIES.get(name)
+    if fam is None:
+        raise KeyError(f"unknown preconditioner family {name!r} "
+                       f"(registered: {sorted(PRECOND_FAMILIES)})")
+    return fam
+
+
+register_family(
+    "ac", "factor",
+    # the randomized AC construction is special-cased in
+    # ``FactorCache.factor`` (it alone batches through
+    # ``factorize_batched``); this builder is the single-graph path
+    lambda g, key, *, dtype=np.float32, chunk=64, fill_slack=32,
+    strict=True, max_retries=3: factorize_wavefront(
+        g, key, chunk=chunk, fill_slack=fill_slack, strict=strict,
+        max_retries=max_retries, dtype=dtype))
+register_family(
+    "ichol", "factor",
+    lambda g, key, *, dtype=np.float32, droptol=0.0, max_shift_tries=8:
+    ichol_device_factor(g, droptol=droptol,
+                        max_shift_tries=max_shift_tries, dtype=dtype))
+register_family(
+    "amg", "spmv",
+    lambda g, key, *, dtype=np.float32, droptol=1e-3:
+    amg_ell_precond(g, droptol=droptol, dtype=dtype))
+register_family(
+    "spai", "spmv",
+    lambda g, key, *, dtype=np.float32, droptol=0.0:
+    spai_ell_precond(g, droptol=droptol, dtype=dtype))
 
 
 def _pad1(x: jnp.ndarray, size: int) -> jnp.ndarray:
@@ -85,9 +191,14 @@ def _grow(x: jnp.ndarray, shape: Tuple[int, ...]) -> jnp.ndarray:
 
 
 class _PaddedFactor:
-    """One factor's bucket-padded device arrays, ready for fleet
+    """One preconditioner's bucket-padded device arrays, ready for fleet
     admission: padded Laplacian edge lists, forward/backward
-    :class:`PackedSchedule` panels and the padded inverse diagonal."""
+    :class:`PackedSchedule` panels and the padded inverse diagonal.
+
+    ``"spmv"``-kind members reuse the same container: the approximate
+    inverse's ELL rows ride in the *forward* panel slots (level 0
+    everywhere — the SpMV apply never runs the level loop), the
+    backward panels are inert 1-wide zeros and ``dinv`` is zero."""
 
     __slots__ = ("n", "n_pad", "src", "dst", "w", "fwd", "bwd", "dinv")
 
@@ -106,11 +217,38 @@ class _PaddedFactor:
         self.fwd = fwd
         self.bwd = bwd
 
+    @classmethod
+    def from_ell(cls, g: Graph, op: EllPrecond) -> "_PaddedFactor":
+        """Build the fleet-admissible view of a materialized approximate
+        inverse: the ELL rows become a 1-level forward panel (padding
+        rows/slots carry zero values, so they contribute exactly zero to
+        the lane-batched SpMV)."""
+        n_pad = max(_next_pow2(g.n), 1)
+        with jax.ensure_compile_time_eval():
+            cols = _grow(jnp.asarray(op.cols, jnp.int32), (n_pad, op.K))
+            vals = _grow(jnp.asarray(op.vals), (n_pad, op.K))
+            zeros_n = jnp.zeros((n_pad,), jnp.int32)
+            fwd = PackedSchedule(n=g.n, n_pad=n_pad, n_levels=1, K=op.K,
+                                 cols=cols, vals=vals, level_of=zeros_n)
+            bwd = PackedSchedule(
+                n=g.n, n_pad=n_pad, n_levels=1, K=1,
+                cols=jnp.zeros((n_pad, 1), jnp.int32),
+                vals=jnp.zeros((n_pad, 1), vals.dtype),
+                level_of=zeros_n)
+            dev = DeviceFactor(col_ptr=jnp.zeros((g.n + 1,), jnp.int32),
+                               rows=jnp.zeros((0,), jnp.int32),
+                               vals=jnp.zeros((0,), vals.dtype),
+                               D=jnp.zeros((g.n,), vals.dtype))
+        return cls(g, dev, fwd, bwd)
+
 
 class FactorFleet:
-    """Stacked, bucket-padded device factors for one shape bucket
-    (``n_pad = pow2(n)``), plus the row bookkeeping that lets handles
-    come and go.
+    """Stacked, bucket-padded device preconditioners for one
+    ``(family, shape-bucket)`` (``n_pad = pow2(n)``), plus the row
+    bookkeeping that lets handles come and go.  ``kind`` is the fleet's
+    static apply program (``"factor"`` trisolves / ``"spmv"``); a fleet
+    never mixes kinds, so every member shares one compiled step
+    program.
 
     ``arrays`` is the live :class:`pcg.FleetArrays` stack — the traced
     factor argument of every fleet PCG program.  Rows are claimed by
@@ -124,8 +262,11 @@ class FactorFleet:
     members' solves are unchanged.
     """
 
-    def __init__(self, n_pad: int):
+    def __init__(self, n_pad: int, family: str = "ac",
+                 kind: str = "factor"):
         self.n_pad = n_pad
+        self.family = family
+        self.kind = kind
         self.m_pad = 1
         self.Kf = 1
         self.Kb = 1
@@ -275,21 +416,29 @@ class FactorFleet:
 
 
 @dataclasses.dataclass(eq=False)
-class FactorHandle:
-    """A factored graph ready to serve solves.  The hot-path data lives
-    in the handle's shape-bucket :class:`FactorFleet` (``fleet`` +
-    ``fleet_row``) as stacked, bucket-padded device arrays; solves pass
-    them as traced arguments to the shared fleet PCG programs, so two
-    handles in one bucket share compiled code.  Jitted solve closures
-    are cached per rhs-batch shape in a bounded LRU."""
+class PreconditionerHandle:
+    """A constructed preconditioner ready to serve solves — the one
+    interface every family (randomized AC, ichol, AMG, SPAI) presents
+    to the cache, the engine and direct callers: construct (via
+    ``FactorCache.factor``) → apply (``precondition``/``solve``) →
+    ``device_bytes`` → staleness (``ttl_s``/``max_age_ticks``).
+
+    The hot-path data lives in the handle's ``(family, shape-bucket)``
+    :class:`FactorFleet` (``fleet`` + ``fleet_row``) as stacked,
+    bucket-padded device arrays; solves pass them as traced arguments to
+    the shared fleet PCG programs (with the fleet's static apply
+    ``kind``), so two handles in one fleet share compiled code.  Jitted
+    solve closures are cached per rhs-batch shape in a bounded LRU."""
 
     graph: Graph
-    factor: ACFactor
-    fleet: FactorFleet
+    factor: object          # family payload: ACFactor | DeviceFactor
+    fleet: FactorFleet      # | EllPrecond
     fleet_row: int
     n_levels_fwd: int
     n_levels_bwd: int
     graph_id: str = ""
+    family: str = "ac"
+    construct_s: float = 0.0   # wall-clock construction cost (seconds)
     max_cached_solves: int = 16
     born_s: float = 0.0
     born_tick: int = 0
@@ -307,19 +456,32 @@ class FactorHandle:
         return self.fleet.n_pad
 
     @property
+    def kind(self) -> str:
+        """The fleet's static apply kind (``"factor"`` | ``"spmv"``)."""
+        return self.fleet.kind
+
+    @property
     def n_levels(self) -> int:
         """Forward critical-path length (levels) — the §6.2 figure of
-        merit surfaced by benchmarks."""
+        merit surfaced by benchmarks (1 for ``"spmv"`` families: their
+        apply is level-free)."""
         return self.n_levels_fwd
 
     @property
     def device_bytes(self) -> int:
         """Device-memory footprint the :class:`FactorCache` budget
         accounts: the handle's row of the fleet stack (padded edges,
-        both panel sets, D⁻¹) plus the compact device factor."""
-        dev = self.factor.to_device()
-        own = sum(int(a.nbytes)
-                  for a in (dev.col_ptr, dev.rows, dev.vals, dev.D))
+        both panel sets, D⁻¹) plus the family payload's own device
+        residency (the compact device factor for factor kinds; spmv
+        payloads are host-side, their device copy *is* the fleet
+        row)."""
+        f = self.factor
+        if isinstance(f, (ACFactor, DeviceFactor)):
+            dev = f.to_device()
+            own = sum(int(a.nbytes)
+                      for a in (dev.col_ptr, dev.rows, dev.vals, dev.D))
+        else:
+            own = 0
         return own + self.fleet.bytes_per_row
 
     def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
@@ -333,20 +495,22 @@ class FactorHandle:
         return jnp.full((L,), self.fleet_row, jnp.int32)
 
     def precondition(self, r: jnp.ndarray) -> jnp.ndarray:
-        """``r -> (G D Gᵀ)⁺ r`` for ``r`` of shape ``(n,)`` or
-        ``(n, nrhs)`` — the masked fleet trisolve applied through this
-        handle's fleet row (columns become lanes)."""
+        """Apply this preconditioner: ``r -> (G D Gᵀ)⁺ r`` for factor
+        kinds, ``r -> M r`` for spmv kinds, for ``r`` of shape ``(n,)``
+        or ``(n, nrhs)`` — the fleet apply routed through this handle's
+        fleet row (columns become lanes)."""
         fa = self.fleet.arrays
         fl, bl = self.fleet.f_levels, self.fleet.b_levels
+        kind = self.fleet.kind
         n, n_pad = self.n, self.n_pad
         if r.ndim == 1:
             R = jnp.zeros((1, n_pad), r.dtype).at[0, :n].set(r)
             out = fleet_precondition(fa, self._fidx(1), R,
-                                     f_levels=fl, b_levels=bl)
+                                     f_levels=fl, b_levels=bl, kind=kind)
             return out[0, :n]
         R = jnp.zeros((r.shape[1], n_pad), r.dtype).at[:, :n].set(r.T)
         out = fleet_precondition(fa, self._fidx(r.shape[1]), R,
-                                 f_levels=fl, b_levels=bl)
+                                 f_levels=fl, b_levels=bl, kind=kind)
         return out[:, :n].T
 
     def solve(self, B, *, tol: float = 1e-6, maxiter: int = 1000,
@@ -362,12 +526,13 @@ class FactorHandle:
                 f"rhs must be (n,) or (nrhs, n) with n={self.n}, "
                 f"got {B.shape}")
         fl, bl = self.fleet.f_levels, self.fleet.b_levels
+        kind = self.fleet.kind
         key = (B.shape, str(B.dtype), float(tol), int(maxiter), project,
-               fl, bl)
+               fl, bl, kind)
         fn = self._cache.get(key)
         if fn is None:
             fn = jax.jit(self._build_solve(B.ndim, tol, maxiter, project,
-                                           fl, bl))
+                                           fl, bl, kind))
             self._cache[key] = fn
             while len(self._cache) > self.max_cached_solves:
                 self._cache.popitem(last=False)
@@ -376,7 +541,8 @@ class FactorHandle:
         return fn(B, self.fleet.arrays)
 
     def _build_solve(self, ndim: int, tol: float, maxiter: int,
-                     project: bool, f_levels: int, b_levels: int):
+                     project: bool, f_levels: int, b_levels: int,
+                     kind: str = "factor"):
         n, n_pad, row = self.n, self.n_pad, self.fleet_row
 
         def run(B, fa):
@@ -387,7 +553,8 @@ class FactorHandle:
                 fa, jnp.full((L,), row, jnp.int32), Bp,
                 jnp.full((L,), tol, jnp.float32),
                 jnp.full((L,), maxiter, jnp.int32),
-                f_levels=f_levels, b_levels=b_levels, project=project)
+                f_levels=f_levels, b_levels=b_levels, kind=kind,
+                project=project)
             res = pcg_fleet_result(state, n)
             if ndim == 1:
                 return PCGResult(x=res.x[0], iters=res.iters[0],
@@ -396,6 +563,12 @@ class FactorHandle:
             return res
 
         return run
+
+
+# Historical name: every pre-zoo call site (and the serving engine's
+# type hints) used ``FactorHandle``; the interface is unchanged for the
+# AC family, so the alias is permanent API.
+FactorHandle = PreconditionerHandle
 
 
 class FactorCache:
@@ -441,8 +614,12 @@ class FactorCache:
         # with a staleness policy — lets sweep_stale() stay O(1) on the
         # per-submit hot path of services that never use TTLs
         self._has_mortal = False
-        self._handles: "OrderedDict[str, FactorHandle]" = OrderedDict()
-        self._fleets: Dict[int, FactorFleet] = {}
+        self._handles: "OrderedDict[str, PreconditionerHandle]" = \
+            OrderedDict()
+        # family-heterogeneous: one fleet per (family, shape bucket) —
+        # families never share a stack, so each keeps its own compiled
+        # step program and its own per-row memory accounting
+        self._fleets: Dict[Tuple[str, int], FactorFleet] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -493,12 +670,38 @@ class FactorCache:
 
     # -- admission ----------------------------------------------------------
     def factor(self, g: Graph, key: jax.Array, *,
-               graph_id: Optional[str] = None, ttl_s=_UNSET,
-               max_age_ticks=_UNSET) -> FactorHandle:
-        """Factor ``g`` (cache hit if an identical ``(graph, key)`` is
-        already live and fresh) and admit the handle."""
+               graph_id: Optional[str] = None, family: str = "ac",
+               precond_params: Optional[Dict] = None, ttl_s=_UNSET,
+               max_age_ticks=_UNSET) -> PreconditionerHandle:
+        """Construct a preconditioner for ``g`` and admit the handle
+        (cache hit if an identical ``(graph, key, family, params)`` is
+        already live and fresh).
+
+        Args:
+            g: graph to precondition.
+            key: factorization PRNG key (ignored by deterministic
+                families — ichol/amg/spai — but still part of the
+                default fingerprint only for ``family="ac"``).
+            graph_id: explicit cache key (defaults to the content
+                fingerprint including family and params).
+            family: registered preconditioner family
+                (``"ac"``/``"ichol"``/``"amg"``/``"spai"``).
+            precond_params: family construction parameters (e.g.
+                ``{"droptol": 0.02}`` for icholt).
+            ttl_s / max_age_ticks: staleness policy overrides.
+
+        Returns:
+            The admitted (or refreshed) :class:`PreconditionerHandle`.
+
+        Raises:
+            KeyError: ``family`` is not registered.
+        """
         self.sweep_stale()
-        gid = graph_id if graph_id is not None else graph_fingerprint(g, key)
+        fam = get_family(family)
+        params = dict(precond_params or {})
+        gid = graph_id if graph_id is not None else graph_fingerprint(
+            g, key if family == "ac" else None, family=family,
+            params=params)
         got = self._handles.get(gid)
         if got is not None:
             self.hits += 1
@@ -506,12 +709,18 @@ class FactorCache:
             self._refresh_policy(got, ttl_s, max_age_ticks)
             return got
         self.misses += 1
-        f = factorize_wavefront(
-            g, key, chunk=self.chunk, fill_slack=self.fill_slack,
-            strict=self.strict, max_retries=self.max_retries,
-            dtype=self.dtype)
-        return self.attach(g, f, graph_id=gid, ttl_s=ttl_s,
-                           max_age_ticks=max_age_ticks)
+        t0 = time.perf_counter()
+        if family == "ac":
+            f = factorize_wavefront(
+                g, key, chunk=self.chunk, fill_slack=self.fill_slack,
+                strict=self.strict, max_retries=self.max_retries,
+                dtype=self.dtype, **params)
+        else:
+            f = fam.build(g, key, dtype=self.dtype, **params)
+        handle = self.attach(g, f, graph_id=gid, family=family,
+                             ttl_s=ttl_s, max_age_ticks=max_age_ticks)
+        handle.construct_s = time.perf_counter() - t0
+        return handle
 
     def factor_batched(self, gs: Sequence[Graph], keys, *,
                        graph_ids: Optional[Sequence[str]] = None,
@@ -543,7 +752,7 @@ class FactorCache:
                 strict=self.strict, max_retries=self.max_retries,
                 dtype=self.dtype, with_schedules=True)
             admitted = self._attach_many(
-                [(gs[i], f, sch, gids[i])
+                [(gs[i], f, sch, gids[i], "ac")
                  for i, f, sch in zip(todo, fs, scheds)],
                 ttl_s=ttl_s, max_age_ticks=max_age_ticks)
             fleet.update(admitted)
@@ -552,59 +761,86 @@ class FactorCache:
                 self._handles.move_to_end(gid)
         return [fleet[gid] for gid in gids]
 
-    def attach(self, g: Graph, f: ACFactor, *,
-               graph_id: Optional[str] = None,
+    def attach(self, g: Graph, f, *,
+               graph_id: Optional[str] = None, family: str = "ac",
                schedules: Optional[Tuple[PackedSchedule,
                                          PackedSchedule]] = None,
-               ttl_s=_UNSET, max_age_ticks=_UNSET) -> FactorHandle:
-        """Wrap an existing factor (e.g. from the sequential oracle) in a
-        solve handle and admit it to its shape-bucket fleet — same
-        lifecycle, no re-factorization.  ``schedules`` short-circuits the
-        per-factor schedule build when a batched one already ran."""
-        gid = graph_id if graph_id is not None else graph_fingerprint(g)
-        (_, handle), = self._attach_many([(g, f, schedules, gid)],
+               ttl_s=_UNSET, max_age_ticks=_UNSET) -> PreconditionerHandle:
+        """Wrap an existing family payload (e.g. a factor from the
+        sequential oracle, or a pre-built ``EllPrecond``) in a solve
+        handle and admit it to its ``(family, shape-bucket)`` fleet —
+        same lifecycle, no re-construction.
+
+        Args:
+            g: the payload's graph.
+            f: family payload (``ACFactor``/``DeviceFactor`` for factor
+                kinds, ``EllPrecond`` for spmv kinds).
+            graph_id: explicit cache key (defaults to the graph+family
+                fingerprint).
+            family: registered family name (selects the fleet kind).
+            schedules: short-circuits the per-factor schedule build
+                when a batched one already ran (factor kinds only).
+            ttl_s / max_age_ticks: staleness policy overrides.
+
+        Returns:
+            The admitted :class:`PreconditionerHandle`.
+        """
+        gid = graph_id if graph_id is not None else graph_fingerprint(
+            g, family=family)
+        (_, handle), = self._attach_many([(g, f, schedules, gid, family)],
                                          ttl_s=ttl_s,
                                          max_age_ticks=max_age_ticks)
         return handle
 
-    def _attach_many(self, items: Sequence[Tuple[Graph, ACFactor,
+    def _attach_many(self, items: Sequence[Tuple[Graph, object,
                                                  Optional[Tuple],
-                                                 str]],
+                                                 str, str]],
                      *, ttl_s=_UNSET, max_age_ticks=_UNSET
-                     ) -> List[Tuple[str, FactorHandle]]:
-        """Admit a batch of ``(graph, factor, schedules|None, gid)``:
-        factors are grouped by shape bucket and each bucket's stack
-        grows **once**, scattering all its new rows in one update
-        (:meth:`FactorFleet.admit_many`) — per-factor ``attach`` in a
-        loop pays O(B²) device copies for B same-bucket admissions.
-        Handles register in ``items`` order (LRU order preserved); the
-        budget sweep runs once at the end."""
-        built: List[Tuple[FactorFleet, FactorHandle, _PaddedFactor,
-                          str]] = []
-        for g, f, schedules, gid in items:
-            dev = f.to_device()
-            if schedules is None:
-                schedules = build_schedules_batched([dev])[0]
-            fwd, bwd = schedules
-            pf = _PaddedFactor(g, dev, fwd, bwd)
-            fleet = self._fleets.get(pf.n_pad)
+                     ) -> List[Tuple[str, PreconditionerHandle]]:
+        """Admit a batch of ``(graph, payload, schedules|None, gid,
+        family)``: members are grouped by ``(family, shape bucket)`` and
+        each fleet's stack grows **once**, scattering all its new rows
+        in one update (:meth:`FactorFleet.admit_many`) — per-factor
+        ``attach`` in a loop pays O(B²) device copies for B same-bucket
+        admissions.  Handles register in ``items`` order (LRU order
+        preserved); the budget sweep runs once at the end."""
+        built: List[Tuple[FactorFleet, PreconditionerHandle,
+                          _PaddedFactor, str]] = []
+        for g, f, schedules, gid, family in items:
+            fam = get_family(family)
+            if fam.kind == "spmv":
+                pf = _PaddedFactor.from_ell(g, f)
+                fwd, bwd = pf.fwd, pf.bwd
+            else:
+                dev = f.to_device()
+                if schedules is None:
+                    schedules = build_schedules_batched([dev])[0]
+                fwd, bwd = schedules
+                pf = _PaddedFactor(g, dev, fwd, bwd)
+            fkey = (family, pf.n_pad)
+            fleet = self._fleets.get(fkey)
             if fleet is None:
-                fleet = self._fleets[pf.n_pad] = FactorFleet(pf.n_pad)
-            handle = FactorHandle(
+                fleet = self._fleets[fkey] = FactorFleet(
+                    pf.n_pad, family=family, kind=fam.kind)
+            handle = PreconditionerHandle(
                 graph=g, factor=f, fleet=fleet, fleet_row=-1,
                 n_levels_fwd=fwd.n_levels, n_levels_bwd=bwd.n_levels,
-                graph_id=gid, max_cached_solves=self.max_cached_solves,
+                graph_id=gid, family=family,
+                max_cached_solves=self.max_cached_solves,
                 born_s=self._clock(), born_tick=self.now_ticks,
                 ttl_s=self.ttl_s if ttl_s is _UNSET else ttl_s,
                 max_age_ticks=(self.max_age_ticks
                                if max_age_ticks is _UNSET
                                else max_age_ticks))
             built.append((fleet, handle, pf, gid))
-        by_fleet: Dict[int, List[Tuple[FactorHandle, _PaddedFactor]]] = {}
+        by_fleet: Dict[Tuple[str, int],
+                       List[Tuple[PreconditionerHandle,
+                                  _PaddedFactor]]] = {}
         for fleet, handle, pf, _ in built:
-            by_fleet.setdefault(fleet.n_pad, []).append((handle, pf))
-        for n_pad, pairs in by_fleet.items():
-            rows = self._fleets[n_pad].admit_many(pairs)
+            by_fleet.setdefault((fleet.family, fleet.n_pad),
+                                []).append((handle, pf))
+        for fkey, pairs in by_fleet.items():
+            rows = self._fleets[fkey].admit_many(pairs)
             for (handle, _), row in zip(pairs, rows):
                 handle.fleet_row = row
         out: List[Tuple[str, FactorHandle]] = []
@@ -693,8 +929,8 @@ class FactorCache:
         return sum(h.device_bytes for h in self._handles.values())
 
     @property
-    def fleets(self) -> Dict[int, FactorFleet]:
-        """Live shape-bucket fleets keyed by ``n_pad`` (read-only view)."""
+    def fleets(self) -> Dict[Tuple[str, int], FactorFleet]:
+        """Live fleets keyed by ``(family, n_pad)`` (read-only view)."""
         return dict(self._fleets)
 
     def evict(self, graph_id: str) -> None:
@@ -704,14 +940,36 @@ class FactorCache:
     def clear(self) -> None:
         self._handles.clear()
 
-    def stats(self) -> Dict[str, int]:
+    def stats(self) -> Dict:
+        """Cache counters plus per-family memory accounting.
+
+        Returns:
+            Dict with hit/miss/eviction counters, total and per-family
+            ``device_bytes`` (``device_bytes_by_family`` /
+            ``handles_by_family``), and the grow-only fleet-stack
+            footprint (``fleet_device_bytes``, also split by family).
+        """
+        by_family_bytes: Dict[str, int] = {}
+        by_family_handles: Dict[str, int] = {}
+        for h in self._handles.values():
+            by_family_bytes[h.family] = \
+                by_family_bytes.get(h.family, 0) + h.device_bytes
+            by_family_handles[h.family] = \
+                by_family_handles.get(h.family, 0) + 1
+        fleet_by_family: Dict[str, int] = {}
+        for (family, _), f in self._fleets.items():
+            fleet_by_family[family] = \
+                fleet_by_family.get(family, 0) + f.device_bytes
         return dict(handles=len(self._handles), hits=self.hits,
                     misses=self.misses, evictions=self.evictions,
                     expirations=self.expirations,
                     fleets=len(self._fleets),
                     device_bytes=self.device_bytes,
                     fleet_device_bytes=sum(f.device_bytes
-                                           for f in self._fleets.values()))
+                                           for f in self._fleets.values()),
+                    handles_by_family=by_family_handles,
+                    device_bytes_by_family=by_family_bytes,
+                    fleet_device_bytes_by_family=fleet_by_family)
 
     def solve(self, graph_id: str, B, **kw) -> PCGResult:
         return self.get(graph_id).solve(B, **kw)

@@ -26,7 +26,8 @@ def build_cluster(*, suite="tiny", replicas=2, routing="affinity",
                   slots=8, iters_per_tick=8, chunk=128, fill_slack=32,
                   policy="fifo", max_skips=None, max_queue=256,
                   overload="reject", replicate_above=None,
-                  rate_window_s=1.0, replica_ttl_s=30.0, seed=0):
+                  rate_window_s=1.0, replica_ttl_s=30.0,
+                  precond="ac", select_epsilon=0.1, seed=0):
     """Stand up the cluster and register (not factor) the suite graphs.
     Returns ``(cluster, sizes)`` with graph ids = suite names."""
     from repro.data import graphs
@@ -42,7 +43,8 @@ def build_cluster(*, suite="tiny", replicas=2, routing="affinity",
         iters_per_tick=iters_per_tick, admission=policy,
         max_skips=max_skips, max_queue=max_queue, overload=overload,
         replicate_above=replicate_above, rate_window_s=rate_window_s,
-        replica_ttl_s=replica_ttl_s, seed=seed,
+        replica_ttl_s=replica_ttl_s, precond=precond,
+        select_epsilon=select_epsilon, seed=seed,
         cache_kw=dict(chunk=chunk, fill_slack=fill_slack, strict=False))
     import jax
     for i, (name, g) in enumerate(built.items()):
@@ -85,7 +87,8 @@ def run_cluster(*, suite="tiny", requests=48, replicas=2,
                 max_nrhs=4, chunk=128, seed=0, skew=None,
                 arrival_rate=None, policy="fifo", max_skips=None,
                 max_queue=256, overload="reject", replicate_above=None,
-                rate_window_s=1.0, replica_ttl_s=30.0):
+                rate_window_s=1.0, replica_ttl_s=30.0,
+                precond="ac", select_epsilon=0.1, deadline_ms=None):
     """Build the cluster, replay one trace, close, return metrics."""
     from repro.launch.serve import make_trace
     cluster, sizes = build_cluster(
@@ -93,18 +96,22 @@ def run_cluster(*, suite="tiny", requests=48, replicas=2,
         iters_per_tick=iters_per_tick, chunk=chunk, policy=policy,
         max_skips=max_skips, max_queue=max_queue, overload=overload,
         replicate_above=replicate_above, rate_window_s=rate_window_s,
-        replica_ttl_s=replica_ttl_s, seed=seed)
+        replica_ttl_s=replica_ttl_s, precond=precond,
+        select_epsilon=select_epsilon, seed=seed)
     gids = list(sizes)
     trace = make_trace(gids, sizes, requests, seed=seed,
                        max_nrhs=min(max_nrhs, slots),
-                       arrival_rate=arrival_rate, skew=skew)
+                       arrival_rate=arrival_rate, skew=skew,
+                       deadline_s=deadline_ms / 1e3 if deadline_ms
+                       else None)
     try:
         metrics, done = replay_trace_cluster(cluster, trace)
     finally:
         cluster.close()
     metrics = dict(suite=suite, graphs=len(gids), replicas=replicas,
                    routing=routing, slots=slots, policy=policy,
-                   skew=skew, arrival_rate=arrival_rate, seed=seed,
+                   precond=precond, skew=skew,
+                   arrival_rate=arrival_rate, seed=seed,
                    **metrics)
     return metrics, done
 
@@ -142,6 +149,15 @@ def main():
     ap.add_argument("--max-queue", type=int, default=256)
     ap.add_argument("--overload", default="reject",
                     choices=["block", "reject"])
+    ap.add_argument("--precond", default="ac",
+                    choices=["ac", "ichol", "amg", "spai", "auto"],
+                    help="preconditioner family requests serve under; "
+                         "'auto' = adaptive per-graph selection")
+    ap.add_argument("--select-epsilon", type=float, default=0.1,
+                    help="exploration probability for --precond auto")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="stamp every request with this SLO budget "
+                         "(the adaptive selector filters on it)")
     ap.add_argument("--json", default=None,
                     help="write metrics (incl. ClusterStats) to JSON")
     args = ap.parse_args()
@@ -154,12 +170,19 @@ def main():
         arrival_rate=args.arrival_rate, policy=args.policy,
         max_skips=args.max_skips, max_queue=args.max_queue,
         overload=args.overload, replicate_above=args.replicate_above,
-        replica_ttl_s=args.replica_ttl_s)
+        replica_ttl_s=args.replica_ttl_s, precond=args.precond,
+        select_epsilon=args.select_epsilon, deadline_ms=args.deadline_ms)
 
     c = metrics["cluster"]
     print(f"suite={metrics['suite']} replicas={metrics['replicas']} "
           f"routing={c['policy']} policy={metrics['policy']} "
-          f"skew={metrics['skew']}")
+          f"precond={metrics['precond']} skew={metrics['skew']}")
+    if c.get("selector"):
+        sel = c["selector"]
+        print(f"selector: picks={sel['picks']} "
+              f"by_family={sel['picks_by_family']} "
+              f"explores={sel['explores']} cold={sel['cold_picks']} "
+              f"deadline_misses={sel['deadline_misses']}")
     print(f"served {metrics['completed']}/{metrics['requests']} requests "
           f"({metrics['rhs_total']} rhs, {metrics['converged']} converged) "
           f"in {metrics['serve_s']:.2f}s; shed={c['shed']}")

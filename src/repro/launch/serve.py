@@ -90,32 +90,59 @@ def make_trace(gids, sizes, n_requests, *, seed=0, max_nrhs=4,
 
 def build_service(*, suite="tiny", slots=8, iters_per_tick=8, chunk=128,
                   fill_slack=32, memory_budget_mb=None, policy="fifo",
-                  max_skips=None):
+                  max_skips=None, precond="ac", precond_params=None):
     """Stand up the service: generate the graph suite, admit the fleet
-    to a :class:`FactorCache` in one batched factorization, wrap it in a
-    :class:`SolveEngine` with the named admission policy.  Returns
-    ``(engine, sizes, factor_s)`` — reuse the engine across trace
-    replays so jitted step programs amortize."""
+    to a :class:`FactorCache`, wrap it in a :class:`SolveEngine` with
+    the named admission policy.  ``precond`` selects the preconditioner
+    family the suite is factored under (``"ac"`` uses the batched
+    fleet factorization; other registered families construct per graph;
+    ``"auto"`` pre-factors the AC fallback and lets the replay factor
+    other families on demand as its selector explores).  Returns
+    ``(engine, sizes, factor_s, registry)`` — ``registry`` maps
+    ``graph_id -> (graph, key)`` so adaptive replays can construct
+    additional families lazily; reuse the engine across trace replays
+    so jitted step programs amortize."""
     import jax
     from repro.data import graphs
     from repro.core.solver import FactorCache
     from repro.serve import SolveEngine, make_policy
 
-    spec = graphs.SUITE_TINY if suite == "tiny" else \
+    spec = graphs.SUITE_MICRO if suite == "micro" else \
+        graphs.SUITE_TINY if suite == "tiny" else \
         {k: graphs.SUITE[k] for k in SMALL_NAMES}
     built = {name: make() for name, make in spec.items()}
+    keys = {name: jax.random.key(i) for i, name in enumerate(built)}
     cache = FactorCache(
         chunk=chunk, fill_slack=fill_slack, strict=False,
         memory_budget_bytes=(memory_budget_mb * (1 << 20)
                              if memory_budget_mb else None))
     t0 = time.perf_counter()
-    cache.factor_batched(list(built.values()),
-                         [jax.random.key(i) for i in range(len(built))],
-                         graph_ids=list(built.keys()))
+    if precond in ("ac", "auto"):
+        cache.factor_batched(list(built.values()),
+                             [keys[name] for name in built],
+                             graph_ids=list(built.keys()))
+        if precond == "auto":
+            # pre-build every other family too: the adaptive replay's
+            # selector then chooses among *resident* factors, so an
+            # exploration pick pays its serve cost, not a mid-trace
+            # construction stall that would punish whatever request
+            # happened to trigger it
+            from repro.core.solver import PRECOND_FAMILIES
+            for fam in sorted(PRECOND_FAMILIES):
+                if fam == "ac":
+                    continue
+                for name, g in built.items():
+                    cache.factor(g, keys[name], graph_id=f"{name}::{fam}",
+                                 family=fam)
+    else:
+        for name, g in built.items():
+            cache.factor(g, keys[name], graph_id=name, family=precond,
+                         precond_params=precond_params)
     t_factor = time.perf_counter() - t0
     eng = SolveEngine(cache, slots=slots, iters_per_tick=iters_per_tick,
                       admission=make_policy(policy, max_skips=max_skips))
-    return eng, {name: g.n for name, g in built.items()}, t_factor
+    registry = {name: (g, keys[name]) for name, g in built.items()}
+    return eng, {name: g.n for name, g in built.items()}, t_factor, registry
 
 
 def trace_metrics(trace, done, t_serve):
@@ -167,6 +194,51 @@ def replay_trace(eng, trace):
     return trace_metrics(trace, done, t_serve), done
 
 
+def replay_trace_auto(eng, trace, *, registry, selector):
+    """Adaptive-family replay: each request's preconditioner family is
+    picked by ``selector`` at submit time (cold graphs fall back to AC),
+    the family's factor is constructed lazily into the engine's cache on
+    first pick (the construction stall is *in* the open-loop clock —
+    exploration pays its real cost), and every retirement is fed back
+    via ``selector.observe``.  Same metrics dict as
+    :func:`replay_trace`."""
+    import numpy as np
+    from collections import deque
+    pending = deque(trace)
+    done = []
+    t0 = time.perf_counter()
+
+    def _observe(r):
+        base, _, fam = r.graph_id.partition("::")
+        missed = r.status == "deadline_missed" or (
+            r.deadline_s is not None and r.latency_s > r.deadline_s)
+        selector.observe(
+            base, fam or "ac", wall_s=r.latency_s,
+            iters=int(np.max(r.iters)) if r.iters is not None else None,
+            ok=r.status == "converged", deadline_ok=not missed)
+
+    while pending or eng.busy:
+        now = time.perf_counter() - t0
+        while pending and pending[0].arrival_s <= now:
+            req = pending.popleft()
+            fam = selector.pick(req.graph_id, deadline_s=req.deadline_s)
+            gid = req.graph_id if fam == "ac" \
+                else f"{req.graph_id}::{fam}"
+            if not eng.cache.fresh(gid):
+                g, key = registry[req.graph_id]
+                eng.cache.factor(g, key, graph_id=gid, family=fam)
+            req.graph_id = gid
+            eng.submit(req)
+        if eng.busy:
+            for r in eng.tick():
+                _observe(r)
+                done.append(r)
+        elif pending:
+            time.sleep(min(pending[0].arrival_s - now, 0.01))
+    t_serve = time.perf_counter() - t0
+    return trace_metrics(trace, done, t_serve), done
+
+
 def replay_trace_async(frontend, trace):
     """Open-loop replay through the async frontend: the caller thread
     only *submits* (at each request's ``arrival_s``); the frontend's
@@ -197,30 +269,75 @@ def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
                 memory_budget_mb=None, warmup_requests=0,
                 arrival_rate=None, policy="fifo", max_skips=None,
                 deadline_ms=None, use_async=False, max_queue=256,
-                overload="block", return_engine=False):
+                overload="block", precond="ac", precond_params=None,
+                select_epsilon=0.2, skew=None, return_engine=False):
     """Build the service, replay a trace, return a metrics dict.  With
     ``warmup_requests`` > 0 a throwaway trace is replayed first through
     the *same* engine so the measured replay excludes jit compiles.
     ``use_async`` routes the replay through :class:`SolveFrontend`
-    (background driver thread, futures, bounded ingress queue)."""
-    eng, sizes, t_factor = build_service(
+    (background driver thread, futures, bounded ingress queue).
+    ``precond`` fixes the serving preconditioner family, or ``"auto"``
+    replays through an :class:`~repro.serve.AdaptiveSelector` (sync
+    replay only); ``skew`` makes the trace Zipf-hot."""
+    if precond == "auto" and use_async:
+        raise ValueError("--precond auto uses the sync replay loop "
+                         "(selector feedback rides eng.tick retirement)")
+    eng, sizes, t_factor, registry = build_service(
         suite=suite, slots=slots, iters_per_tick=iters_per_tick,
         chunk=chunk, fill_slack=fill_slack,
         memory_budget_mb=memory_budget_mb, policy=policy,
-        max_skips=max_skips)
+        max_skips=max_skips, precond=precond,
+        precond_params=precond_params)
     gids = list(sizes)
     deadline_s = deadline_ms / 1e3 if deadline_ms else None
+    selector = None
+    if precond == "auto":
+        from repro.serve import AdaptiveSelector
+        selector = AdaptiveSelector(seed=seed, epsilon=select_epsilon)
     if warmup_requests:
         # same seed: the warmup trace is a prefix-identical replay (sans
         # arrival gaps), so every admission shape and bucket step program
         # of the measured trace is already compiled.  No deadlines: a
         # slow compile tick must not evict warmup lanes.
-        replay_trace(eng, make_trace(gids, sizes, warmup_requests,
-                                     seed=seed,
-                                     max_nrhs=min(max_nrhs, slots)))
+        if selector is not None:
+            # compile pass first, *outside* the selector: serve every
+            # family on every graph at every pow2 admission width the
+            # trace can produce, so each (family, bucket) step program
+            # *and* admit scatter shape is built before the selector
+            # ever times a family — otherwise first-serve compiles
+            # masquerade as the family being expensive and poison the
+            # bandit's estimates
+            import numpy as np
+            from repro.core.parac import _next_pow2
+            from repro.serve import SolveRequest
+            wrng = np.random.default_rng(seed + 1)
+            widths = sorted({_next_pow2(j)
+                             for j in range(1, min(max_nrhs, slots) + 1)})
+            fam_trace = []
+            for name in gids:
+                for fam in ("ac", "ichol", "amg", "spai"):
+                    for j in widths:
+                        wb = wrng.normal(
+                            size=(j, sizes[name])).astype(np.float32)
+                        wb -= wb.mean(axis=1, keepdims=True)
+                        fam_trace.append(SolveRequest(
+                            rid=-1 - len(fam_trace),
+                            graph_id=(name if fam == "ac"
+                                      else f"{name}::{fam}"),
+                            b=wb if j > 1 else wb[0],
+                            tol=1e-6, maxiter=500))
+            replay_trace(eng, fam_trace)
+        warm = make_trace(gids, sizes, warmup_requests, seed=seed,
+                          max_nrhs=min(max_nrhs, slots), skew=skew)
+        if selector is not None:
+            replay_trace_auto(eng, warm, registry=registry,
+                              selector=selector)
+        else:
+            replay_trace(eng, warm)
     trace = make_trace(gids, sizes, requests, seed=seed,
                        max_nrhs=min(max_nrhs, slots),
-                       arrival_rate=arrival_rate, deadline_s=deadline_s)
+                       arrival_rate=arrival_rate, deadline_s=deadline_s,
+                       skew=skew)
     ticks_before = eng.ticks                 # exclude warmup from metrics
     frontend_stats = None
     if use_async:
@@ -234,6 +351,9 @@ def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
                                   failed=fs.failed, rejected=fs.rejected,
                                   queue_peak=fs.queue_peak,
                                   max_queue=fs.max_queue)
+    elif selector is not None:
+        metrics, done = replay_trace_auto(eng, trace, registry=registry,
+                                          selector=selector)
     else:
         metrics, done = replay_trace(eng, trace)
     ticks = eng.ticks - ticks_before
@@ -244,6 +364,9 @@ def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
                                 if metrics["serve_s"] > 0 else 0.0),
                    arrival_rate=arrival_rate, seed=seed,
                    policy=policy, mode="async" if use_async else "sync",
+                   precond=precond,
+                   selector=(selector.stats() if selector is not None
+                             else None),
                    frontend=frontend_stats,
                    cache=eng.cache.stats(),
                    engine=eng.stats().as_dict(),
@@ -255,7 +378,8 @@ def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--suite", default="tiny", choices=["tiny", "small"])
+    ap.add_argument("--suite", default="tiny",
+                    choices=["micro", "tiny", "small"])
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--iters-per-tick", type=int, default=8)
@@ -286,6 +410,15 @@ def main():
                     choices=["block", "reject"],
                     help="async backpressure: block submitters or "
                          "reject with EngineOverloadedError")
+    ap.add_argument("--precond", default="ac",
+                    choices=["ac", "ichol", "amg", "spai", "auto"],
+                    help="preconditioner family the suite serves under; "
+                         "'auto' = adaptive per-graph selection "
+                         "(epsilon-greedy on serving telemetry)")
+    ap.add_argument("--select-epsilon", type=float, default=0.2,
+                    help="exploration probability for --precond auto")
+    ap.add_argument("--skew", type=float, default=None,
+                    help="Zipf-like graph-choice skew (hot-graph trace)")
     ap.add_argument("--memory-budget-mb", type=int, default=None)
     ap.add_argument("--json", default=None,
                     help="write service metrics to this JSON file")
@@ -299,11 +432,19 @@ def main():
         arrival_rate=args.arrival_rate, policy=args.policy,
         max_skips=args.max_skips, deadline_ms=args.deadline_ms,
         use_async=args.use_async, max_queue=args.max_queue,
-        overload=args.overload)
+        overload=args.overload, precond=args.precond,
+        select_epsilon=args.select_epsilon, skew=args.skew)
 
     print(f"suite={metrics['suite']} graphs={metrics['graphs']} "
           f"factor_batched={metrics['factor_s']:.2f}s "
-          f"mode={metrics['mode']} policy={metrics['policy']}")
+          f"mode={metrics['mode']} policy={metrics['policy']} "
+          f"precond={metrics['precond']}")
+    if metrics["selector"]:
+        sel = metrics["selector"]
+        print(f"selector: picks={sel['picks']} "
+              f"by_family={sel['picks_by_family']} "
+              f"explores={sel['explores']} cold={sel['cold_picks']} "
+              f"deadline_misses={sel['deadline_misses']}")
     print(f"served {metrics['completed']}/{metrics['requests']} requests "
           f"({metrics['rhs_total']} rhs, {metrics['converged']} converged) "
           f"in {metrics['serve_s']:.2f}s over {metrics['slots']} slots, "

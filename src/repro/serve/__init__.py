@@ -5,4 +5,4 @@ from .frontend import (SolveFrontend, FrontendStats,  # noqa: F401
                        EngineOverloadedError)
 from .cluster import (SolveCluster, ClusterStats,  # noqa: F401
                       ClusterOverloadedError, EngineReplica, ReplicaStats,
-                      make_routing)
+                      AdaptiveSelector, make_routing)

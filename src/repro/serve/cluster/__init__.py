@@ -3,6 +3,7 @@ hot-factor replication with TTL demotion, replica health ejection, and
 cluster-wide telemetry.  See :mod:`repro.serve.cluster.router` for the
 full design notes."""
 from .replica import EngineReplica  # noqa: F401
+from .selector import AdaptiveSelector  # noqa: F401
 from .router import (SolveCluster, Router, RoutingPolicy,  # noqa: F401
                      FactorAffinityRouting, LeastLoadedRouting,
                      RoundRobinRouting, make_routing,

@@ -64,21 +64,31 @@ class EngineReplica:
                 + sum(l is not None for l in self.engine.lanes))
 
     def capacity_probe(self) -> Dict[str, Optional[int]]:
+        """Free-capacity snapshot of this replica's private cache
+        (budget headroom, reusable fleet rows) — what miss placement
+        ranks replicas by."""
         return self.cache.capacity_probe()
 
     @property
     def alive(self) -> bool:
+        """Driver-thread liveness (see ``SolveFrontend.alive``) — the
+        signal the cluster health loop keys ejection on."""
         return self.frontend.alive
 
     # -- mutation (driver thread via the control channel) -------------------
-    def factor(self, g, key, *, graph_id: str,
+    def factor(self, g, key, *, graph_id: str, family: str = "ac",
+               precond_params: Optional[Dict] = None,
                ttl_s: Optional[float] = None) -> "Future[FactorHandle]":
         """Factor ``g`` into this replica's private cache **on the
-        driver thread**; resolves to the admitted handle.  ``ttl_s``
-        carries the hot-replica demotion TTL (``None`` = immortal
-        primary placement)."""
+        driver thread**; resolves to the admitted handle.  ``family`` /
+        ``precond_params`` select the preconditioner family constructed
+        (the router passes the family its placement id encodes);
+        ``ttl_s`` carries the hot-replica demotion TTL (``None`` =
+        immortal primary placement)."""
         return self.frontend.call(self.cache.factor, g, key,
-                                  graph_id=graph_id, ttl_s=ttl_s)
+                                  graph_id=graph_id, family=family,
+                                  precond_params=precond_params,
+                                  ttl_s=ttl_s)
 
     def submit(self, req: SolveRequest) -> "Future[SolveRequest]":
         """Queue a routed request.  *This* replica's factor is pinned
@@ -94,8 +104,12 @@ class EngineReplica:
 
     # -- lifecycle ----------------------------------------------------------
     def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until this replica's submitted work resolves (False on
+        timeout)."""
         return self.frontend.drain(timeout=timeout)
 
     def close(self, *, drain: bool = True,
               timeout: Optional[float] = None) -> None:
+        """Stop the replica's driver thread (draining first by
+        default); pending futures fail once closed."""
         self.frontend.close(drain=drain, timeout=timeout)

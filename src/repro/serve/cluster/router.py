@@ -63,12 +63,13 @@ from typing import (Callable, Deque, Dict, List, Optional, Sequence, Set,
 
 import numpy as np
 
-from repro.core.solver import graph_fingerprint
+from repro.core.solver import PRECOND_FAMILIES, graph_fingerprint
 from repro.serve.admission import make_policy
 from repro.serve.engine import SolveRequest, make_request
 from repro.serve.frontend import EngineOverloadedError
 
 from .replica import EngineReplica
+from .selector import AdaptiveSelector
 from .stats import ClusterStats, ReplicaStats
 
 
@@ -343,6 +344,8 @@ class Router:
         return fut
 
     def drop_placement(self, gid: str, index: int) -> None:
+        """Forget ``gid``'s placement on replica ``index`` (TTL expiry
+        or eviction observed) — the next route re-places on a miss."""
         pl = self.placements.get(gid)
         if pl is not None:
             pl.pop(index, None)
@@ -433,12 +436,27 @@ class SolveCluster:
     pays the cold factor; ``factor()`` pre-warms explicitly).  Every
     request is stamped with its serving replica (``req.replica``), and
     replaying it there directly reproduces the served result bit-exactly.
+
+    **Preconditioner family** (``precond``): a fixed family name from
+    :data:`repro.core.solver.PRECOND_FAMILIES` serves every request
+    under that family, or ``"auto"`` puts an
+    :class:`~repro.serve.cluster.selector.AdaptiveSelector` in front —
+    an epsilon-greedy bandit choosing per request from per-graph
+    convergence telemetry (cold graphs fall back to AC).  Placements of
+    a non-AC family use **family-qualified graph ids**
+    (``"<gid>::<family>"``), so one graph can hold several families'
+    factors across the cluster; requests are rewritten to the chosen
+    qualified id before routing, and ``res.graph_id`` reports the id
+    that actually served.
     """
 
     def __init__(self, *, replicas: int = 2, routing: str = "affinity",
                  slots: int = 8, iters_per_tick: int = 8,
                  admission: str = "fifo", max_skips: Optional[int] = None,
                  max_queue: int = 256, overload: str = "reject",
+                 precond: str = "ac",
+                 precond_params: Optional[Dict] = None,
+                 select_epsilon: float = 0.1,
                  replicate_above: Optional[float] = None,
                  rate_window_s: float = 1.0, replica_ttl_s: float = 30.0,
                  eject_rejections: int = 4, health_window_s: float = 1.0,
@@ -447,6 +465,14 @@ class SolveCluster:
                  seed: int = 0, cache_kw: Optional[Dict] = None):
         if replicas < 1:
             raise ValueError("replicas must be >= 1")
+        if precond != "auto" and precond not in PRECOND_FAMILIES:
+            raise ValueError(
+                f"unknown precond {precond!r}; choose a registered family "
+                f"{sorted(PRECOND_FAMILIES)} or 'auto'")
+        self.precond = precond
+        self.precond_params = dict(precond_params or {})
+        self.selector = (AdaptiveSelector(seed=seed, epsilon=select_epsilon)
+                         if precond == "auto" else None)
         self._clock = clock if clock is not None else time.monotonic
         self.replicas = [
             EngineReplica(i, slots=slots, iters_per_tick=iters_per_tick,
@@ -470,28 +496,58 @@ class SolveCluster:
     # -- graph registry -----------------------------------------------------
     def register(self, g, key, *, graph_id: Optional[str] = None) -> str:
         """Record ``(graph, key)`` under its fingerprint (or explicit
-        id) so the router can place its factor on demand."""
+        id) so the router can place its factor on demand.  ``"::"`` is
+        reserved in explicit ids (it separates the family qualifier in
+        placement ids)."""
         gid = graph_id if graph_id is not None else graph_fingerprint(g, key)
+        if "::" in gid:
+            raise ValueError(f"graph_id {gid!r} contains the reserved "
+                             f"family separator '::'")
         with self._lock:
             self.registry[gid] = (g, key)
         return gid
 
+    @staticmethod
+    def _qualify(gid: str, family: str) -> str:
+        """Placement id for ``gid`` served under ``family`` — AC keeps
+        the bare id (backward compatible with every recorded trace)."""
+        return gid if family == "ac" else f"{gid}::{family}"
+
+    @staticmethod
+    def _split(placement_id: str) -> Tuple[str, str]:
+        base, sep, fam = placement_id.partition("::")
+        return base, (fam if sep else "ac")
+
+    def _serving_family(self, gid: str,
+                        deadline_s: Optional[float]) -> str:
+        """Family this request serves under: the fixed configured
+        family, or the selector's per-graph pick for ``auto``."""
+        if self.selector is not None:
+            return self.selector.pick(gid, deadline_s=deadline_s)
+        return self.precond
+
     def _factor_on(self, gid: str, rep: EngineReplica,
                    ttl_s: Optional[float]) -> Future:
+        base, fam = self._split(gid)
         try:
-            g, key = self.registry[gid]
+            g, key = self.registry[base]
         except KeyError:
             raise KeyError(
-                f"graph_id {gid!r} is not registered with the cluster "
+                f"graph_id {base!r} is not registered with the cluster "
                 f"(call register(graph, key) first)") from None
-        return rep.factor(g, key, graph_id=gid, ttl_s=ttl_s)
+        params = self.precond_params if fam == self.precond else None
+        return rep.factor(g, key, graph_id=gid, family=fam,
+                          precond_params=params, ttl_s=ttl_s)
 
     def factor(self, g, key, *, graph_id: Optional[str] = None,
                replica: Optional[int] = None) -> Tuple[str, int]:
         """Pre-warm: register and factor now (blocking) on ``replica``
-        or on the roomiest healthy replica.  Returns ``(graph_id,
+        or on the roomiest healthy replica, under the cluster's
+        configured family (``auto`` pre-warms the AC fallback — the
+        family cold graphs serve under).  Returns ``(graph_id,
         replica_index)``."""
         gid = self.register(g, key, graph_id=graph_id)
+        fam = "ac" if self.precond == "auto" else self.precond
         with self._lock:
             healthy = self.router.healthy()
             if not healthy:
@@ -499,9 +555,32 @@ class SolveCluster:
                                              "factor onto")
             rep = self.replicas[replica] if replica is not None \
                 else _roomiest(healthy)
-            fut = self.router.place(gid, rep)
+            fut = self.router.place(self._qualify(gid, fam), rep)
         fut.result()
         return gid, rep.index
+
+    def _observer(self, base_gid: str, fam: str) -> Callable:
+        """Done-callback feeding one served request back into the
+        selector: service seconds as the client saw them, block-max
+        iterations, convergence and deadline outcome.  A failed future
+        (replica died mid-flight) records a non-converged observation
+        so the bandit deprioritizes whatever was being tried."""
+        def _cb(fut: Future) -> None:
+            sel = self.selector
+            try:
+                res = fut.result()
+            except Exception:
+                sel.observe(base_gid, fam, wall_s=float("inf"), ok=False,
+                            deadline_ok=False)
+                return
+            wall = max(res.finish_time - res.submit_time, 0.0)
+            iters = int(np.max(res.iters)) if res.iters is not None else None
+            missed = res.status == "deadline_missed" or (
+                res.deadline_s is not None and wall > res.deadline_s)
+            sel.observe(base_gid, fam, wall_s=wall, iters=iters,
+                        ok=res.status == "converged",
+                        deadline_ok=not missed)
+        return _cb
 
     # -- request path -------------------------------------------------------
     def submit_request(self, req: SolveRequest) -> "Future[SolveRequest]":
@@ -513,6 +592,13 @@ class SolveCluster:
         holds on every exit path (CI-gated)."""
         with self._lock:
             self.submitted += 1
+        # resolve the serving family once per request (overload retries
+        # keep it — the retry is about *where*, not *what*) and rewrite
+        # the graph id to the family-qualified placement id
+        base_gid, req_fam = self._split(req.graph_id)
+        if req_fam == "ac":               # not already qualified
+            req_fam = self._serving_family(base_gid, req.deadline_s)
+            req.graph_id = self._qualify(base_gid, req_fam)
         tried: Set[int] = set()
         route_errors = 0
         try:
@@ -567,6 +653,9 @@ class SolveCluster:
                 req.replica = rep.index
                 with self._lock:
                     self.router.record_routed(rep, hit=hit)
+                if self.selector is not None:
+                    fut.add_done_callback(
+                        self._observer(base_gid, req_fam))
                 return fut
         except Exception:
             with self._lock:
@@ -593,6 +682,12 @@ class SolveCluster:
 
     # -- telemetry ----------------------------------------------------------
     def stats(self) -> ClusterStats:
+        """Point-in-time :class:`ClusterStats` snapshot: routing and
+        health counters, per-replica breakdown (nesting each replica's
+        ``FrontendStats``), the serving family, and the adaptive
+        selector's estimate table under ``--precond auto`` (glossary in
+        ``docs/serving.md``).  Pure read — never advances the ejection
+        state machine."""
         with self._lock:
             r = self.router
             # telemetry must not advance the ejection state machine
@@ -623,7 +718,10 @@ class SolveCluster:
                 affinity_misses=r.affinity_misses,
                 replications=r.replications, demotions=r.demotions,
                 ejections=r.ejections, readmissions=r.readmissions,
-                shed=r.shed, hot_graphs=hot, per_replica=per)
+                shed=r.shed, hot_graphs=hot, per_replica=per,
+                precond=self.precond,
+                selector=(self.selector.stats()
+                          if self.selector is not None else None))
 
     # -- lifecycle ----------------------------------------------------------
     def drain(self, timeout: Optional[float] = None) -> bool:
@@ -641,6 +739,8 @@ class SolveCluster:
 
     def close(self, *, drain: bool = True,
               timeout: Optional[float] = None) -> None:
+        """Close every replica (with ``drain``, in-flight work finishes
+        first); the cluster is unusable afterwards."""
         for rep in self.replicas:
             rep.close(drain=drain, timeout=timeout)
 

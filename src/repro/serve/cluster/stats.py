@@ -15,7 +15,7 @@ them.  Request conservation across the cluster is
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.serve.frontend import FrontendStats
 
@@ -57,7 +57,12 @@ class ClusterStats:
     ``ejections`` / ``readmissions`` the health loop's decisions;
     ``shed`` the requests the cluster could not serve at all — no
     healthy replica, unregistered graph, or factor failure — so
-    ``submitted == routed + shed`` holds on every exit path."""
+    ``submitted == routed + shed`` holds on every exit path.
+
+    ``precond`` is the cluster's configured preconditioner family
+    (``"auto"`` = adaptive selection); ``selector`` carries the
+    :class:`~repro.serve.cluster.selector.AdaptiveSelector` counters
+    and per-graph estimates when adaptive, else ``None``."""
 
     policy: str
     replicas: int
@@ -73,9 +78,13 @@ class ClusterStats:
     shed: int
     hot_graphs: int      # graphs currently holding >= 2 live placements
     per_replica: List[ReplicaStats]
+    precond: str = "ac"
+    selector: Optional[Dict] = None
 
     @property
     def hit_rate(self) -> float:
+        """Fraction of routed requests that landed on a replica already
+        holding the factor (0.0 before any routing)."""
         n = self.affinity_hits + self.affinity_misses
         return self.affinity_hits / n if n else 0.0
 

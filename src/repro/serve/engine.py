@@ -22,9 +22,10 @@ with the data-ownership model inverted relative to the PR-2 engine:
   per bucket, with the bucket's stacked factor arrays
   (``FactorCache`` → :class:`FactorFleet` → ``pcg.FleetArrays``) passed
   as **traced arguments** and a per-lane factor index routing each lane
-  to its own factor.  Grouping is by *shape bucket*, not factor
-  identity: every factor whose graphs share a pow2 size bucket shares
-  one compiled step program;
+  to its own factor.  Grouping is by ``(family, shape bucket)``, not
+  factor identity: every preconditioner of one family whose graphs
+  share a pow2 size bucket shares one compiled step program (the
+  family's apply ``kind`` and level bounds are the jit statics);
 * lanes whose column converged (or hit maxiter) retire at the end of a
   tick via one jitted **gather** of just the finished columns
   (device→host traffic = retired columns); freed lanes readmit from the
@@ -51,7 +52,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -115,6 +116,8 @@ class SolveRequest:                        # arrays, field-wise == is a trap
 
     @property
     def nrhs(self) -> int:
+        """Lanes this request needs: 1 for a ``(n,)`` rhs, else the
+        block width of its ``(nrhs, n)`` batch."""
         return 1 if np.ndim(self.b) == 1 else int(np.shape(self.b)[0])
 
     @property
@@ -148,7 +151,9 @@ def make_request(graph_id: str, b, *, rid: int, tol: float = 1e-6,
 class EngineStats:
     """Service-level counters (``SolveEngine.stats()``).  The compile
     counters expose the mega-batching contract: ``step_compiles`` grows
-    per *shape bucket*, never per factor; ``cols_in``/``cols_out`` count
+    per *(family, shape bucket)*, never per factor (``families`` counts
+    the distinct preconditioner families that have served lanes);
+    ``cols_in``/``cols_out`` count
     host↔device column transfers, which are O(admitted + retired), never
     O(slots × ticks).
 
@@ -166,6 +171,7 @@ class EngineStats:
     slots: int
     factors: int
     buckets: int
+    families: int
     step_compiles: int
     admit_compiles: int
     gather_compiles: int
@@ -234,12 +240,13 @@ class _BucketLanes:
 # -- jitted engine programs (module-level: shapes + statics key compiles) ---
 
 def _admit_program(fa: FleetArrays, state: FleetPCGState, rows, B, fidx,
-                   tol, maxiter, *, f_levels: int, b_levels: int):
+                   tol, maxiter, *, f_levels: int, b_levels: int,
+                   kind: str = "factor"):
     """Initialize the admitted columns (same math as a direct solve's
     init) and scatter every carry field into the resident state at
     ``rows``.  Padding rows carry ``rows == slots`` and drop."""
     init = pcg_fleet_init(fa, fidx, B, tol, maxiter,
-                          f_levels=f_levels, b_levels=b_levels)
+                          f_levels=f_levels, b_levels=b_levels, kind=kind)
     new = FleetPCGState(
         X=state.X.at[rows].set(init.X, mode="drop"),
         R=state.R.at[rows].set(init.R, mode="drop"),
@@ -256,9 +263,9 @@ def _admit_program(fa: FleetArrays, state: FleetPCGState, rows, B, fidx,
 
 
 def _step_program(fa: FleetArrays, state: FleetPCGState, *, k: int,
-                  f_levels: int, b_levels: int):
+                  f_levels: int, b_levels: int, kind: str = "factor"):
     return pcg_fleet_step(fa, state, k=k, f_levels=f_levels,
-                          b_levels=b_levels)
+                          b_levels=b_levels, kind=kind)
 
 
 def _gather_program(state: FleetPCGState, rows):
@@ -320,7 +327,7 @@ class SolveEngine:
         # submits for a graph that was evicted mid-flight, and is
         # dropped when the graph goes idle.
         self._pinned: Dict[str, FactorHandle] = {}
-        self._buckets: Dict[int, _BucketLanes] = {}
+        self._buckets: Dict[Tuple[str, int], _BucketLanes] = {}
         self.n_completed = 0       # lifetime count (completed is bounded)
         # compile + transfer accounting: the Python bodies below run
         # once per jit specialization (trace time), so the counters
@@ -335,15 +342,16 @@ class SolveEngine:
         k = iters_per_tick
 
         def admit(fa, state, rows, B, fidx, tol, maxiter, *,
-                  f_levels, b_levels):
+                  f_levels, b_levels, kind):
             counts["admit"] += 1
             return _admit_program(fa, state, rows, B, fidx, tol, maxiter,
-                                  f_levels=f_levels, b_levels=b_levels)
+                                  f_levels=f_levels, b_levels=b_levels,
+                                  kind=kind)
 
-        def step(fa, state, *, f_levels, b_levels):
+        def step(fa, state, *, f_levels, b_levels, kind):
             counts["step"] += 1
             return _step_program(fa, state, k=k, f_levels=f_levels,
-                                 b_levels=b_levels)
+                                 b_levels=b_levels, kind=kind)
 
         def gather(state, rows):
             counts["gather"] += 1
@@ -354,9 +362,9 @@ class SolveEngine:
             return _evict_program(state, rows)
 
         self._admit_fn = jax.jit(
-            admit, static_argnames=("f_levels", "b_levels"))
+            admit, static_argnames=("f_levels", "b_levels", "kind"))
         self._step_fn = jax.jit(
-            step, static_argnames=("f_levels", "b_levels"))
+            step, static_argnames=("f_levels", "b_levels", "kind"))
         self._gather_fn = jax.jit(gather)
         self._evict_fn = jax.jit(evict)
 
@@ -403,9 +411,14 @@ class SolveEngine:
         self.queue_peak = max(self.queue_peak, len(self.queue))
 
     def _bucket(self, fleet: FactorFleet) -> _BucketLanes:
-        bl = self._buckets.get(fleet.n_pad)
+        """Lane group for one ``(family, shape-bucket)`` fleet.  Keying
+        by family keeps each family on its own compiled step program
+        (the apply ``kind`` and level bounds are jit statics), while
+        every factor *within* a family-bucket still shares one."""
+        key = (fleet.family, fleet.n_pad)
+        bl = self._buckets.get(key)
         if bl is None:
-            bl = self._buckets[fleet.n_pad] = _BucketLanes(fleet, self.slots)
+            bl = self._buckets[key] = _BucketLanes(fleet, self.slots)
         return bl
 
     def _admit(self) -> None:
@@ -460,7 +473,7 @@ class SolveEngine:
                 fleet.arrays, bl.state, jnp.asarray(rows_a),
                 jnp.asarray(B), jnp.asarray(fidx), jnp.asarray(tol),
                 jnp.asarray(maxv), f_levels=fleet.f_levels,
-                b_levels=fleet.b_levels)
+                b_levels=fleet.b_levels, kind=fleet.kind)
             bl.state = state
             act0 = np.asarray(act0)[:j]
             bl.n_active += int(act0.sum())
@@ -481,8 +494,8 @@ class SolveEngine:
         if self.admission.evict_hopeless:
             self._evict_hopeless()
         done: List[SolveRequest] = []
-        for n_pad in sorted(self._buckets):
-            bl = self._buckets[n_pad]
+        for bkey in sorted(self._buckets):
+            bl = self._buckets[bkey]
             occ = [i for i, lane in enumerate(self.lanes)
                    if lane is not None and lane.bucket is bl]
             if not occ:
@@ -490,7 +503,8 @@ class SolveEngine:
             if bl.n_active > 0:
                 bl.state = self._step_fn(
                     bl.fleet.arrays, bl.state,
-                    f_levels=bl.fleet.f_levels, b_levels=bl.fleet.b_levels)
+                    f_levels=bl.fleet.f_levels, b_levels=bl.fleet.b_levels,
+                    kind=bl.fleet.kind)
             active = np.asarray(bl.state.active)   # (slots,) flags only
             frozen = [i for i in occ if not active[i]]
             bl.n_active = int(active[occ].sum())
@@ -604,6 +618,7 @@ class SolveEngine:
     # -- driving loops ------------------------------------------------------
     @property
     def busy(self) -> bool:
+        """True while any request is queued or holding lanes."""
         return bool(self.queue) or any(l is not None for l in self.lanes)
 
     def run_until_drained(self, max_ticks: int = 100_000
@@ -618,6 +633,9 @@ class SolveEngine:
         return done
 
     def stats(self) -> EngineStats:
+        """Point-in-time :class:`EngineStats` snapshot — scheduler
+        counters, compile counts and host↔device column traffic (the
+        counter glossary lives in ``docs/serving.md``)."""
         active = sum(l is not None for l in self.lanes)
         in_flight = len({id(l.req) for l in self.lanes if l is not None})
         sched = self.admission.counters()
@@ -625,6 +643,7 @@ class SolveEngine:
             ticks=self.ticks, completed=self.n_completed,
             queued=len(self.queue), active_lanes=active, slots=self.slots,
             factors=len(self.cache), buckets=len(self._buckets),
+            families=len({fam for fam, _ in self._buckets}),
             step_compiles=self.compile_counts["step"],
             admit_compiles=self.compile_counts["admit"],
             gather_compiles=self.compile_counts["gather"],

@@ -89,6 +89,19 @@ class SolveFrontend:
     :class:`SolveRequest`; ``solve`` awaits it on the caller's event
     loop.  Thread-safe: any number of producer threads / event loops may
     submit concurrently.
+
+    Args:
+        engine: the engine this frontend drives — after construction,
+            only the frontend's driver thread may touch it (use
+            :meth:`call` for out-of-band work like factoring).
+        max_queue: bound on requests waiting anywhere before lane
+            admission (ingress + engine queue) — the backpressure
+            threshold.
+        overload: what a full queue does to ``submit`` — ``"block"``
+            stalls the submitter until space frees, ``"reject"`` raises
+            :class:`EngineOverloadedError`.
+        idle_wait_s: driver-thread sleep between polls when the engine
+            is idle (latency floor for a cold first request).
     """
 
     def __init__(self, engine: SolveEngine, *, max_queue: int = 256,
@@ -315,6 +328,8 @@ class SolveFrontend:
         self.close(drain=exc == (None, None, None))
 
     def stats(self) -> FrontendStats:
+        """Point-in-time :class:`FrontendStats` snapshot (nests the
+        engine's :class:`EngineStats`); safe from any thread."""
         with self._lock:
             depth = self._depth()
             peak = max(self.queue_peak, depth)
