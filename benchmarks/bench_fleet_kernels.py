@@ -1,0 +1,147 @@
+"""Fleet-kernel microbench: achieved vs theoretical bytes/s for the
+serving hot loop's Pallas kernels.
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet_kernels \
+        --json BENCH_fleet_kernels.json
+
+Times the four kernels the engine tick is built from — ``ell_spmv``,
+``ell_spmv_multi``, ``ell_spmv_fleet``, and ``trisolve_fleet`` — on
+synthetic ELL panels at serving-representative shapes, against a simple
+bytes-moved model (cols + vals + gathered operand reads + result
+write).  The "theoretical" reference is not a datasheet number but a
+measured **device-copy proxy**: a jitted f32 copy of a large array on
+the same backend, so ``frac_of_copy`` reads as "fraction of the
+bandwidth this machine demonstrably sustains" and is comparable across
+interpret (CPU) and native (GPU/TPU) lowering.  All four kernels are
+memory-bound at serving K (a handful of fused multiply-adds per 12
+bytes of panel), so the copy fraction *is* the roofline fraction.
+
+The CI ``bench-serve`` job uploads the JSON artifact;
+``benchmarks.roofline_report --kernels`` renders it as a markdown
+table next to the model-level roofline.  Values move with the runner,
+so nothing here is gated — the artifact exists to make a lowering
+regression (e.g. interpret mode silently re-enabled on an accelerator)
+visible as an order-of-magnitude bandwidth dip.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from .common import emit, time_call
+
+
+def _panels(rng, *shape):
+    """Zero-valued ELL panels: memory traffic identical to real factor
+    panels (same reads, same gather, same write) while keeping repeated
+    trisolve sweeps numerically inert — no overflow across sweeps."""
+    cols = rng.integers(0, shape[-2], size=shape, dtype=np.int32)
+    vals = np.zeros(shape, np.float32)
+    return cols, vals
+
+
+def bench_kernels(*, n=4096, k=8, lanes=4, nrhs=4, levels=8, repeats=5,
+                  copy_mb=64):
+    """Run the microbench; returns the JSON-able record dict."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import (ell_spmv, ell_spmv_fleet,
+                                   ell_spmv_multi, trisolve_fleet)
+    from repro.kernels.runtime import default_interpret
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    xm = jnp.asarray(rng.normal(size=(n, nrhs)).astype(np.float32))
+    xf = jnp.asarray(rng.normal(size=(lanes, n)).astype(np.float32))
+
+    # bandwidth proxy: a jitted device copy (read + write) of a big f32
+    # array — the sustained-bandwidth ceiling the kernels are judged by
+    copy_n = max(copy_mb, 1) * (1 << 20) // 4
+    big = jnp.asarray(rng.normal(size=copy_n).astype(np.float32))
+    copy_fn = jax.jit(lambda a: a + 0.0)
+    t_copy, _ = time_call(lambda: jax.block_until_ready(copy_fn(big)),
+                          repeats=repeats)
+    peak_bs = 2 * copy_n * 4 / t_copy if t_copy > 0 else 0.0
+
+    records = []
+
+    def record(name, fn, bytes_moved, shape):
+        t, _ = time_call(lambda: jax.block_until_ready(fn()),
+                         repeats=repeats)
+        bs = bytes_moved / t if t > 0 else 0.0
+        rec = dict(kernel=name, shape=shape, time_us=t * 1e6,
+                   bytes=bytes_moved, achieved_gbs=bs / 1e9,
+                   frac_of_copy=bs / peak_bs if peak_bs > 0 else 0.0)
+        records.append(rec)
+        emit(f"kernels/{name}/us", rec["time_us"],
+             f"GB/s={rec['achieved_gbs']:.2f};"
+             f"frac={rec['frac_of_copy']:.3f}")
+
+    # per-call bytes: cols + vals reads (4B each), the gathered operand
+    # read (4B per ELL slot per rhs), and the result write
+    c1, v1 = _panels(rng, n, k)
+    c1, v1 = jnp.asarray(c1), jnp.asarray(v1)
+    record("ell_spmv", lambda: ell_spmv(c1, v1, x),
+           n * k * 12 + n * 4, dict(n=n, k=k))
+
+    record("ell_spmv_multi", lambda: ell_spmv_multi(c1, v1, xm),
+           n * k * 8 + n * k * nrhs * 4 + n * nrhs * 4,
+           dict(n=n, k=k, nrhs=nrhs))
+
+    cf, vf = _panels(rng, lanes, n, k)
+    cf, vf = jnp.asarray(cf), jnp.asarray(vf)
+    fleet_bytes = lanes * (n * k * 12 + n * 4)
+    record("ell_spmv_fleet", lambda: ell_spmv_fleet(cf, vf, xf),
+           fleet_bytes, dict(lanes=lanes, n=n, k=k))
+
+    # trisolve: (levels-1) masked sweeps, each one fleet SpMV plus the
+    # level_of read and the committed y write; jitted whole like the
+    # engine's PCG step (an eager lax loop would time dispatch, not the
+    # kernel)
+    lof = jnp.asarray(rng.integers(0, levels, size=(lanes, n),
+                                   dtype=np.int32))
+    tri_fn = jax.jit(lambda c, v, lo, y:
+                     trisolve_fleet(c, v, lo, y, n_levels=levels))
+    tri_bytes = (levels - 1) * (fleet_bytes + lanes * n * 8)
+    record("trisolve_fleet", lambda: tri_fn(cf, vf, lof, xf),
+           tri_bytes, dict(lanes=lanes, n=n, k=k, levels=levels))
+
+    return dict(backend=jax.default_backend(),
+                interpret=default_interpret(),
+                copy_mb=copy_mb, copy_gbs=peak_bs / 1e9,
+                repeats=repeats, records=records)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4096,
+                    help="padded rows per lane")
+    ap.add_argument("--k", type=int, default=8, help="ELL panel width")
+    ap.add_argument("--lanes", type=int, default=4,
+                    help="fleet lanes (L) for the batched kernels")
+    ap.add_argument("--nrhs", type=int, default=4,
+                    help="columns for ell_spmv_multi")
+    ap.add_argument("--levels", type=int, default=8,
+                    help="trisolve level sweeps")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--copy-mb", type=int, default=64,
+                    help="size of the bandwidth-proxy device copy")
+    ap.add_argument("--json", default=None,
+                    help="write records to this JSON file (CI artifact)")
+    args = ap.parse_args()
+    out = bench_kernels(n=args.n, k=args.k, lanes=args.lanes,
+                        nrhs=args.nrhs, levels=args.levels,
+                        repeats=args.repeats, copy_mb=args.copy_mb)
+    print(f"backend={out['backend']} interpret={out['interpret']} "
+          f"copy={out['copy_gbs']:.2f} GB/s")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(out, fh, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,17 @@ latency per policy.  ``check_serve_regression`` gates that backfill
 strictly improves p95 end-to-end latency over FIFO and that every
 engine's scheduler counters conserve requests and respect the
 starvation bound.
+
+Two padding-tax blocks ride in the same artifact:
+
+* ``tier_sweep`` (disable with ``--no-tier-sweep``): one seeded
+  hub-heavy trace replayed through a K-tiered cache and an untiered
+  one; the gate is that the tiered engine's ``sweep_elements`` (padded
+  ``n_pad x K x sweeps`` work) is strictly lower — the K-tiering win;
+* ``fleet_memory`` (disable with ``--no-fleet-memory``): eviction
+  churn followed by stack compaction; the gate is
+  ``fleet_device_bytes <= 1.5 x fleet_live_bytes`` with at least one
+  compaction, and the post-compaction replay must still converge.
 """
 from __future__ import annotations
 
@@ -127,9 +138,124 @@ def run_policy_sweep(cache, gid, n, *, slots=4, iters_per_tick=8, seed=0,
     return out
 
 
+def run_tier_sweep(*, seed=0, requests=24, slots=8, iters_per_tick=8):
+    """Replay one seeded hub-heavy trace twice — through a K-tiered
+    cache and an untiered one — and compare the engines' padded sweep
+    work.  The workload is the padding tax's worst case: one hub-heavy
+    powerlaw graph (fat ELL panels) sharing a shape bucket with
+    low-degree mesh graphs, so the untiered fleet drags every
+    low-degree lane through the hub's panel width while tiering keeps
+    them in narrow-K fleets.  ELL padding is zero-valued, so the modes
+    converge identically and ``sweep_elements`` — padded
+    ``n_pad x K x live-sweeps`` elements per occupied lane per tick —
+    isolates pure padding; ``check_serve_regression`` gates that the
+    tiered count is strictly lower with the same convergence counts."""
+    import jax
+
+    from repro.core.solver import FactorCache
+    from repro.data import graphs
+    from repro.launch.serve import make_trace
+    from repro.serve import SolveEngine
+
+    built = {
+        "hub": graphs.powerlaw(220, 12, seed=5),   # hub-heavy, fat K
+        "mesh": graphs.grid2d(15, 15, seed=3),     # low-degree ...
+        "road": graphs.road_like(15, seed=4),      # ... same shape bucket
+    }
+    keys = {name: jax.random.key(i) for i, name in enumerate(built)}
+    sizes = {name: g.n for name, g in built.items()}
+    out = {"graphs": sizes, "requests": requests, "modes": {}}
+    for mode, tiering in (("tiered", True), ("untiered", False)):
+        cache = FactorCache(strict=False, k_tiering=tiering)
+        cache.factor_batched(list(built.values()),
+                             [keys[name] for name in built],
+                             graph_ids=list(built.keys()))
+        eng = SolveEngine(cache, slots=slots,
+                          iters_per_tick=iters_per_tick)
+        trace = make_trace(list(built), sizes, requests, seed=seed,
+                           max_nrhs=min(4, slots))
+        metrics, _ = replay_trace(eng, trace)
+        st = eng.stats()
+        cs = cache.stats()
+        out["modes"][mode] = dict(
+            k_tiers=sorted({kt for _, _, kt in cache.fleets}),
+            buckets=st.buckets, step_compiles=st.step_compiles,
+            sweep_elements=st.sweep_elements,
+            sweeps_skipped=st.sweeps_skipped,
+            fleet_device_bytes=cs["fleet_device_bytes"],
+            completed=metrics["completed"],
+            converged=metrics["converged"], ticks=st.ticks)
+    t, u = out["modes"]["tiered"], out["modes"]["untiered"]
+    out["sweep_elements_ratio"] = (u["sweep_elements"] / t["sweep_elements"]
+                                   if t["sweep_elements"] else 0.0)
+    emit("serve/tier_sweep/sweep_elements_ratio",
+         out["sweep_elements_ratio"],
+         f"tiered={t['sweep_elements']};untiered={u['sweep_elements']};"
+         f"tiers={t['k_tiers']}")
+    return out
+
+
+def run_fleet_memory(*, seed=0, slots=8, iters_per_tick=8, n_graphs=6,
+                     keep=2):
+    """Churn workload for the stack-compaction memory gate: factor
+    ``n_graphs`` same-bucket graphs, serve a seeded trace, evict all
+    but ``keep``, force a compaction pass, and report the fleet-stack
+    footprint against the live floor.  ``check_serve_regression`` gates
+    ``fleet_device_bytes <= 1.5 x fleet_live_bytes`` (and that at least
+    one compaction actually ran) so eviction churn can never strand the
+    fleet stacks at their high-water capacity.  A post-compaction
+    replay over the survivors closes the loop: the engine re-syncs its
+    resident row indices against the rebuilt stacks and the solves
+    still converge."""
+    import jax
+
+    from repro.core.solver import FactorCache
+    from repro.data import graphs
+    from repro.launch.serve import make_trace
+    from repro.serve import SolveEngine
+
+    built = {f"g{i}": graphs.grid2d(12, 12, seed=i)
+             for i in range(n_graphs)}
+    keys = {name: jax.random.key(i) for i, name in enumerate(built)}
+    sizes = {name: g.n for name, g in built.items()}
+    cache = FactorCache(strict=False)
+    cache.factor_batched(list(built.values()),
+                         [keys[name] for name in built],
+                         graph_ids=list(built.keys()))
+    eng = SolveEngine(cache, slots=slots, iters_per_tick=iters_per_tick)
+    gids = list(built)
+    trace = make_trace(gids, sizes, 2 * n_graphs, seed=seed,
+                       max_nrhs=min(4, slots))
+    replay_trace(eng, trace)
+    peak = cache.stats()["fleet_device_bytes"]
+    for gid in gids[keep:]:
+        cache.evict(gid)
+    cache.compact()        # deterministic: don't ride on GC timing
+    cs = cache.stats()
+    survivors = gids[:keep]
+    post = make_trace(survivors, sizes, 2 * keep, seed=seed + 1,
+                      max_nrhs=min(4, slots))
+    post_metrics, _ = replay_trace(eng, post)
+    live = cs["fleet_live_bytes"]
+    out = dict(graphs=n_graphs, evicted=n_graphs - keep,
+               peak_device_bytes=peak,
+               fleet_device_bytes=cs["fleet_device_bytes"],
+               fleet_live_bytes=live,
+               ratio=(cs["fleet_device_bytes"] / live if live else 0.0),
+               compactions=cs["compactions"],
+               fleet_resyncs=eng.stats().fleet_resyncs,
+               post_compact_completed=post_metrics["completed"],
+               post_compact_converged=post_metrics["converged"])
+    emit("serve/fleet_memory/device_over_live", out["ratio"],
+         f"device={out['fleet_device_bytes']};live={live};"
+         f"compactions={out['compactions']};"
+         f"resyncs={out['fleet_resyncs']}")
+    return out
+
+
 def run(*, suite="tiny", requests=16, slots=8, iters_per_tick=8, seed=0,
         warm=True, arrival_rate=None, policy="fifo", sweep=True,
-        sweep_arrival_rate=100.0):
+        sweep_arrival_rate=100.0, tier_sweep=True, fleet_memory=True):
     """One warmup replay through the same engine (pays jit compiles),
     then the measured replay; with ``sweep`` the wide-head policy
     comparison reuses the already-factored cache."""
@@ -158,6 +284,12 @@ def run(*, suite="tiny", requests=16, slots=8, iters_per_tick=8, seed=0,
             cache, gid, cache.peek(gid).n, seed=seed,
             arrival_rate=sweep_arrival_rate,
             iters_per_tick=iters_per_tick)
+    if tier_sweep:
+        metrics["tier_sweep"] = run_tier_sweep(
+            seed=seed, slots=slots, iters_per_tick=iters_per_tick)
+    if fleet_memory:
+        metrics["fleet_memory"] = run_fleet_memory(
+            seed=seed, slots=slots, iters_per_tick=iters_per_tick)
     return metrics
 
 
@@ -184,6 +316,12 @@ def main():
     ap.add_argument("--sweep-arrival-rate", type=float, default=100.0,
                     help="Poisson rate for the wide-head policy sweep "
                          "(queueing vs service latency per policy)")
+    ap.add_argument("--no-tier-sweep", action="store_true",
+                    help="skip the K-tiered vs untiered padded-sweep-"
+                         "work comparison (hub-heavy trace)")
+    ap.add_argument("--no-fleet-memory", action="store_true",
+                    help="skip the eviction-churn + compaction "
+                         "fleet-memory measurement")
     ap.add_argument("--json", default=None,
                     help="write service metrics to this JSON file "
                          "(uploaded as a CI artifact)")
@@ -193,7 +331,9 @@ def main():
                   seed=args.seed, warm=not args.no_warm,
                   arrival_rate=args.arrival_rate, policy=args.policy,
                   sweep=not args.no_sweep,
-                  sweep_arrival_rate=args.sweep_arrival_rate)
+                  sweep_arrival_rate=args.sweep_arrival_rate,
+                  tier_sweep=not args.no_tier_sweep,
+                  fleet_memory=not args.no_fleet_memory)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(metrics, fh, indent=2)

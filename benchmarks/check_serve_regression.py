@@ -29,7 +29,18 @@ Two kinds of gate:
   artifact carries a wide-head
   ``policy_sweep``, the backfill policy must strictly beat FIFO on p95
   end-to-end latency — the scheduling contract the subsystem exists
-  for;
+  for.
+
+  Padding-tax invariants (when the artifact carries the blocks): the
+  ``tier_sweep`` replay's K-tiered engine must report strictly less
+  padded sweep work (``sweep_elements``) than the untiered engine on
+  the same hub-heavy trace — the K-tiering contract — with identical
+  convergence counts (padding width never changes what converges);
+  and the ``fleet_memory`` churn block must show
+  ``fleet_device_bytes <= 1.5 x fleet_live_bytes`` after eviction +
+  compaction, with at least one compaction run and every
+  post-compaction solve converged (stacks really shrank, and shrinking
+  them kept the engine's resident row indices coherent);
 * **throughput ratio**: ``ticks_per_s`` vs the committed baseline
   (insensitive to request mix, sensitive to per-tick host glue).  The
   bar is deliberately loose (default: fail only when the baseline is
@@ -82,6 +93,62 @@ def _engine_failures(eng: dict, *, label: str,
     return failures
 
 
+def _padding_failures(current: dict) -> list:
+    """Gates on the tier_sweep / fleet_memory artifact blocks (absent
+    in pre-tiering artifacts: both checks are then skipped)."""
+    failures = []
+    ts = current.get("tier_sweep") or {}
+    modes = ts.get("modes") or {}
+    if {"tiered", "untiered"} <= set(modes):
+        t, u = modes["tiered"], modes["untiered"]
+        if not t["sweep_elements"] < u["sweep_elements"]:
+            failures.append(
+                f"[tier_sweep] tiered sweep_elements="
+                f"{t['sweep_elements']} not strictly below untiered="
+                f"{u['sweep_elements']} (K-tiering is not cutting "
+                f"padded sweep work on the hub-heavy trace)")
+        if (t["completed"], t["converged"]) != \
+                (u["completed"], u["converged"]):
+            failures.append(
+                f"[tier_sweep] convergence drift across tiering modes: "
+                f"tiered {t['converged']}/{t['completed']} vs untiered "
+                f"{u['converged']}/{u['completed']} (panel padding must "
+                f"not change what converges)")
+        if not failures:
+            print(f"tier_sweep OK: sweep_elements "
+                  f"{t['sweep_elements']} < {u['sweep_elements']} "
+                  f"({ts.get('sweep_elements_ratio', 0.0):.2f}x "
+                  f"untiered/tiered)")
+    fm = current.get("fleet_memory")
+    if fm:
+        if fm["compactions"] < 1:
+            failures.append(
+                "[fleet_memory] no compaction ran under eviction churn "
+                "(free-row threshold never triggered and the forced "
+                "pass was a no-op)")
+        live = fm["fleet_live_bytes"]
+        if live and fm["fleet_device_bytes"] > 1.5 * live:
+            failures.append(
+                f"[fleet_memory] fleet_device_bytes="
+                f"{fm['fleet_device_bytes']} > 1.5x live bytes={live} "
+                f"(compaction left the stacks stranded at high-water "
+                f"capacity)")
+        if fm["post_compact_converged"] != fm["post_compact_completed"] \
+                or fm["post_compact_completed"] == 0:
+            failures.append(
+                f"[fleet_memory] post-compaction replay converged "
+                f"{fm['post_compact_converged']}/"
+                f"{fm['post_compact_completed']} (rebuilt stacks or "
+                f"engine row re-sync broke serving)")
+        if not any(f.startswith("[fleet_memory]") for f in failures):
+            print(f"fleet_memory OK: device={fm['fleet_device_bytes']} "
+                  f"<= 1.5x live={live} after "
+                  f"{fm['compactions']} compaction(s), "
+                  f"post-compaction {fm['post_compact_converged']}/"
+                  f"{fm['post_compact_completed']} converged")
+    return failures
+
+
 def check_invariants(current: dict) -> int:
     """Machine-independent engine-counter gates (no baseline needed)."""
     eng = current.get("engine")
@@ -96,6 +163,7 @@ def check_invariants(current: dict) -> int:
             # sweep engines serve one graph: still one bucket/compile
             failures += _engine_failures(m["engine"], label=name,
                                          require_bucket_compiles=True)
+    failures += _padding_failures(current)
     if {"fifo", "priority"} <= set(sweep.get("policies") or {}):
         f95 = float(sweep["policies"]["fifo"]["latency_p95_s"])
         b95 = float(sweep["policies"]["priority"]["latency_p95_s"])

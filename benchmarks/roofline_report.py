@@ -2,6 +2,12 @@
 results/dryrun/*.json.
 
     PYTHONPATH=src python -m benchmarks.roofline_report [--dir results/dryrun]
+
+With ``--kernels BENCH_fleet_kernels.json`` also renders the serving
+kernel microbench (``benchmarks.bench_fleet_kernels`` artifact) as a
+measured-bandwidth table: achieved bytes/s per kernel against the
+device-copy proxy recorded in the same artifact, so the kernel-level
+roofline fraction sits next to the model-level one.
 """
 from __future__ import annotations
 
@@ -70,12 +76,40 @@ def dryrun_table(recs):
     return hdr + "\n" + "\n".join(rows)
 
 
+def kernels_table(rec):
+    """Markdown table for a ``bench_fleet_kernels`` artifact: achieved
+    bytes/s per serving kernel vs the artifact's own device-copy
+    bandwidth proxy (the sustained ceiling on that machine)."""
+    rows = []
+    for r in rec.get("records", []):
+        shape = ",".join(f"{k}={v}" for k, v in r["shape"].items())
+        rows.append(
+            f"| {r['kernel']} | {shape} | {r['time_us']:.1f} "
+            f"| {r['bytes']/1e6:.2f} | {r['achieved_gbs']:.2f} "
+            f"| {r['frac_of_copy']:.3f} |")
+    hdr = (f"backend={rec.get('backend','?')} "
+           f"interpret={rec.get('interpret','?')} "
+           f"copy-proxy={rec.get('copy_gbs', 0.0):.2f} GB/s\n\n"
+           "| kernel | shape | time (us) | MB moved | GB/s "
+           "| frac of copy |\n|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--section", default="both",
                     choices=("roofline", "dryrun", "both"))
+    ap.add_argument("--kernels", default=None,
+                    help="bench_fleet_kernels JSON artifact to render "
+                         "as a measured kernel-bandwidth table")
     args = ap.parse_args()
+    if args.kernels:
+        with open(args.kernels) as fh:
+            print("\n### Serving kernels (measured)\n")
+            print(kernels_table(json.load(fh)))
+        if not glob.glob(os.path.join(args.dir, "*.json")):
+            return           # kernels-only invocation: no dryrun cells
     recs = load(args.dir)
     ok = sum(r["status"] == "ok" for r in recs)
     sk = sum(r["status"] == "skipped" for r in recs)

@@ -214,6 +214,8 @@ class FleetArrays(NamedTuple):
     blevel: jnp.ndarray   # int32[F, n_pad]
     dinv: jnp.ndarray     # f32[F, n_pad]  — 1/D (0 where D <= 0 / phantom)
     nvalid: jnp.ndarray   # int32[F]       — true vertex count per factor
+    fnlv: jnp.ndarray     # int32[F]       — true fwd level count per factor
+    bnlv: jnp.ndarray     # int32[F]       — true bwd level count per factor
 
 
 class FleetPCGState(NamedTuple):
@@ -255,7 +257,8 @@ def fleet_matvec(fa: FleetArrays, fidx: jnp.ndarray,
 def fleet_precondition(fa: FleetArrays, fidx: jnp.ndarray, R: jnp.ndarray,
                        *, f_levels: int, b_levels: int,
                        kind: str = "factor",
-                       interpret: bool = True) -> jnp.ndarray:
+                       interpret: Optional[bool] = None,
+                       active=None) -> jnp.ndarray:
     """Per-lane preconditioner apply, dispatched on the **static** apply
     ``kind`` of the family that owns the fleet:
 
@@ -272,6 +275,14 @@ def fleet_precondition(fa: FleetArrays, fidx: jnp.ndarray, R: jnp.ndarray,
       launch per apply instead of ``f_levels + b_levels`` masked sweeps.
 
     ``kind`` must be static under jit (it selects the traced program).
+
+    The static ``f_levels``/``b_levels`` ceilings bound compilation; the
+    *trip count* of each trisolve is further bounded dynamically by the
+    batch's live maximum true level count (``fa.fnlv``/``fa.bnlv``
+    gathered per lane), so sweeps past every live lane's depth never
+    launch.  ``active`` (optional bool ``(L,)``) masks frozen lanes out
+    of the bound — their apply output is discarded by the caller's lane
+    mask, so shrinking their sweep count cannot change any result.
     """
     # deferred: kernels.ops pulls in kernels.ref → repro.core, so a
     # top-level import here is a cycle whenever kernels.ops loads first
@@ -281,11 +292,18 @@ def fleet_precondition(fa: FleetArrays, fidx: jnp.ndarray, R: jnp.ndarray,
                               interpret=interpret)
     if kind != "factor":
         raise ValueError(f"unknown preconditioner apply kind: {kind!r}")
+    flv = fa.fnlv[fidx]
+    blv = fa.bnlv[fidx]
+    if active is not None:
+        flv = jnp.where(active, flv, 1)
+        blv = jnp.where(active, blv, 1)
     Y = trisolve_fleet(fa.fcols[fidx], fa.fvals[fidx], fa.flevel[fidx], R,
-                       n_levels=f_levels, interpret=interpret)
+                       n_levels=f_levels, interpret=interpret,
+                       lane_levels=flv)
     Z = Y * fa.dinv[fidx]
     return trisolve_fleet(fa.bcols[fidx], fa.bvals[fidx], fa.blevel[fidx],
-                          Z, n_levels=b_levels, interpret=interpret)
+                          Z, n_levels=b_levels, interpret=interpret,
+                          lane_levels=blv)
 
 
 def _fleet_project(Y: jnp.ndarray, nvalid: jnp.ndarray) -> jnp.ndarray:
@@ -302,7 +320,7 @@ def _fleet_project(Y: jnp.ndarray, nvalid: jnp.ndarray) -> jnp.ndarray:
 def pcg_fleet_init(fa: FleetArrays, fidx, B, tol, maxiter, *,
                    f_levels: int, b_levels: int, kind: str = "factor",
                    project: bool = True,
-                   interpret: bool = True) -> FleetPCGState:
+                   interpret: Optional[bool] = None) -> FleetPCGState:
     """Set up the fleet PCG carry for columns ``B`` of shape
     ``(L, n_pad)`` (each zero-padded past its factor's true n).  ``tol``
     and ``maxiter`` are per-lane arrays; lane ``l`` solves against
@@ -331,7 +349,8 @@ def pcg_fleet_init(fa: FleetArrays, fidx, B, tol, maxiter, *,
 
 
 def _pcg_fleet_body(fa: FleetArrays, *, f_levels: int, b_levels: int,
-                    kind: str = "factor", project: bool, interpret: bool):
+                    kind: str = "factor", project: bool,
+                    interpret: Optional[bool] = None):
     """One frozen-lane fleet PCG iteration as a pure
     ``FleetPCGState -> FleetPCGState`` closure over the **traced** fleet
     arrays — the factor-as-data restatement of ``_pcg_batched_body``.
@@ -348,7 +367,7 @@ def _pcg_fleet_body(fa: FleetArrays, *, f_levels: int, b_levels: int,
         Rn = s.R - alpha[:, None] * AP
         Zn = fleet_precondition(fa, s.fidx, Rn, f_levels=f_levels,
                                 b_levels=b_levels, kind=kind,
-                                interpret=interpret)
+                                interpret=interpret, active=s.active)
         if project:
             Zn = _fleet_project(Zn, nvalid)
         rz_new = jnp.sum(Rn * Zn, axis=1)
@@ -374,7 +393,7 @@ def _pcg_fleet_body(fa: FleetArrays, *, f_levels: int, b_levels: int,
 def pcg_fleet_step(fa: FleetArrays, state: FleetPCGState, *, k: int,
                    f_levels: int, b_levels: int, kind: str = "factor",
                    project: bool = True,
-                   interpret: bool = True) -> FleetPCGState:
+                   interpret: Optional[bool] = None) -> FleetPCGState:
     """Advance every active lane by up to ``k`` iterations (early exit
     when all lanes freeze).  Step slicing is exact, as in
     ``pcg_batched_step``."""
@@ -396,7 +415,7 @@ def pcg_fleet_step(fa: FleetArrays, state: FleetPCGState, *, k: int,
 def pcg_fleet_solve(fa: FleetArrays, fidx, B, tol, maxiter, *,
                     f_levels: int, b_levels: int, kind: str = "factor",
                     project: bool = True,
-                    interpret: bool = True) -> FleetPCGState:
+                    interpret: Optional[bool] = None) -> FleetPCGState:
     """One-shot fleet solve: init then iterate until every lane freezes.
     Runs the same body as ``pcg_fleet_step``, so an engine slicing the
     same solve into ticks takes bit-identical per-lane iterates."""

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import heapq
 import time
 import weakref
 from collections import OrderedDict
@@ -46,6 +47,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.runtime import pad_k
 from .laplacian import Graph
 from .ref_ac import ACFactor, DeviceFactor
 from .parac import factorize_wavefront, factorize_batched, _next_pow2
@@ -244,36 +246,49 @@ class _PaddedFactor:
 
 class FactorFleet:
     """Stacked, bucket-padded device preconditioners for one
-    ``(family, shape-bucket)`` (``n_pad = pow2(n)``), plus the row
-    bookkeeping that lets handles come and go.  ``kind`` is the fleet's
-    static apply program (``"factor"`` trisolves / ``"spmv"``); a fleet
-    never mixes kinds, so every member shares one compiled step
-    program.
+    ``(family, shape-bucket, K-tier)`` (``n_pad = pow2(n)``; ``k_tier``
+    the padded panel-width tier — see :meth:`FactorCache` K-tiering),
+    plus the row bookkeeping that lets handles come and go.  ``kind`` is
+    the fleet's static apply program (``"factor"`` trisolves /
+    ``"spmv"``); a fleet never mixes kinds, so every member shares one
+    compiled step program.  Sub-bucketing by K-tier keeps one hub-heavy
+    factor (huge in-degree ⇒ wide trisolve panels) from inflating every
+    bucket-mate's ``(n_pad, K)`` sweep to its width.
 
     ``arrays`` is the live :class:`pcg.FleetArrays` stack — the traced
     factor argument of every fleet PCG program.  Rows are claimed by
     weak reference: a row frees itself when its owning handle dies (an
     engine pinning an evicted handle keeps the row alive through the
-    same reference), and admission reuses dead rows before growing the
+    same reference) — the weakref callback pushes the row onto an O(1)
+    free-heap — and admission reuses dead rows before growing the
     stack, so fleet memory is bounded by the peak number of *live*
     handles in the bucket, not by churn.  Growth along any axis
     (capacity, ``m_pad``, panel width ``K``) zero-pads — padding edges
     carry zero weight and padded panel slots zero values, so existing
-    members' solves are unchanged.
+    members' solves are unchanged.  :meth:`compact` is the inverse:
+    it rebuilds the stack to the live rows so long-lived caches'
+    ``fleet_device_bytes`` tracks live factors, not the high-water
+    mark; every compaction bumps ``generation`` so engines holding
+    device-resident lane state can re-sync their row indices.
     """
 
     def __init__(self, n_pad: int, family: str = "ac",
-                 kind: str = "factor"):
+                 kind: str = "factor", k_tier: int = 0):
         self.n_pad = n_pad
         self.family = family
         self.kind = kind
+        self.k_tier = k_tier       # padded panel-width tier (0 = untiered)
         self.m_pad = 1
         self.Kf = 1
         self.Kb = 1
         self.f_levels = 1          # bucket-wide static level bounds
         self.b_levels = 1
+        self.generation = 0        # bumped by compact(): row indices moved
+        self.compactions = 0
         self.arrays: Optional[FleetArrays] = None
         self._rows: List[Optional[weakref.ref]] = []
+        self._free: List[int] = []              # min-heap of dead rows
+        self._ref2row: Dict[weakref.ref, int] = {}
 
     @property
     def capacity(self) -> int:
@@ -286,9 +301,9 @@ class FactorFleet:
     @property
     def free_rows(self) -> int:
         """Rows admittable without growing the stack: dead rows awaiting
-        reuse plus pow2 capacity slack past the current end."""
-        dead = sum(r is None or r() is None for r in self._rows)
-        return dead + max(self.capacity - len(self._rows), 0)
+        reuse (the free-heap) plus pow2 capacity slack past the current
+        end."""
+        return len(self._free) + max(self.capacity - len(self._rows), 0)
 
     @property
     def bytes_per_row(self) -> int:
@@ -307,15 +322,27 @@ class FactorFleet:
         return 0 if self.arrays is None else \
             sum(int(x.nbytes) for x in self.arrays)
 
+    def _row_died(self, ref: weakref.ref) -> None:
+        """Weakref callback: the handle owning ``ref``'s row was
+        collected — recycle the row onto the free-heap.  Refs retired by
+        a :meth:`compact` are no longer in ``_ref2row`` and fall
+        through harmlessly."""
+        row = self._ref2row.pop(ref, None)
+        if row is not None and row < len(self._rows) \
+                and self._rows[row] is ref:
+            self._rows[row] = None
+            heapq.heappush(self._free, row)
+
     def _free_rows(self, k: int) -> List[int]:
-        """Claim ``k`` distinct rows: dead rows (ascending) first, then
-        fresh rows past the current end.  Ascending by construction."""
+        """Claim ``k`` distinct rows: recycled dead rows (ascending —
+        heap pops) first, then fresh rows past the current end.  Every
+        heap row precedes every fresh row, so the result is ascending by
+        construction.  O(k log F) amortized — the old linear scan over
+        the whole row list paid O(F) per admission once churn left dead
+        rows scattered through a large stack."""
         rows: List[int] = []
-        for i, r in enumerate(self._rows):
-            if len(rows) == k:
-                break
-            if r is None or r() is None:
-                rows.append(i)
+        while len(rows) < k and self._free:
+            rows.append(heapq.heappop(self._free))
         nxt = len(self._rows)
         while len(rows) < k:
             rows.append(nxt)
@@ -363,7 +390,9 @@ class FactorFleet:
                     bvals=jnp.zeros((F, np_, Kb), pf0.bwd.vals.dtype),
                     blevel=jnp.zeros((F, np_), jnp.int32),
                     dinv=jnp.zeros((F, np_), pf0.dinv.dtype),
-                    nvalid=jnp.zeros((F,), jnp.int32))
+                    nvalid=jnp.zeros((F,), jnp.int32),
+                    fnlv=jnp.ones((F,), jnp.int32),
+                    bnlv=jnp.ones((F,), jnp.int32))
             else:
                 a = FleetArrays(
                     src=_grow(a.src, (F, m_pad)),
@@ -376,7 +405,9 @@ class FactorFleet:
                     bvals=_grow(a.bvals, (F, np_, Kb)),
                     blevel=_grow(a.blevel, (F, np_)),
                     dinv=_grow(a.dinv, (F, np_)),
-                    nvalid=_grow(a.nvalid, (F,)))
+                    nvalid=_grow(a.nvalid, (F,)),
+                    fnlv=jnp.maximum(_grow(a.fnlv, (F,)), 1),
+                    bnlv=jnp.maximum(_grow(a.bnlv, (F,)), 1))
             ix = jnp.asarray(np.asarray(rows, np.int32))
             self.arrays = FleetArrays(
                 src=a.src.at[ix].set(jnp.stack(
@@ -400,19 +431,66 @@ class FactorFleet:
                 dinv=a.dinv.at[ix].set(jnp.stack(
                     [pf.dinv for _, pf in pairs])),
                 nvalid=a.nvalid.at[ix].set(jnp.asarray(
-                    [pf.n for _, pf in pairs], jnp.int32)))
+                    [pf.n for _, pf in pairs], jnp.int32)),
+                fnlv=a.fnlv.at[ix].set(jnp.asarray(
+                    [pf.fwd.n_levels for _, pf in pairs], jnp.int32)),
+                bnlv=a.bnlv.at[ix].set(jnp.asarray(
+                    [pf.bwd.n_levels for _, pf in pairs], jnp.int32)))
         self.m_pad, self.Kf, self.Kb = m_pad, Kf, Kb
         self.f_levels = max(self.f_levels,
                             *(pf.fwd.n_levels for _, pf in pairs))
         self.b_levels = max(self.b_levels,
                             *(pf.bwd.n_levels for _, pf in pairs))
         for (handle, _), row in zip(pairs, rows):
-            ref = weakref.ref(handle)
+            ref = weakref.ref(handle, self._row_died)
+            self._ref2row[ref] = row
             if row == len(self._rows):     # rows ascending: appends in order
                 self._rows.append(ref)
             else:
                 self._rows[row] = ref
         return rows
+
+    def compact(self) -> int:
+        """Rebuild the stack to its live rows: one gather per fleet
+        array down to the live set, capacity re-padded to
+        ``pow2(live)``.  Live handles' ``fleet_row`` indices are
+        rewritten in place (their strong refs are held for the duration,
+        so no row dies mid-rebuild) and ``generation`` is bumped so an
+        engine holding device-resident lane state keyed by old row
+        indices re-scatters its ``fidx`` before the next step.  Row
+        *contents* are copied verbatim, so every live handle's solve is
+        bit-identical before and after.  Returns the number of freed
+        stack rows (0 when the stack is already at its pow2 floor)."""
+        if self.arrays is None:
+            return 0
+        live: List[Tuple[int, "PreconditionerHandle"]] = []
+        for i, r in enumerate(self._rows):
+            h = r() if r is not None else None
+            if h is not None:
+                live.append((i, h))
+        old_cap = self.capacity
+        new_cap = max(_next_pow2(len(live)), 1)
+        if new_cap >= old_cap:
+            return 0
+        old_idx = np.fromiter((i for i, _ in live), np.int32,
+                              count=len(live))
+        with jax.ensure_compile_time_eval():
+            ix = jnp.asarray(old_idx)
+            self.arrays = FleetArrays(*(
+                _grow(x[ix], (new_cap,) + tuple(x.shape[1:]))
+                for x in self.arrays))
+        freed = old_cap - new_cap
+        self._ref2row.clear()               # retire old refs (callbacks
+        self._free = []                     # on them become no-ops)
+        self._rows = []
+        for new_row, (_, h) in enumerate(live):
+            h.fleet_row = new_row
+            ref = weakref.ref(h, self._row_died)
+            self._ref2row[ref] = new_row
+            self._rows.append(ref)
+        self.generation += 1
+        self.compactions += 1
+        return freed
 
 
 @dataclasses.dataclass(eq=False)
@@ -538,14 +616,17 @@ class PreconditionerHandle:
                 self._cache.popitem(last=False)
         else:
             self._cache.move_to_end(key)
-        return fn(B, self.fleet.arrays)
+        return fn(B, self.fleet.arrays, jnp.int32(self.fleet_row))
 
     def _build_solve(self, ndim: int, tol: float, maxiter: int,
                      project: bool, f_levels: int, b_levels: int,
                      kind: str = "factor"):
-        n, n_pad, row = self.n, self.n_pad, self.fleet_row
+        # the fleet row rides in as a traced argument, not a closure
+        # constant: a fleet compaction may move this handle to a new row
+        # at any time, and the cached compiled solve must follow it
+        n, n_pad = self.n, self.n_pad
 
-        def run(B, fa):
+        def run(B, fa, row):
             B2 = B if ndim == 2 else B[None]
             L = B2.shape[0]
             Bp = jnp.zeros((L, n_pad), B2.dtype).at[:, :n].set(B2)
@@ -597,6 +678,8 @@ class FactorCache:
                  max_cached_solves: int = 16,
                  ttl_s: Optional[float] = None,
                  max_age_ticks: Optional[int] = None,
+                 k_tiering: bool = True,
+                 compact_threshold: Optional[float] = 0.5,
                  clock: Optional[Callable[[], float]] = None):
         self.chunk = chunk
         self.fill_slack = fill_slack
@@ -608,6 +691,14 @@ class FactorCache:
         self.max_cached_solves = max_cached_solves
         self.ttl_s = ttl_s
         self.max_age_ticks = max_age_ticks
+        # K-tiering sub-buckets fleets by padded panel width so a
+        # hub-heavy member can't inflate narrow bucket-mates' panels;
+        # False collapses every width into tier 0 (the pre-tiering
+        # layout — kept for A/B benchmarking of the padding tax)
+        self.k_tiering = k_tiering
+        # compact a fleet when free_rows/capacity reaches this after an
+        # eviction/expiry sweep (None = never compact)
+        self.compact_threshold = compact_threshold
         self._clock = clock if clock is not None else time.monotonic
         self.now_ticks = 0
         # one-way latch: True once any handle was admitted/refreshed
@@ -616,14 +707,15 @@ class FactorCache:
         self._has_mortal = False
         self._handles: "OrderedDict[str, PreconditionerHandle]" = \
             OrderedDict()
-        # family-heterogeneous: one fleet per (family, shape bucket) —
-        # families never share a stack, so each keeps its own compiled
-        # step program and its own per-row memory accounting
-        self._fleets: Dict[Tuple[str, int], FactorFleet] = {}
+        # family-heterogeneous: one fleet per (family, shape bucket,
+        # K-tier) — families never share a stack, so each keeps its own
+        # compiled step program and its own per-row memory accounting
+        self._fleets: Dict[Tuple[str, int, int], FactorFleet] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.expirations = 0
+        self.compactions = 0
 
     # -- staleness ----------------------------------------------------------
     def advance_ticks(self, k: int = 1) -> None:
@@ -666,7 +758,36 @@ class FactorCache:
         for gid in stale:
             del self._handles[gid]
             self.expirations += 1
+        if stale:
+            self._maybe_compact()
         return len(stale)
+
+    def _maybe_compact(self) -> int:
+        """Compact every fleet whose dead-row fraction crossed
+        ``compact_threshold`` (called after evictions/expiries).
+        Returns how many fleets were compacted."""
+        if self.compact_threshold is None:
+            return 0
+        done = 0
+        for fleet in self._fleets.values():
+            cap = fleet.capacity
+            if cap and fleet.free_rows / cap >= self.compact_threshold:
+                if fleet.compact():
+                    self.compactions += 1
+                    done += 1
+        return done
+
+    def compact(self) -> int:
+        """Unconditionally compact every fleet to its live rows
+        (threshold ignored — the automatic trigger only fires on
+        eviction/expiry sweeps, which can miss rows whose last external
+        reference died later).  Returns how many fleets shrank."""
+        done = 0
+        for fleet in self._fleets.values():
+            if fleet.compact():
+                self.compactions += 1
+                done += 1
+        return done
 
     # -- admission ----------------------------------------------------------
     def factor(self, g: Graph, key: jax.Array, *,
@@ -817,11 +938,15 @@ class FactorCache:
                     schedules = build_schedules_batched([dev])[0]
                 fwd, bwd = schedules
                 pf = _PaddedFactor(g, dev, fwd, bwd)
-            fkey = (family, pf.n_pad)
+            # pow2 K-tier on the padded panel width (max of both panel
+            # sets — the tier must cover whichever trisolve is wider);
+            # tier 0 = tiering disabled, one fleet per (family, n_pad)
+            k_tier = pad_k(max(fwd.K, bwd.K)) if self.k_tiering else 0
+            fkey = (family, pf.n_pad, k_tier)
             fleet = self._fleets.get(fkey)
             if fleet is None:
                 fleet = self._fleets[fkey] = FactorFleet(
-                    pf.n_pad, family=family, kind=fam.kind)
+                    pf.n_pad, family=family, kind=fam.kind, k_tier=k_tier)
             handle = PreconditionerHandle(
                 graph=g, factor=f, fleet=fleet, fleet_row=-1,
                 n_levels_fwd=fwd.n_levels, n_levels_bwd=bwd.n_levels,
@@ -833,11 +958,11 @@ class FactorCache:
                                if max_age_ticks is _UNSET
                                else max_age_ticks))
             built.append((fleet, handle, pf, gid))
-        by_fleet: Dict[Tuple[str, int],
+        by_fleet: Dict[Tuple[str, int, int],
                        List[Tuple[PreconditionerHandle,
                                   _PaddedFactor]]] = {}
         for fleet, handle, pf, _ in built:
-            by_fleet.setdefault((fleet.family, fleet.n_pad),
+            by_fleet.setdefault((fleet.family, fleet.n_pad, fleet.k_tier),
                                 []).append((handle, pf))
         for fkey, pairs in by_fleet.items():
             rows = self._fleets[fkey].admit_many(pairs)
@@ -856,6 +981,7 @@ class FactorCache:
     def _shrink(self):
         """Evict LRU handles until budget/count bounds hold (the newest
         handle always survives)."""
+        evicted = False
         while len(self._handles) > 1 and (
                 (self.max_handles is not None
                  and len(self._handles) > self.max_handles)
@@ -863,6 +989,9 @@ class FactorCache:
                     and self.device_bytes > self.memory_budget_bytes)):
             self._handles.popitem(last=False)
             self.evictions += 1
+            evicted = True
+        if evicted:
+            self._maybe_compact()
 
     # -- lookup / routing ---------------------------------------------------
     def peek(self, graph_id: str) -> Optional[FactorHandle]:
@@ -929,13 +1058,15 @@ class FactorCache:
         return sum(h.device_bytes for h in self._handles.values())
 
     @property
-    def fleets(self) -> Dict[Tuple[str, int], FactorFleet]:
-        """Live fleets keyed by ``(family, n_pad)`` (read-only view)."""
+    def fleets(self) -> Dict[Tuple[str, int, int], FactorFleet]:
+        """Live fleets keyed by ``(family, n_pad, k_tier)`` (read-only
+        view)."""
         return dict(self._fleets)
 
     def evict(self, graph_id: str) -> None:
         if self._handles.pop(graph_id, None) is not None:
             self.evictions += 1
+            self._maybe_compact()
 
     def clear(self) -> None:
         self._handles.clear()
@@ -944,29 +1075,39 @@ class FactorCache:
         """Cache counters plus per-family memory accounting.
 
         Returns:
-            Dict with hit/miss/eviction counters, total and per-family
-            ``device_bytes`` (``device_bytes_by_family`` /
-            ``handles_by_family``), and the grow-only fleet-stack
-            footprint (``fleet_device_bytes``, also split by family).
+            Dict with hit/miss/eviction/``compactions`` counters, total
+            and per-family ``device_bytes`` (``device_bytes_by_family``
+            / ``handles_by_family``), the fleet-stack footprint
+            (``fleet_device_bytes``, also split by family) and the live
+            floor it compacts toward (``fleet_live_bytes`` = live rows
+            × per-row bytes — the CI memory invariant compares the
+            two).
         """
+        # snapshot with list() (GIL-atomic copies): cluster telemetry
+        # reads these from router threads while the driver may admit
+        handles = list(self._handles.values())
+        fleet_items = list(self._fleets.items())
         by_family_bytes: Dict[str, int] = {}
         by_family_handles: Dict[str, int] = {}
-        for h in self._handles.values():
+        for h in handles:
             by_family_bytes[h.family] = \
                 by_family_bytes.get(h.family, 0) + h.device_bytes
             by_family_handles[h.family] = \
                 by_family_handles.get(h.family, 0) + 1
         fleet_by_family: Dict[str, int] = {}
-        for (family, _), f in self._fleets.items():
+        for (family, _, _), f in fleet_items:
             fleet_by_family[family] = \
                 fleet_by_family.get(family, 0) + f.device_bytes
-        return dict(handles=len(self._handles), hits=self.hits,
+        return dict(handles=len(handles), hits=self.hits,
                     misses=self.misses, evictions=self.evictions,
                     expirations=self.expirations,
-                    fleets=len(self._fleets),
-                    device_bytes=self.device_bytes,
+                    compactions=self.compactions,
+                    fleets=len(fleet_items),
+                    device_bytes=sum(h.device_bytes for h in handles),
                     fleet_device_bytes=sum(f.device_bytes
-                                           for f in self._fleets.values()),
+                                           for _, f in fleet_items),
+                    fleet_live_bytes=sum(f.live_rows * f.bytes_per_row
+                                         for _, f in fleet_items),
                     handles_by_family=by_family_handles,
                     device_bytes_by_family=by_family_bytes,
                     fleet_device_bytes_by_family=fleet_by_family)

@@ -1,18 +1,20 @@
 """Jit'd public wrappers around the Pallas kernels: padding, layout
 conversion, and level-scheduled triangular solve built on the SpMV
-kernel.  ``interpret=True`` everywhere on CPU (the container target);
-on TPU hardware the same calls lower natively.
+kernel.  ``interpret=None`` everywhere: the mode is resolved per
+process by :mod:`repro.kernels.runtime` (``REPRO_PALLAS_INTERPRET``
+env override, else interpret on CPU and native on GPU/TPU backends).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from .sample_clique import sample_clique_pallas, INVALID_ID
+from .runtime import resolve_interpret
 from .spmv import (ell_spmv_pallas, ell_spmv_multi_pallas,
                    ell_spmv_fleet_pallas)
 from . import ref as kref
@@ -23,10 +25,11 @@ def _next_pow2(x: int) -> int:
 
 
 @partial(jax.jit, static_argnames=("interpret", "block_rows"))
-def sample_clique(ids, ws, fill, u, *, interpret: bool = True,
+def sample_clique(ids, ws, fill, u, *, interpret: Optional[bool] = None,
                   block_rows: int = 8):
     """Batched vertex elimination.  ids/ws/u: [R, W]; fill: [R].
     Pads W to a power of two and dispatches to the Pallas kernel."""
+    interpret = resolve_interpret(interpret)
     R, W = ids.shape
     W2 = max(_next_pow2(W), 2)
     if W2 != W:
@@ -39,12 +42,12 @@ def sample_clique(ids, ws, fill, u, *, interpret: bool = True,
 
 
 @partial(jax.jit, static_argnames=("interpret",))
-def ell_spmv(cols, vals, x, *, interpret: bool = True):
+def ell_spmv(cols, vals, x, *, interpret: Optional[bool] = None):
     return ell_spmv_pallas(cols, vals, x, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
-def ell_spmv_multi(cols, vals, x, *, interpret: bool = True):
+def ell_spmv_multi(cols, vals, x, *, interpret: Optional[bool] = None):
     """Multi-rhs ELL SpMV; x: [n, B] → y: [R, B]."""
     return ell_spmv_multi_pallas(cols, vals, x, interpret=interpret)
 
@@ -107,7 +110,7 @@ def schedule_to_ell(sched) -> Tuple[np.ndarray, ...]:
 
 
 def trisolve_levels(level_rows, level_cols, level_vals, b, flip: bool = False,
-                    interpret: bool = True):
+                    interpret: Optional[bool] = None):
     """Level-scheduled unit-triangular solve driven by the SpMV kernel."""
     y = jnp.asarray(b[::-1] if flip else b)
     for rows, cols, vals in zip(level_rows, level_cols, level_vals):
@@ -119,13 +122,13 @@ def trisolve_levels(level_rows, level_cols, level_vals, b, flip: bool = False,
 
 
 @partial(jax.jit, static_argnames=("interpret",))
-def ell_spmv_fleet(cols, vals, x, *, interpret: bool = True):
+def ell_spmv_fleet(cols, vals, x, *, interpret: Optional[bool] = None):
     """Lane-batched ELL SpMV; cols/vals: [L, R, K], x: [L, n] → [L, R]."""
     return ell_spmv_fleet_pallas(cols, vals, x, interpret=interpret)
 
 
 def trisolve_masked(cols, vals, level_of, y, *, n_levels: int,
-                    interpret: bool = True):
+                    interpret: Optional[bool] = None):
     """Level-masked unit-triangular solve with **traced** panel arguments.
 
     ``cols``/``vals`` are row-indexed ELL panels ``(n, K)`` (row ``i``'s
@@ -147,20 +150,43 @@ def trisolve_masked(cols, vals, level_of, y, *, n_levels: int,
 
 
 def trisolve_fleet(cols, vals, level_of, y, *, n_levels: int,
-                   interpret: bool = True):
+                   interpret: Optional[bool] = None, lane_levels=None):
     """Lane-batched ``trisolve_masked``: cols/vals ``(L, n, K)``,
     ``level_of`` ``(L, n)``, ``y`` ``(L, n)`` — each lane solves against
     its own panels (gathered from a stacked factor fleet by the caller).
-    The level loop is shared; a lane whose factor has fewer levels than
-    the static bound simply stops selecting rows early."""
-    def body(lv, y):
+
+    ``n_levels`` is the static bucket-wide ceiling.  ``lane_levels``
+    (optional, ``(L,)`` int32, traced) carries each lane's *true* level
+    count: when given, the loop runs a ``while_loop`` bounded by the
+    batch's live maximum instead of a ``fori_loop`` to the ceiling, so
+    sweeps past every live lane's depth are never launched.  Bit-exact
+    either way: a level ``lv >= lane_levels[l]`` selects no rows of lane
+    ``l`` (``level_of`` never reaches it), so skipping it only removes
+    no-op sweeps."""
+    def sweep(lv, y):
         contrib = ell_spmv_fleet(cols, vals, y, interpret=interpret)
         return jnp.where(level_of == lv, y - contrib, y)
 
-    return jax.lax.fori_loop(1, n_levels, body, y)
+    if lane_levels is None:
+        return jax.lax.fori_loop(1, n_levels, sweep, y)
+
+    bound = jnp.minimum(jnp.max(lane_levels).astype(jnp.int32),
+                        jnp.int32(n_levels))
+
+    def cond(carry):
+        lv, _ = carry
+        return lv < bound
+
+    def body(carry):
+        lv, y = carry
+        return lv + jnp.int32(1), sweep(lv, y)
+
+    _, y = jax.lax.while_loop(cond, body, (jnp.int32(1), y))
+    return y
 
 
-def trisolve_panels(sched, b, flip: bool = False, interpret: bool = True):
+def trisolve_panels(sched, b, flip: bool = False,
+                    interpret: Optional[bool] = None):
     """Unit-triangular solve over a ``trisolve.DeviceSchedule``'s ELL
     panels, driven by the Pallas SpMV kernels — the device-built panels
     are consumed as-is (same (rows, K) tiles, no repacking).  ``b`` may

@@ -1,0 +1,100 @@
+"""Kernel runtime policy: one place that decides how Pallas kernels
+lower (interpret vs native) and how panel widths pad.
+
+Every kernel entry point used to hard-code ``interpret: bool = True`` —
+correct for the CPU container the repo grew up in, but it meant a real
+GPU/TPU run silently interpreted every kernel unless each call site was
+patched.  The resolver inverts that: call sites default ``interpret=None``
+and the leaves ask :func:`resolve_interpret`, which honours (in order)
+
+1. an explicit ``interpret=`` argument (tests pin behaviour this way),
+2. the ``REPRO_PALLAS_INTERPRET`` environment variable
+   (``1/true/yes/on`` force interpret, ``0/false/no/off`` force native),
+3. the backend: native on real accelerators (``gpu``/``tpu``/``cuda``/
+   ``rocm``), interpret on CPU.
+
+``pad_k`` is the companion policy for ELL panel widths: on interpret/CPU
+runs the historical power-of-two rounding is kept (cheap, and what every
+existing schedule builder produced); when lowering natively the width is
+rounded up to a lane-friendly multiple (``REPRO_PALLAS_LANE``, default
+128 — the TPU lane count and a warp-coalescing-friendly GPU stride) so
+``(Rb, K)`` value/index tiles land on (8, 128)-aligned shapes.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+_TRUTHY = frozenset({"1", "true", "yes", "on"})
+_FALSY = frozenset({"0", "false", "no", "off"})
+
+# resolved lazily and cached: jax.default_backend() initializes the
+# backend, which we don't want at import time
+_cached_default: Optional[bool] = None
+
+
+def _env_interpret() -> Optional[bool]:
+    raw = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if raw is None:
+        return None
+    v = raw.strip().lower()
+    if v in _TRUTHY:
+        return True
+    if v in _FALSY:
+        return False
+    raise ValueError(
+        f"REPRO_PALLAS_INTERPRET={raw!r}: expected one of "
+        f"{sorted(_TRUTHY | _FALSY)}")
+
+
+def default_interpret() -> bool:
+    """The process-wide interpret default (env override, else backend)."""
+    global _cached_default
+    if _cached_default is None:
+        env = _env_interpret()
+        if env is not None:
+            _cached_default = env
+        else:
+            _cached_default = jax.default_backend() not in (
+                "gpu", "tpu", "cuda", "rocm")
+    return _cached_default
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve an ``interpret=`` argument: explicit value wins, else the
+    cached process default (env var, else backend autodetect)."""
+    if interpret is not None:
+        return bool(interpret)
+    return default_interpret()
+
+
+def refresh() -> None:
+    """Drop the cached default (tests that mutate the env call this)."""
+    global _cached_default
+    _cached_default = None
+
+
+def lane_multiple() -> int:
+    """Panel-width quantum for native lowering (``REPRO_PALLAS_LANE``)."""
+    return int(os.environ.get("REPRO_PALLAS_LANE", "128"))
+
+
+def _next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+def pad_k(k: int) -> int:
+    """Pad an ELL panel width to the runtime's tiling policy.
+
+    Interpret runs keep power-of-two rounding (matches every schedule
+    the repo has ever built, so interpret-mode goldens are unchanged);
+    native runs round up to the lane multiple so the trailing dimension
+    of ``(rows, K)`` tiles is lane-aligned.
+    """
+    k = max(int(k), 1)
+    if default_interpret():
+        return _next_pow2(k)
+    lane = lane_multiple()
+    return max(((k + lane - 1) // lane) * lane, lane)

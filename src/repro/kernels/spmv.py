@@ -19,9 +19,13 @@ dynamic-slice loops (small K) — noted in DESIGN.md §7.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .runtime import resolve_interpret
 
 
 def _spmv_kernel(cols_ref, vals_ref, x_ref, y_ref):
@@ -33,16 +37,27 @@ def _spmv_kernel(cols_ref, vals_ref, x_ref, y_ref):
 
 
 def _pick_block_rows(R: int, block_rows: int) -> int:
-    """Largest divisor of R that is ≤ block_rows (grid must tile R)."""
-    Rb = max(1, min(block_rows, R))
+    """Largest divisor of R that is ≤ block_rows (grid must tile R),
+    preferring sublane multiples of 8 so fp32 row tiles land on the
+    (8, 128) TPU tile grid.  Power-of-two ``R`` (the fleet's bucket
+    shapes) picks the same value either way; ragged ``R`` only falls
+    back to a non-multiple-of-8 divisor when no aligned one exists."""
+    cap = max(1, min(block_rows, R))
+    aligned = cap - cap % 8
+    while aligned >= 8:
+        if R % aligned == 0:
+            return aligned
+        aligned -= 8
+    Rb = cap
     while R % Rb:
         Rb -= 1
     return Rb
 
 
 def ell_spmv_pallas(cols, vals, x, *, block_rows: int = 256,
-                    interpret: bool = True):
+                    interpret: Optional[bool] = None):
     """y[i] = Σ_k vals[i,k] · x[cols[i,k]].  cols/vals: [R, K]; x: [n]."""
+    interpret = resolve_interpret(interpret)
     R, K = cols.shape
     n = x.shape[0]
     Rb = _pick_block_rows(R, block_rows)
@@ -68,7 +83,7 @@ def _spmv_fleet_kernel(cols_ref, vals_ref, x_ref, y_ref):
 
 
 def ell_spmv_fleet_pallas(cols, vals, x, *, block_rows: int = 256,
-                          interpret: bool = True):
+                          interpret: Optional[bool] = None):
     """Lane-batched ELL SpMV: Y[l, i] = Σ_k vals[l,i,k] · x[l, cols[l,i,k]].
 
     cols/vals: [L, R, K]; x: [L, n].  Every lane carries its *own* panel
@@ -81,6 +96,7 @@ def ell_spmv_fleet_pallas(cols, vals, x, *, block_rows: int = 256,
     per-tile math to ``ell_spmv_pallas``, so a lane's result does not
     depend on how many lanes share the batch.
     """
+    interpret = resolve_interpret(interpret)
     L, R, K = cols.shape
     n = x.shape[1]
     Rb = _pick_block_rows(R, block_rows)
@@ -106,7 +122,7 @@ def _spmv_multi_kernel(cols_ref, vals_ref, x_ref, y_ref):
 
 
 def ell_spmv_multi_pallas(cols, vals, x, *, block_rows: int = 256,
-                          interpret: bool = True):
+                          interpret: Optional[bool] = None):
     """Multi-rhs ELL SpMV: Y[i, b] = Σ_k vals[i,k] · x[cols[i,k], b].
 
     cols/vals: [R, K]; x: [n, B].  One kernel pass serves the whole rhs
@@ -115,6 +131,7 @@ def ell_spmv_multi_pallas(cols, vals, x, *, block_rows: int = 256,
     systems.  Bandwidth per row is amortized: the (Rb, K) index/value
     tiles are read once for all B columns.
     """
+    interpret = resolve_interpret(interpret)
     R, K = cols.shape
     n, B = x.shape
     Rb = _pick_block_rows(R, block_rows)

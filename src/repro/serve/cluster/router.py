@@ -707,7 +707,8 @@ class SolveCluster:
                 load=rep.load, placements=live_on(rep.index),
                 routed=r.routed_per[rep.index],
                 rejections=r.rejections_per[rep.index],
-                frontend=rep.frontend.stats()) for rep in self.replicas]
+                frontend=rep.frontend.stats(),
+                cache=rep.cache.stats()) for rep in self.replicas]
             hot = sum(1 for pl in r.placements.values()
                       if sum(1 for i, v in pl.items()
                              if v is None and i in alive_idx) >= 2)

@@ -24,7 +24,11 @@ from repro.serve.frontend import FrontendStats
 class ReplicaStats:
     """One replica's view: router-side counters (``routed``,
     ``rejections`` — overload errors the *router* observed submitting
-    here) next to the replica's own frontend/engine counters."""
+    here) next to the replica's own frontend/engine counters and its
+    private :meth:`~repro.core.solver.FactorCache.stats` snapshot
+    (``cache`` — hit/miss/eviction/compaction counters and the
+    fleet-stack memory accounting, so a fleet operator sees
+    ``fleet_device_bytes`` track live factors across compactions)."""
 
     index: int
     healthy: bool
@@ -34,6 +38,7 @@ class ReplicaStats:
     routed: int          # requests the router sent here
     rejections: int      # EngineOverloadedError seen routing here
     frontend: FrontendStats
+    cache: Optional[Dict] = None
 
     def as_dict(self) -> Dict:
         # shallow: asdict() would deep-convert the nested frontend and

@@ -22,10 +22,12 @@ with the data-ownership model inverted relative to the PR-2 engine:
   per bucket, with the bucket's stacked factor arrays
   (``FactorCache`` → :class:`FactorFleet` → ``pcg.FleetArrays``) passed
   as **traced arguments** and a per-lane factor index routing each lane
-  to its own factor.  Grouping is by ``(family, shape bucket)``, not
-  factor identity: every preconditioner of one family whose graphs
-  share a pow2 size bucket shares one compiled step program (the
-  family's apply ``kind`` and level bounds are the jit statics);
+  to its own factor.  Grouping is by ``(family, shape bucket, K-tier)``,
+  not factor identity: every preconditioner of one family whose graphs
+  share a pow2 size bucket and panel-width tier shares one compiled
+  step program (the family's apply ``kind`` and level bounds are the
+  jit statics — sub-bucketing by K-tier keeps one hub-heavy factor from
+  inflating every bucket-mate's trisolve panels);
 * lanes whose column converged (or hit maxiter) retire at the end of a
   tick via one jitted **gather** of just the finished columns
   (device→host traffic = retired columns); freed lanes readmit from the
@@ -151,8 +153,8 @@ def make_request(graph_id: str, b, *, rid: int, tol: float = 1e-6,
 class EngineStats:
     """Service-level counters (``SolveEngine.stats()``).  The compile
     counters expose the mega-batching contract: ``step_compiles`` grows
-    per *(family, shape bucket)*, never per factor (``families`` counts
-    the distinct preconditioner families that have served lanes);
+    per *(family, shape bucket, K-tier)*, never per factor (``families``
+    counts the distinct preconditioner families that have served lanes);
     ``cols_in``/``cols_out`` count
     host↔device column transfers, which are O(admitted + retired), never
     O(slots × ticks).
@@ -177,6 +179,16 @@ class EngineStats:
     gather_compiles: int
     cols_in: int
     cols_out: int
+    # -- padding-tax accounting ---------------------------------------------
+    # sweeps_skipped: trisolve level sweeps the dynamic per-lane bounds
+    # elided vs the static bucket ceilings (summed over stepped buckets);
+    # sweep_elements: padded (lanes × n_pad × K × live sweeps) panel
+    # elements swept per apply, the K-tiering figure of merit gated by
+    # check_serve_regression; fleet_resyncs: bucket fidx re-scatters
+    # after a fleet compaction moved row indices
+    sweeps_skipped: int
+    sweep_elements: int
+    fleet_resyncs: int
     # -- scheduler decisions ------------------------------------------------
     policy: str
     max_skips: int
@@ -219,13 +231,16 @@ class _BucketLanes:
     ``active`` flag is True iff this bucket owns the lane and its column
     is still iterating."""
 
-    __slots__ = ("fleet", "state", "n_active")
+    __slots__ = ("fleet", "state", "n_active", "generation")
 
     def __init__(self, fleet: FactorFleet, slots: int):
         n_pad = fleet.n_pad
         Z = jnp.zeros((slots, n_pad), jnp.float32)
         z = jnp.zeros((slots,), jnp.float32)
         self.fleet = fleet
+        # fleet generation this bucket's resident fidx values refer to;
+        # a compaction bumps the fleet's and the engine re-scatters
+        self.generation = fleet.generation
         self.state = FleetPCGState(
             X=Z, R=Z, Z=Z, P=Z, rz=z,
             it=jnp.zeros((slots,), jnp.int32),
@@ -285,6 +300,15 @@ def _evict_program(state: FleetPCGState, rows):
                                                            mode="drop"))
 
 
+def _sync_program(state: FleetPCGState, rows, fidx):
+    """Rewrite the resident factor indices at ``rows`` (one scatter) —
+    a fleet compaction moved rows, the occupied lanes' handles already
+    carry the new indices.  Padding rows carry ``rows == slots`` and
+    drop.  Only ``fidx`` changes: the PCG carry itself never references
+    fleet rows, so the lanes' trajectories are untouched."""
+    return state._replace(fidx=state.fidx.at[rows].set(fidx, mode="drop"))
+
+
 class SolveEngine:
     """Continuous-batching solve service over a :class:`FactorCache`.
 
@@ -327,16 +351,20 @@ class SolveEngine:
         # submits for a graph that was evicted mid-flight, and is
         # dropped when the graph goes idle.
         self._pinned: Dict[str, FactorHandle] = {}
-        self._buckets: Dict[Tuple[str, int], _BucketLanes] = {}
+        self._buckets: Dict[Tuple[str, int, int], _BucketLanes] = {}
         self.n_completed = 0       # lifetime count (completed is bounded)
         # compile + transfer accounting: the Python bodies below run
         # once per jit specialization (trace time), so the counters
         # count compiled programs; cols_in/cols_out count host↔device
         # column transfers (admitted / retired columns only).
         self.compile_counts = {"step": 0, "admit": 0, "gather": 0,
-                               "evict": 0}
+                               "evict": 0, "sync": 0}
         self.cols_in = 0
         self.cols_out = 0
+        # padding-tax telemetry (see EngineStats)
+        self.sweeps_skipped = 0
+        self.sweep_elements = 0
+        self.fleet_resyncs = 0
 
         counts = self.compile_counts
         k = iters_per_tick
@@ -361,12 +389,17 @@ class SolveEngine:
             counts["evict"] += 1
             return _evict_program(state, rows)
 
+        def sync(state, rows, fidx):
+            counts["sync"] += 1
+            return _sync_program(state, rows, fidx)
+
         self._admit_fn = jax.jit(
             admit, static_argnames=("f_levels", "b_levels", "kind"))
         self._step_fn = jax.jit(
             step, static_argnames=("f_levels", "b_levels", "kind"))
         self._gather_fn = jax.jit(gather)
         self._evict_fn = jax.jit(evict)
+        self._sync_fn = jax.jit(sync)
 
     # -- request lifecycle --------------------------------------------------
     def submit(self, req: SolveRequest) -> None:
@@ -411,15 +444,43 @@ class SolveEngine:
         self.queue_peak = max(self.queue_peak, len(self.queue))
 
     def _bucket(self, fleet: FactorFleet) -> _BucketLanes:
-        """Lane group for one ``(family, shape-bucket)`` fleet.  Keying
-        by family keeps each family on its own compiled step program
-        (the apply ``kind`` and level bounds are jit statics), while
-        every factor *within* a family-bucket still shares one."""
-        key = (fleet.family, fleet.n_pad)
+        """Lane group for one ``(family, shape-bucket, K-tier)`` fleet.
+        Keying by family keeps each family on its own compiled step
+        program (the apply ``kind`` and level bounds are jit statics);
+        keying by K-tier follows the cache's fleet sub-bucketing, so a
+        hub-heavy factor's wide panels never ride in (and so never
+        inflate) a narrow tier's step.  Every factor *within* a
+        family-shape-tier still shares one compiled step."""
+        key = (fleet.family, fleet.n_pad, fleet.k_tier)
         bl = self._buckets.get(key)
         if bl is None:
             bl = self._buckets[key] = _BucketLanes(fleet, self.slots)
         return bl
+
+    def _resync_buckets(self) -> None:
+        """Catch up buckets whose fleet compacted since their resident
+        ``fidx`` values were written: one jitted scatter per affected
+        bucket rewrites occupied lanes' factor indices from their
+        handles (which compaction already updated).  Unoccupied lanes
+        keep stale indices — their ``active`` flags are False, so the
+        masked step discards whatever row they gather."""
+        for bl in self._buckets.values():
+            if bl.generation == bl.fleet.generation:
+                continue
+            occ = [i for i, lane in enumerate(self.lanes)
+                   if lane is not None and lane.bucket is bl]
+            if occ:
+                j = len(occ)
+                jp = _next_pow2(j)
+                rows_a = np.full(jp, self.slots, np.int32)   # pads drop
+                rows_a[:j] = occ
+                fidx = np.zeros(jp, np.int32)
+                fidx[:j] = [self.lanes[i].req._handle.fleet_row
+                            for i in occ]
+                bl.state = self._sync_fn(bl.state, jnp.asarray(rows_a),
+                                         jnp.asarray(fidx))
+            bl.generation = bl.fleet.generation
+            self.fleet_resyncs += 1
 
     def _admit(self) -> None:
         """Scheduler-driven admission: the policy orders the waiting
@@ -490,6 +551,7 @@ class SolveEngine:
         all factors in the bucket ride the same program), retire finished
         lanes.  Returns requests completed this tick."""
         t_tick0 = self._clock()
+        self._resync_buckets()
         self._admit()
         if self.admission.evict_hopeless:
             self._evict_hopeless()
@@ -505,6 +567,7 @@ class SolveEngine:
                     bl.fleet.arrays, bl.state,
                     f_levels=bl.fleet.f_levels, b_levels=bl.fleet.b_levels,
                     kind=bl.fleet.kind)
+                self._account_sweeps(bl, occ)
             active = np.asarray(bl.state.active)   # (slots,) flags only
             frozen = [i for i in occ if not active[i]]
             bl.n_active = int(active[occ].sum())
@@ -524,6 +587,32 @@ class SolveEngine:
         self._est_tick_s = dur if self._est_tick_s == 0.0 else \
             min(self._est_tick_s, dur)
         return done
+
+    def _account_sweeps(self, bl: _BucketLanes, occ: List[int]) -> None:
+        """Host-side mirror of one stepped bucket's trisolve sweep work.
+
+        ``sweep_elements`` counts the padded panel elements one
+        preconditioner apply sweeps across the bucket's occupied lanes —
+        ``lanes × n_pad × (Kf · fwd sweeps + Kb · bwd sweeps)`` for
+        factor kinds (a level loop runs ``live_levels − 1`` sweeps over
+        the full ``(n_pad, K)`` panel), ``lanes × n_pad × Kf`` for spmv
+        kinds.  This is the padding tax K-tiering shrinks: untiered, a
+        hub-heavy bucket-mate inflates ``Kf``/``Kb`` for every lane
+        here.  ``sweeps_skipped`` counts the level sweeps the dynamic
+        per-lane bounds elided vs the static bucket ceilings."""
+        fl = bl.fleet
+        if fl.kind == "factor":
+            live_f = max(self.lanes[i].req._handle.n_levels_fwd
+                         for i in occ)
+            live_b = max(self.lanes[i].req._handle.n_levels_bwd
+                         for i in occ)
+            self.sweeps_skipped += (fl.f_levels - live_f) \
+                + (fl.b_levels - live_b)
+            per_lane = fl.n_pad * (fl.Kf * max(live_f - 1, 0)
+                                   + fl.Kb * max(live_b - 1, 0))
+        else:
+            per_lane = fl.n_pad * fl.Kf
+        self.sweep_elements += len(occ) * per_lane
 
     def _evict_hopeless(self) -> None:
         """Deadline eviction: a lane is *hopeless* once even an
@@ -643,11 +732,14 @@ class SolveEngine:
             ticks=self.ticks, completed=self.n_completed,
             queued=len(self.queue), active_lanes=active, slots=self.slots,
             factors=len(self.cache), buckets=len(self._buckets),
-            families=len({fam for fam, _ in self._buckets}),
+            families=len({fam for fam, _, _ in self._buckets}),
             step_compiles=self.compile_counts["step"],
             admit_compiles=self.compile_counts["admit"],
             gather_compiles=self.compile_counts["gather"],
             cols_in=self.cols_in, cols_out=self.cols_out,
+            sweeps_skipped=self.sweeps_skipped,
+            sweep_elements=self.sweep_elements,
+            fleet_resyncs=self.fleet_resyncs,
             policy=self.admission.name,
             max_skips=self.admission.max_skips,
             admitted_reqs=self.admitted_reqs,

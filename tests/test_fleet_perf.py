@@ -1,0 +1,284 @@
+"""Padding-tax machinery: the kernel runtime resolver (interpret vs
+native, ``pad_k`` tiling), K-tiered fleet bucketing, the fleet row
+free-list, and stack compaction — including bit-identity of solves
+across a compaction and an in-flight engine lane surviving one."""
+import gc
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.solver import FactorCache
+from repro.kernels import runtime
+from repro.serve import SolveEngine, SolveRequest
+from repro.data import graphs
+
+
+def _rhs(rng, n, nrhs=1):
+    b = rng.normal(size=(nrhs, n) if nrhs > 1 else n).astype(np.float32)
+    return b - b.mean(axis=-1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Runtime resolver: env matrix + pad_k tiling policy
+# ---------------------------------------------------------------------------
+
+def test_resolver_env_matrix(monkeypatch):
+    """REPRO_PALLAS_INTERPRET spellings, junk rejection, and the
+    explicit-argument override; cache refreshed around each change."""
+    for raw, want in (("1", True), ("true", True), ("YES", True),
+                      (" on ", True), ("0", False), ("false", False),
+                      ("No", False), ("off", False)):
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", raw)
+        runtime.refresh()
+        assert runtime.default_interpret() is want, raw
+        # explicit argument always wins over the env
+        assert runtime.resolve_interpret(not want) is (not want)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "maybe")
+    runtime.refresh()
+    with pytest.raises(ValueError, match="REPRO_PALLAS_INTERPRET"):
+        runtime.default_interpret()
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+    runtime.refresh()
+    # unset: backend autodetect (this suite runs on CPU → interpret)
+    assert runtime.default_interpret() is (
+        jax.default_backend() not in ("gpu", "tpu", "cuda", "rocm"))
+    runtime.refresh()
+
+
+def test_pad_k_pow2_edges_interpret(monkeypatch):
+    """Interpret-mode tiers are the historical pow2 rounding — exact at
+    powers, bumping one past them."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    runtime.refresh()
+    for k, want in ((1, 1), (2, 2), (3, 4), (4, 4), (5, 8), (8, 8),
+                    (9, 16), (16, 16), (17, 32), (65, 128)):
+        assert runtime.pad_k(k) == want, k
+    assert runtime.pad_k(0) == 1          # degenerate width still pads
+    runtime.refresh()
+
+
+def test_pad_k_lane_multiple_native(monkeypatch):
+    """Native lowering rounds panel widths up to the lane multiple so
+    ``(rows, K)`` tiles stay lane-aligned; ``REPRO_PALLAS_LANE``
+    overrides the quantum."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    runtime.refresh()
+    assert runtime.pad_k(1) == 128
+    assert runtime.pad_k(128) == 128
+    assert runtime.pad_k(129) == 256
+    monkeypatch.setenv("REPRO_PALLAS_LANE", "32")
+    assert runtime.pad_k(1) == 32
+    assert runtime.pad_k(33) == 64
+    runtime.refresh()
+
+
+# ---------------------------------------------------------------------------
+# K-tiered bucketing: fleets split by panel width, engine follows
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mixed_k_suite():
+    """One shape bucket, two panel-width populations: a hub-heavy
+    powerlaw graph (fat ELL panels) and two low-degree graphs."""
+    gs = {"hub": graphs.powerlaw(220, 12, seed=5),
+          "mesh": graphs.grid2d(15, 15, seed=3),
+          "road": graphs.road_like(15, seed=4)}
+    keys = {name: jax.random.key(i) for i, name in enumerate(gs)}
+    return gs, keys
+
+
+def test_k_tier_splits_one_shape_bucket(mixed_k_suite):
+    gs, keys = mixed_k_suite
+    c = FactorCache(strict=False)
+    c.factor_batched(list(gs.values()), [keys[k] for k in gs],
+                     graph_ids=list(gs))
+    fkeys = sorted(c.fleets)
+    assert len({n_pad for _, n_pad, _ in fkeys}) == 1   # one shape bucket
+    tiers = sorted({kt for _, _, kt in fkeys})
+    assert len(tiers) == 2                 # hub split away from low-degree
+    for kt in tiers:                       # pow2 tiers on interpret runs
+        assert kt == runtime._next_pow2(kt)
+    # every fleet's stacked panel width fits (and tightly: re-padding
+    # the widest member reproduces the tier, so no fleet is oversized)
+    for fleet in c.fleets.values():
+        assert max(fleet.Kf, fleet.Kb) <= fleet.k_tier
+        assert runtime.pad_k(max(fleet.Kf, fleet.Kb)) == fleet.k_tier
+    # members of one fleet really share the tier key
+    for gid in gs:
+        h = c.get(gid)
+        assert c.fleets[(h.family, h.n_pad, h.fleet.k_tier)] is h.fleet
+
+
+def test_untiered_cache_merges_and_engine_buckets_follow(mixed_k_suite):
+    """k_tiering=False restores the single merged fleet (tier 0), and
+    the engine compiles one step program per (family, n_pad, K_tier)
+    bucket in both modes — the ``step_compiles == buckets`` invariant
+    under the new key."""
+    gs, keys = mixed_k_suite
+    rng = np.random.default_rng(11)
+    B = {gid: _rhs(rng, g.n) for gid, g in gs.items()}   # shared rhs
+    results = {}
+    for tiering, want_buckets in ((True, 2), (False, 1)):
+        c = FactorCache(strict=False, k_tiering=tiering)
+        c.factor_batched(list(gs.values()), [keys[k] for k in gs],
+                         graph_ids=list(gs))
+        assert len(c.fleets) == want_buckets
+        eng = SolveEngine(c, slots=4, iters_per_tick=8)
+        for rid, gid in enumerate(gs):
+            eng.submit(SolveRequest(rid=rid, graph_id=gid, b=B[gid],
+                                    tol=1e-6, maxiter=300))
+        done = eng.run_until_drained()
+        assert len(done) == 3 and all(r.converged for r in done)
+        st = eng.stats()
+        assert st.buckets == want_buckets
+        assert st.step_compiles == st.buckets
+        assert set(eng._buckets) == set(c.fleets)
+        results[tiering] = {r.rid: np.asarray(r.x) for r in done}
+    # tiering only changes panel padding; the answers agree to solver
+    # tolerance (bit-identity is not guaranteed ACROSS tiers — a wider
+    # zero-padded panel reduces in a different tree shape — the
+    # bit-exact contract is served == direct solve WITHIN a fleet)
+    for rid in results[True]:
+        assert np.allclose(results[True][rid], results[False][rid],
+                           rtol=1e-3, atol=1e-4)
+
+
+def test_tiered_engine_skips_padded_sweeps(mixed_k_suite):
+    """The per-lane level bounds show up in the counters: serving the
+    shallow low-degree graphs skips the sweeps their bucket ceiling
+    would have launched, and the tiered engine does strictly less
+    padded sweep work than the merged fleet on the same requests."""
+    gs, keys = mixed_k_suite
+    rng = np.random.default_rng(12)
+    B = {gid: _rhs(rng, g.n) for gid, g in gs.items()}   # shared rhs
+    elements = {}
+    for tiering in (True, False):
+        c = FactorCache(strict=False, k_tiering=tiering)
+        c.factor_batched(list(gs.values()), [keys[k] for k in gs],
+                         graph_ids=list(gs))
+        eng = SolveEngine(c, slots=4, iters_per_tick=8)
+        for rid, gid in enumerate(gs):
+            eng.submit(SolveRequest(rid=rid, graph_id=gid, b=B[gid],
+                                    tol=1e-6, maxiter=300))
+        done = eng.run_until_drained()
+        assert all(r.converged for r in done)
+        st = eng.stats()
+        assert st.sweep_elements > 0
+        elements[tiering] = st.sweep_elements
+    assert elements[True] < elements[False]
+
+
+# ---------------------------------------------------------------------------
+# Free-list row recycling
+# ---------------------------------------------------------------------------
+
+def test_free_list_recycles_lowest_rows_first():
+    gs = [graphs.grid2d(12, 12, seed=i) for i in range(6)]
+    keys = [jax.random.key(i) for i in range(6)]
+    c = FactorCache(strict=False, compact_threshold=None)
+    for i in range(4):
+        c.factor(gs[i], keys[i], graph_id=f"g{i}")
+    fleet = next(iter(c.fleets.values()))
+    assert [c.get(f"g{i}").fleet_row for i in range(4)] == [0, 1, 2, 3]
+    assert fleet.free_rows == 0
+    c.evict("g2")
+    c.evict("g1")
+    gc.collect()                           # weakref callbacks free rows
+    assert fleet.free_rows == 2
+    assert fleet.live_rows == 2
+    # recycled rows come back lowest-first, before any fresh row
+    h4 = c.factor(gs[4], keys[4], graph_id="g4")
+    h5 = c.factor(gs[5], keys[5], graph_id="g5")
+    assert (h4.fleet_row, h5.fleet_row) == (1, 2)
+    assert fleet.free_rows == 0
+
+
+# ---------------------------------------------------------------------------
+# Stack compaction
+# ---------------------------------------------------------------------------
+
+def test_compaction_bit_identical_solves():
+    """Evict most of a fleet, compact, and every surviving handle's
+    solve is bit-identical to its pre-compaction answer — row indices
+    moved, values didn't."""
+    gs = [graphs.grid2d(12, 12, seed=i) for i in range(6)]
+    keys = [jax.random.key(i) for i in range(6)]
+    c = FactorCache(strict=False, compact_threshold=None)
+    c.factor_batched(gs, keys, graph_ids=[f"g{i}" for i in range(6)])
+    fleet = next(iter(c.fleets.values()))
+    rng = np.random.default_rng(7)
+    B = {gid: jnp.asarray(_rhs(rng, 144, 2)) for gid in ("g0", "g5")}
+    before = {gid: c.get(gid).solve(B[gid], tol=1e-8, maxiter=200)
+              for gid in B}
+    for gid in ("g1", "g2", "g3", "g4"):
+        c.evict(gid)
+    gc.collect()
+    cap_before, gen_before = fleet.capacity, fleet.generation
+    assert c.compact() >= 1                # at least one fleet shrank
+    assert fleet.capacity < cap_before
+    assert fleet.generation == gen_before + 1
+    assert fleet.capacity >= fleet.live_rows == 2
+    for gid, ref in before.items():
+        got = c.get(gid).solve(B[gid], tol=1e-8, maxiter=200)
+        assert np.array_equal(np.asarray(got.x), np.asarray(ref.x)), gid
+        assert np.array_equal(np.asarray(got.iters),
+                              np.asarray(ref.iters)), gid
+    stats = c.stats()
+    assert stats["compactions"] >= 1
+    assert stats["fleet_device_bytes"] == stats["fleet_live_bytes"]
+
+
+def test_compaction_threshold_triggers_on_evict():
+    """The automatic path: crossing the free-fraction threshold during
+    eviction compacts without an explicit call."""
+    gs = [graphs.grid2d(12, 12, seed=i) for i in range(4)]
+    keys = [jax.random.key(i) for i in range(4)]
+    c = FactorCache(strict=False, compact_threshold=0.5)
+    c.factor_batched(gs, keys, graph_ids=[f"g{i}" for i in range(4)])
+    fleet = next(iter(c.fleets.values()))
+    assert fleet.capacity == 4
+    for gid in ("g1", "g2", "g3"):
+        c.evict(gid)
+    gc.collect()
+    # the last evict saw free/capacity >= 0.5 and compacted in-line;
+    # a final explicit pass must then be a no-op
+    assert c.compactions >= 1
+    assert fleet.capacity == 1 and fleet.live_rows == 1
+    assert c.compact() == 0
+
+
+def test_compaction_with_in_flight_lane():
+    """A handle pinned by an occupied engine lane survives a compaction
+    mid-solve: the engine re-syncs its resident row indices against the
+    rebuilt stacks and the finished solve matches the direct
+    ``PreconditionerHandle.solve`` answer bit for bit."""
+    gs = [graphs.grid2d(12, 12, seed=i) for i in range(4)]
+    keys = [jax.random.key(i) for i in range(4)]
+    c = FactorCache(strict=False, compact_threshold=None)
+    c.factor_batched(gs, keys, graph_ids=[f"g{i}" for i in range(4)])
+    fleet = next(iter(c.fleets.values()))
+    rng = np.random.default_rng(9)
+    b = _rhs(rng, 144)
+    # park g3 (a non-zero row, so compaction must move it) mid-solve
+    eng = SolveEngine(c, slots=2, iters_per_tick=2)
+    eng.submit(SolveRequest(rid=0, graph_id="g3", b=b, tol=1e-6,
+                            maxiter=200))
+    done = eng.tick()
+    assert not done and eng.busy           # genuinely in flight
+    row_before = c.get("g3").fleet_row
+    assert row_before > 0
+    for gid in ("g0", "g1", "g2"):
+        c.evict(gid)
+    gc.collect()
+    assert c.compact() >= 1
+    assert c.get("g3").fleet_row != row_before
+    while eng.busy:
+        done += eng.tick()
+    assert len(done) == 1 and done[0].converged
+    assert eng.stats().fleet_resyncs >= 1
+    ref = c.get("g3").solve(jnp.asarray(np.atleast_2d(b)), tol=1e-6,
+                            maxiter=200)
+    assert np.array_equal(np.atleast_2d(done[0].x), np.asarray(ref.x))
+    assert fleet.capacity == 1             # shrank under the live lane

@@ -390,7 +390,7 @@ def test_engine_scatter_admission_matches_host_oracle(fleet, cache):
     req = SolveRequest(rid=0, graph_id="g2d", b=b, tol=1e-6, maxiter=300)
     eng.submit(req)
     eng._admit()                               # scatter path, no stepping
-    bl = eng._buckets[(fleet_.family, fleet_.n_pad)]
+    bl = eng._buckets[(fleet_.family, fleet_.n_pad, fleet_.k_tier)]
     # host oracle: same init math on the stacked columns
     Bp = np.zeros((4, fleet_.n_pad), np.float32)    # pow2-padded like admit
     Bp[:3, :h.n] = b
