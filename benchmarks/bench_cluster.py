@@ -31,16 +31,43 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.launch.cluster import run_cluster
+from repro.launch.cluster import run_cluster, run_factor_storm
 
 from .common import emit
 
 POLICIES = ("affinity", "p2c", "rr")
 
 
+def run_storm(*, replicas=2, storm_graphs=4, warm_dt_s=0.25, seed=0):
+    """Factor-storm comparison: the same cold-burst-over-warm-stream
+    workload, colocated (``factor_replicas=0``) vs disaggregated
+    (``factor_replicas=1``).  The gate
+    (``check_cluster_regression``) requires the disaggregated run to
+    strictly beat colocated on warm-request e2e p95 **and** on
+    solve-driver ``control_s`` — construction seconds off the serving
+    drivers, not merely moved around."""
+    out = {}
+    for mode, k in (("colocated", 0), ("disaggregated", 1)):
+        m = run_factor_storm(replicas=replicas, factor_replicas=k,
+                             storm_graphs=storm_graphs,
+                             warm_dt_s=warm_dt_s, seed=seed)
+        out[mode] = m
+        emit(f"cluster/storm/{mode}/warm_p95_us", m["warm_p95_s"] * 1e6,
+             f"p50_us={m['warm_p50_s']*1e6:.0f};"
+             f"warm={m['warm_requests']};storm_s={m['storm_s']:.1f};"
+             f"control_s={m['solve_control_s']:.1f}")
+    emit("cluster/storm/p95_speedup",
+         out["colocated"]["warm_p95_s"]
+         / max(out["disaggregated"]["warm_p95_s"], 1e-9),
+         f"colocated={out['colocated']['warm_p95_s']*1e3:.0f}ms;"
+         f"disagg={out['disaggregated']['warm_p95_s']*1e3:.0f}ms")
+    return out
+
+
 def run(*, suite="micro", requests=48, replicas=2, slots=8,
         iters_per_tick=8, seed=0, skew=1.2, arrival_rate=None,
-        replicate_above=0.02, rate_window_s=600.0, policies=POLICIES):
+        replicate_above=0.02, rate_window_s=600.0, policies=POLICIES,
+        storm=True, storm_graphs=4):
     out = {"suite": suite, "requests": requests, "replicas": replicas,
            "skew": skew, "arrival_rate": arrival_rate,
            "replicate_above": replicate_above,
@@ -68,6 +95,10 @@ def run(*, suite="micro", requests=48, replicas=2, slots=8,
         out["affinity_vs_rr_hit_rate"] = {"affinity": a, "rr": r}
         emit("cluster/affinity_vs_rr_hit_rate", a - r,
              f"affinity={a:.3f};rr={r:.3f}")
+    if storm:
+        out["factor_storm"] = run_storm(replicas=replicas,
+                                        storm_graphs=storm_graphs,
+                                        seed=seed)
     return out
 
 
@@ -96,6 +127,12 @@ def main():
                     help="arrival-rate window; minutes-wide default "
                          "makes the replication gate count the whole "
                          "closed-loop burst, machine-independently")
+    ap.add_argument("--skip-storm", action="store_true",
+                    help="skip the factor-storm colocated-vs-"
+                         "disaggregated comparison (it factors "
+                         "storm-graphs cold graphs twice)")
+    ap.add_argument("--storm-graphs", type=int, default=4,
+                    help="cold graphs in the factor-storm burst")
     ap.add_argument("--json", default=None,
                     help="write per-policy metrics to this JSON file "
                          "(uploaded as a CI artifact)")
@@ -105,7 +142,9 @@ def main():
                   iters_per_tick=args.iters_per_tick, seed=args.seed,
                   skew=args.skew, arrival_rate=args.arrival_rate,
                   replicate_above=args.replicate_above,
-                  rate_window_s=args.rate_window_s)
+                  rate_window_s=args.rate_window_s,
+                  storm=not args.skip_storm,
+                  storm_graphs=args.storm_graphs)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(metrics, fh, indent=2)

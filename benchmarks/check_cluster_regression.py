@@ -25,6 +25,18 @@ Across policies:
 * when the artifact was produced with hot-factor replication enabled
   (``replicate_above`` set), the affinity run must show the replication
   path exercised (``replications >= 1``).
+
+Factor-storm block (``factor_storm`` in the artifact, colocated vs
+``factor_replicas=1``):
+
+* disaggregated warm-request e2e **p95 strictly below** colocated —
+  the cold burst must not stall the warm stream once construction
+  leaves the serving drivers;
+* colocated solve-driver ``control_s`` **strictly above** disaggregated
+  — the stall is measured off the drivers, not inferred from latency;
+* the disaggregated run actually used the tier (``adoptions >= storm
+  size``, tier ``factored >= storm size``) and every storm request
+  converged in both runs.
 """
 from __future__ import annotations
 
@@ -71,6 +83,53 @@ def _cluster_failures(name: str, metrics: dict) -> list:
     return failures
 
 
+def _storm_failures(storm: dict) -> list:
+    failures = []
+    col = storm.get("colocated")
+    dis = storm.get("disaggregated")
+    if not col or not dis:
+        return ["[storm] factor_storm block incomplete (needs "
+                "'colocated' and 'disaggregated' runs)"]
+    for name, m in (("colocated", col), ("disaggregated", dis)):
+        if m["storm_converged"] != m["storm_graphs"]:
+            failures.append(
+                f"[storm/{name}] only {m['storm_converged']} of "
+                f"{m['storm_graphs']} cold storm requests converged")
+    if not dis["warm_p95_s"] < col["warm_p95_s"]:
+        failures.append(
+            f"[storm] disaggregated warm p95 {dis['warm_p95_s']*1e3:.0f}"
+            f"ms is not strictly below colocated "
+            f"{col['warm_p95_s']*1e3:.0f}ms — the factor tier did not "
+            f"unstall the warm stream")
+    else:
+        print(f"storm p95 OK: disaggregated "
+              f"{dis['warm_p95_s']*1e3:.0f}ms < colocated "
+              f"{col['warm_p95_s']*1e3:.0f}ms")
+    if not col["solve_control_s"] > dis["solve_control_s"]:
+        failures.append(
+            f"[storm] colocated solve-driver control_s "
+            f"{col['solve_control_s']:.1f}s is not strictly above "
+            f"disaggregated {dis['solve_control_s']:.1f}s — "
+            f"construction work did not leave the serving drivers")
+    else:
+        print(f"storm control_s OK: colocated "
+              f"{col['solve_control_s']:.1f}s > disaggregated "
+              f"{dis['solve_control_s']:.1f}s")
+    tier = (dis.get("cluster") or {}).get("factor_tier") or {}
+    factored = sum(w.get("factored", 0)
+                   for w in tier.get("per_replica", []))
+    if factored < dis["storm_graphs"]:
+        failures.append(
+            f"[storm] factor tier constructed {factored} factors for a "
+            f"{dis['storm_graphs']}-graph storm (cold work leaked back "
+            f"to the serving drivers)")
+    if dis["adoptions"] < dis["storm_graphs"]:
+        failures.append(
+            f"[storm] solve replicas adopted {dis['adoptions']} < "
+            f"{dis['storm_graphs']} payloads in the disaggregated run")
+    return failures
+
+
 def check(path: str) -> int:
     with open(path) as fh:
         art = json.load(fh)
@@ -97,12 +156,16 @@ def check(path: str) -> int:
                 "run promoted no hot factor to a second replica")
         else:
             print(f"replication path exercised: {reps} promotion(s)")
+    if "factor_storm" in art:
+        failures += _storm_failures(art["factor_storm"])
     for msg in failures:
         print(f"INVARIANT VIOLATED: {msg}")
     if not failures:
         print(f"cluster invariants OK over {len(pols)} policies: "
               f"request conservation across replicas, hit/miss "
-              f"accounting, per-replica scheduler gates")
+              f"accounting, per-replica scheduler gates"
+              + (", factor-storm disaggregation gates"
+                 if "factor_storm" in art else ""))
     return 1 if failures else 0
 
 

@@ -358,7 +358,8 @@ def _pad_np(x: np.ndarray, size: int, fill) -> np.ndarray:
 def factorize_batched(gs: Sequence[Graph], keys, *, chunk: int = 64,
                       fill_slack: int = 32, strict: bool = True,
                       max_retries: int = 3, dtype=np.float32,
-                      bucket: bool = True, with_schedules: bool = False):
+                      bucket: bool = True, with_schedules: bool = False,
+                      device: Optional[jax.Device] = None):
     """Factor a fleet of Laplacians concurrently in one XLA program.
 
     Pools are padded to a common shape bucket (powers of two when
@@ -378,7 +379,19 @@ def factorize_batched(gs: Sequence[Graph], keys, *, chunk: int = 64,
     over the padded device factors) and the call returns
     ``(factors, schedules)`` — the complete factor→solve admission
     payload in two batched XLA programs total.
+
+    ``device`` targets the whole construction (wavefront engine,
+    compaction and schedule derivation) at a specific accelerator —
+    a dedicated factor replica runs here while serving replicas' solve
+    programs run undisturbed on theirs.  Outputs stay uncommitted, so
+    adopting them onto a serving device is one transfer at admission.
     """
+    if device is not None:
+        with jax.default_device(device):
+            return factorize_batched(
+                gs, keys, chunk=chunk, fill_slack=fill_slack,
+                strict=strict, max_retries=max_retries, dtype=dtype,
+                bucket=bucket, with_schedules=with_schedules)
     gs = list(gs)
     B = len(gs)
     if not isinstance(keys, jax.Array):

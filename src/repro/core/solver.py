@@ -273,11 +273,17 @@ class FactorFleet:
     """
 
     def __init__(self, n_pad: int, family: str = "ac",
-                 kind: str = "factor", k_tier: int = 0):
+                 kind: str = "factor", k_tier: int = 0,
+                 device: Optional[jax.Device] = None):
         self.n_pad = n_pad
         self.family = family
         self.kind = kind
         self.k_tier = k_tier       # padded panel-width tier (0 = untiered)
+        # pinned accelerator for the stack (None = default device): every
+        # stack rebuild commits `arrays` here, so the jitted fleet
+        # programs that take them as traced args run on this device —
+        # a cluster pins each replica's fleets to its own device
+        self.device = device
         self.m_pad = 1
         self.Kf = 1
         self.Kb = 1
@@ -321,6 +327,16 @@ class FactorFleet:
         ``fleet_device_bytes`` so budget users see the true number."""
         return 0 if self.arrays is None else \
             sum(int(x.nbytes) for x in self.arrays)
+
+    @property
+    def resident_device(self) -> Optional[str]:
+        """Where the stack actually lives (read from the arrays, not the
+        pin request) — ``None`` before the first admission.  The
+        multi-device placement test asserts this matches the replica's
+        assigned device."""
+        if self.arrays is None:
+            return None if self.device is None else str(self.device)
+        return str(next(iter(self.arrays.src.devices())))
 
     def _row_died(self, ref: weakref.ref) -> None:
         """Weakref callback: the handle owning ``ref``'s row was
@@ -436,6 +452,13 @@ class FactorFleet:
                     [pf.fwd.n_levels for _, pf in pairs], jnp.int32)),
                 bnlv=a.bnlv.at[ix].set(jnp.asarray(
                     [pf.bwd.n_levels for _, pf in pairs], jnp.int32)))
+        if self.device is not None:
+            # commit the rebuilt stack to the pinned device (no-op copy
+            # once resident: growth/scatter of committed arrays already
+            # ran there; only brand-new capacity pays a real transfer).
+            # Committed arrays also pin every downstream jitted solve —
+            # an adopted factor built on another device lands here.
+            self.arrays = jax.device_put(self.arrays, self.device)
         self.m_pad, self.Kf, self.Kb = m_pad, Kf, Kb
         self.f_levels = max(self.f_levels,
                             *(pf.fwd.n_levels for _, pf in pairs))
@@ -479,6 +502,8 @@ class FactorFleet:
             self.arrays = FleetArrays(*(
                 _grow(x[ix], (new_cap,) + tuple(x.shape[1:]))
                 for x in self.arrays))
+        if self.device is not None:
+            self.arrays = jax.device_put(self.arrays, self.device)
         freed = old_cap - new_cap
         self._ref2row.clear()               # retire old refs (callbacks
         self._free = []                     # on them become no-ops)
@@ -680,6 +705,7 @@ class FactorCache:
                  max_age_ticks: Optional[int] = None,
                  k_tiering: bool = True,
                  compact_threshold: Optional[float] = 0.5,
+                 device: Optional[jax.Device] = None,
                  clock: Optional[Callable[[], float]] = None):
         self.chunk = chunk
         self.fill_slack = fill_slack
@@ -699,6 +725,12 @@ class FactorCache:
         # compact a fleet when free_rows/capacity reaches this after an
         # eviction/expiry sweep (None = never compact)
         self.compact_threshold = compact_threshold
+        # accelerator this cache's fleet stacks are pinned to (None =
+        # default device).  Committing the stacks commits every jitted
+        # fleet program that traces them, so one process can run N
+        # caches on N devices with the router as the only cross-device
+        # hop (see docs/architecture.md, disaggregation)
+        self.device = device
         self._clock = clock if clock is not None else time.monotonic
         self.now_ticks = 0
         # one-way latch: True once any handle was admitted/refreshed
@@ -716,6 +748,7 @@ class FactorCache:
         self.evictions = 0
         self.expirations = 0
         self.compactions = 0
+        self.adoptions = 0         # factors constructed elsewhere, adopted
 
     # -- staleness ----------------------------------------------------------
     def advance_ticks(self, k: int = 1) -> None:
@@ -913,6 +946,49 @@ class FactorCache:
                                          max_age_ticks=max_age_ticks)
         return handle
 
+    def adopt(self, g: Graph, f, *, graph_id: str, family: str = "ac",
+              schedules: Optional[Tuple[PackedSchedule,
+                                        PackedSchedule]] = None,
+              construct_s: float = 0.0, ttl_s=_UNSET,
+              max_age_ticks=_UNSET) -> PreconditionerHandle:
+        """Admit a preconditioner **constructed elsewhere** (a factor-tier
+        replica, another process): the adopt path is device transfer +
+        fleet-row scatter only — it never factors.  A live fresh handle
+        for ``graph_id`` short-circuits as a hit (adopt is idempotent, so
+        a tier shipping a factor that raced a colocated construction
+        cannot double-claim fleet rows); otherwise the payload rides the
+        normal ``attach`` lifecycle — ``admit_many`` commits its arrays
+        to this cache's pinned device, which is where the cross-device
+        hop happens.
+
+        Args:
+            g: the payload's graph.
+            f: family payload (see :meth:`attach`).
+            graph_id: cache key the factor was constructed under.
+            family: registered family name.
+            schedules: packed trisolve schedules built alongside the
+                factor (skips the per-factor schedule build entirely).
+            construct_s: construction wall-clock on the factor tier,
+                recorded on the handle so telemetry attributes it there.
+            ttl_s / max_age_ticks: staleness policy overrides.
+
+        Returns:
+            The adopted (or already-resident) handle.
+        """
+        self.sweep_stale()
+        got = self._handles.get(graph_id)
+        if got is not None:
+            self.hits += 1
+            self._handles.move_to_end(graph_id)
+            self._refresh_policy(got, ttl_s, max_age_ticks)
+            return got
+        handle = self.attach(g, f, graph_id=graph_id, family=family,
+                             schedules=schedules, ttl_s=ttl_s,
+                             max_age_ticks=max_age_ticks)
+        handle.construct_s = construct_s
+        self.adoptions += 1
+        return handle
+
     def _attach_many(self, items: Sequence[Tuple[Graph, object,
                                                  Optional[Tuple],
                                                  str, str]],
@@ -946,7 +1022,8 @@ class FactorCache:
             fleet = self._fleets.get(fkey)
             if fleet is None:
                 fleet = self._fleets[fkey] = FactorFleet(
-                    pf.n_pad, family=family, kind=fam.kind, k_tier=k_tier)
+                    pf.n_pad, family=family, kind=fam.kind, k_tier=k_tier,
+                    device=self.device)
             handle = PreconditionerHandle(
                 graph=g, factor=f, fleet=fleet, fleet_row=-1,
                 n_levels_fwd=fwd.n_levels, n_levels_bwd=bwd.n_levels,
@@ -1098,10 +1175,22 @@ class FactorCache:
         for (family, _, _), f in fleet_items:
             fleet_by_family[family] = \
                 fleet_by_family.get(family, 0) + f.device_bytes
+        # actual placement attribution (read from the arrays, not the
+        # pin request): the multi-device gate sums bytes per device
+        fleet_by_device: Dict[str, int] = {}
+        for _, f in fleet_items:
+            dev = f.resident_device
+            if dev is not None and f.device_bytes:
+                fleet_by_device[dev] = \
+                    fleet_by_device.get(dev, 0) + f.device_bytes
         return dict(handles=len(handles), hits=self.hits,
                     misses=self.misses, evictions=self.evictions,
                     expirations=self.expirations,
                     compactions=self.compactions,
+                    adoptions=self.adoptions,
+                    device=(str(self.device)
+                            if self.device is not None else None),
+                    fleet_device_bytes_by_device=fleet_by_device,
                     fleets=len(fleet_items),
                     device_bytes=sum(h.device_bytes for h in handles),
                     fleet_device_bytes=sum(f.device_bytes

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -322,7 +322,8 @@ def _pad_dev(x, size, fill):
 
 
 def build_schedules_batched(
-        devs: "List[DeviceFactor]"
+        devs: "List[DeviceFactor]", *,
+        device: Optional["jax.Device"] = None,
 ) -> List[Tuple[PackedSchedule, PackedSchedule]]:
     """Forward/backward :class:`PackedSchedule`\\ s for a whole fleet of
     device factors in one shot: the level propagation (the
@@ -335,7 +336,14 @@ def build_schedules_batched(
     function of its content alone — independent of which fleet it was
     built with.  Forward edges: CSC entry (i ∈ col k) ⇒ dst=i, src=k;
     backward: dst=k, src=i, in original index space.
+
+    ``device`` runs the whole derivation under that accelerator's
+    default placement (factor-tier replicas schedule off the serving
+    devices); outputs stay uncommitted for cheap adoption elsewhere.
     """
+    if device is not None:
+        with jax.default_device(device):
+            return build_schedules_batched(devs)
     if not devs:
         return []
     B = len(devs)

@@ -27,7 +27,8 @@ def build_cluster(*, suite="tiny", replicas=2, routing="affinity",
                   policy="fifo", max_skips=None, max_queue=256,
                   overload="reject", replicate_above=None,
                   rate_window_s=1.0, replica_ttl_s=30.0,
-                  precond="ac", select_epsilon=0.1, seed=0):
+                  precond="ac", select_epsilon=0.1, seed=0,
+                  factor_replicas=0, devices=None):
     """Stand up the cluster and register (not factor) the suite graphs.
     Returns ``(cluster, sizes)`` with graph ids = suite names."""
     from repro.data import graphs
@@ -45,6 +46,7 @@ def build_cluster(*, suite="tiny", replicas=2, routing="affinity",
         replicate_above=replicate_above, rate_window_s=rate_window_s,
         replica_ttl_s=replica_ttl_s, precond=precond,
         select_epsilon=select_epsilon, seed=seed,
+        factor_replicas=factor_replicas, devices=devices,
         cache_kw=dict(chunk=chunk, fill_slack=fill_slack, strict=False))
     import jax
     for i, (name, g) in enumerate(built.items()):
@@ -88,7 +90,8 @@ def run_cluster(*, suite="tiny", requests=48, replicas=2,
                 arrival_rate=None, policy="fifo", max_skips=None,
                 max_queue=256, overload="reject", replicate_above=None,
                 rate_window_s=1.0, replica_ttl_s=30.0,
-                precond="ac", select_epsilon=0.1, deadline_ms=None):
+                precond="ac", select_epsilon=0.1, deadline_ms=None,
+                factor_replicas=0, devices=None):
     """Build the cluster, replay one trace, close, return metrics."""
     from repro.launch.serve import make_trace
     cluster, sizes = build_cluster(
@@ -97,7 +100,8 @@ def run_cluster(*, suite="tiny", requests=48, replicas=2,
         max_skips=max_skips, max_queue=max_queue, overload=overload,
         replicate_above=replicate_above, rate_window_s=rate_window_s,
         replica_ttl_s=replica_ttl_s, precond=precond,
-        select_epsilon=select_epsilon, seed=seed)
+        select_epsilon=select_epsilon, seed=seed,
+        factor_replicas=factor_replicas, devices=devices)
     gids = list(sizes)
     trace = make_trace(gids, sizes, requests, seed=seed,
                        max_nrhs=min(max_nrhs, slots),
@@ -112,8 +116,133 @@ def run_cluster(*, suite="tiny", requests=48, replicas=2,
                    routing=routing, slots=slots, policy=policy,
                    precond=precond, skew=skew,
                    arrival_rate=arrival_rate, seed=seed,
+                   factor_replicas=factor_replicas,
                    **metrics)
     return metrics, done
+
+
+# -- factor storm: cold construction burst over a warm solve stream --------
+
+def _storm_suite(k: int, seed: int):
+    """``k`` cold graphs shaped like the micro suite (same pow2 shape
+    buckets, fresh seeds): their adoptions reuse the warm fleet's
+    already-compiled admit programs, so the disaggregated run measures
+    the steady-state adopt cost, not a compile."""
+    from repro.data import graphs
+    makers = [lambda s: graphs.grid2d(6, 6, seed=s),
+              lambda s: graphs.powerlaw(80, 4, seed=s),
+              lambda s: graphs.road_like(6, seed=s)]
+    return [(f"storm_{i}", makers[i % len(makers)](seed + 101 + i))
+            for i in range(k)]
+
+
+def run_factor_storm(*, replicas=2, factor_replicas=0, storm_graphs=4,
+                     warm_dt_s=0.25, settle_s=2.0, slots=8,
+                     iters_per_tick=8, chunk=128, seed=0,
+                     max_queue=1024, devices=None):
+    """The disaggregation benchmark: a steady warm solve stream with a
+    burst of cold factorizations layered on top.
+
+    The micro suite is pre-factored and pre-solved (warm placements,
+    warm compiles), then a submitter thread streams one warm solve
+    every ``warm_dt_s`` while ``storm_graphs`` cold graphs are all
+    submitted at once from a thread pool.  Colocated
+    (``factor_replicas=0``) the constructions run on the serving
+    drivers and the warm stream stalls behind them (visible in
+    ``control_s``); disaggregated they queue on the factor tier and the
+    drivers only pay adoptions.  The warm stream runs until the storm
+    resolves (plus ``settle_s``), so it spans the storm on any machine
+    speed; warm-request e2e p95 is the headline number."""
+    import threading
+    import concurrent.futures as cf
+    import numpy as np
+    import jax
+    from repro.serve import ClusterOverloadedError
+
+    cluster, sizes = build_cluster(
+        suite="micro", replicas=replicas, routing="affinity",
+        slots=slots, iters_per_tick=iters_per_tick, chunk=chunk,
+        max_queue=max_queue, seed=seed,
+        factor_replicas=factor_replicas, devices=devices)
+    try:
+        warm_gids = list(sizes)
+        rng = np.random.default_rng(seed)
+        from repro.data import graphs as graphmod
+        spec = graphmod.SUITE_MICRO
+        # warm placements + warm compiles (factor, admit, step): the
+        # storm must hit a steady-state cluster, not a cold one
+        for i, (name, make) in enumerate(spec.items()):
+            cluster.factor(make(), jax.random.key(i), graph_id=name)
+        warm_rhs = {g: rng.standard_normal(sizes[g]).astype(np.float32)
+                    for g in warm_gids}
+        for g in warm_gids:
+            cluster.submit(g, warm_rhs[g], tol=1e-5).result()
+
+        storm = _storm_suite(storm_graphs, seed)
+        for i, (name, g) in enumerate(storm):
+            cluster.register(g, jax.random.key(1000 + i), graph_id=name)
+        # rhs drawn up front: the shared Generator is not thread-safe
+        # and the storm submits from a pool
+        storm_rhs = {name: rng.standard_normal(g.n).astype(np.float32)
+                     for name, g in storm}
+
+        warm_futs, warm_shed = [], [0]
+        stop = threading.Event()
+
+        def warm_loop():
+            i = 0
+            while not stop.is_set():
+                gid = warm_gids[i % len(warm_gids)]
+                try:
+                    warm_futs.append(
+                        cluster.submit(gid, warm_rhs[gid], tol=1e-5))
+                except (ClusterOverloadedError, RuntimeError):
+                    warm_shed[0] += 1
+                i += 1
+                time.sleep(warm_dt_s)
+
+        streamer = threading.Thread(target=warm_loop, daemon=True)
+        t0 = time.perf_counter()
+        streamer.start()
+        # the storm: every cold graph at once (a cold submit blocks its
+        # submitter on the factor future, hence the pool)
+        with cf.ThreadPoolExecutor(max_workers=len(storm)) as pool:
+            storm_futs = [
+                pool.submit(
+                    lambda name=name: cluster.submit(
+                        name, storm_rhs[name], tol=1e-5).result())
+                for name, g in storm]
+            storm_res = [f.result() for f in storm_futs]
+        storm_s = time.perf_counter() - t0
+        time.sleep(settle_s)
+        stop.set()
+        streamer.join(timeout=10.0)
+        cluster.drain(timeout=120.0)
+
+        lat = sorted(
+            max(r.finish_time - r.submit_time, 0.0)
+            for r in (f.result() for f in warm_futs
+                      if f.exception() is None))
+        cs = cluster.stats().as_dict()
+        pct = (lambda p: lat[min(int(p * len(lat)), len(lat) - 1)]
+               if lat else float("nan"))
+        return dict(
+            factor_replicas=factor_replicas, replicas=replicas,
+            storm_graphs=len(storm), storm_s=storm_s,
+            storm_converged=sum(r.status == "converged"
+                                for r in storm_res),
+            warm_requests=len(lat), warm_shed=warm_shed[0],
+            warm_dt_s=warm_dt_s, seed=seed,
+            warm_p50_s=pct(0.50), warm_p95_s=pct(0.95),
+            warm_max_s=lat[-1] if lat else float("nan"),
+            solve_control_s=sum(r["frontend"]["control_s"]
+                                for r in cs["per_replica"]),
+            solve_control_calls=sum(r["frontend"]["control_calls"]
+                                    for r in cs["per_replica"]),
+            adoptions=cs["adoptions"], factor_dedups=cs["factor_dedups"],
+            cluster=cs)
+    finally:
+        cluster.close(drain=False)
 
 
 def main():
@@ -132,6 +261,13 @@ def main():
     ap.add_argument("--replica-ttl-s", type=float, default=30.0,
                     help="TTL stamped on replicated hot-factor copies "
                          "(drives demotion via cache staleness)")
+    ap.add_argument("--factor-replicas", type=int, default=0,
+                    help="dedicated factor-tier replicas (0 = colocated "
+                         "construction on the serving drivers)")
+    ap.add_argument("--devices", default=None,
+                    help="comma-separated device assignment for solve "
+                         "then factor replicas (e.g. 'cpu:0,cpu:1' or "
+                         "'0,1,2'); default round-robins jax.devices()")
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--iters-per-tick", type=int, default=8)
     ap.add_argument("--max-nrhs", type=int, default=4)
@@ -171,7 +307,8 @@ def main():
         max_skips=args.max_skips, max_queue=args.max_queue,
         overload=args.overload, replicate_above=args.replicate_above,
         replica_ttl_s=args.replica_ttl_s, precond=args.precond,
-        select_epsilon=args.select_epsilon, deadline_ms=args.deadline_ms)
+        select_epsilon=args.select_epsilon, deadline_ms=args.deadline_ms,
+        factor_replicas=args.factor_replicas, devices=args.devices)
 
     c = metrics["cluster"]
     print(f"suite={metrics['suite']} replicas={metrics['replicas']} "
@@ -190,6 +327,14 @@ def main():
           f"(hits={c['affinity_hits']} misses={c['affinity_misses']}) "
           f"replications={c['replications']} demotions={c['demotions']} "
           f"ejections={c['ejections']} hot_graphs={c['hot_graphs']}")
+    if c.get("factor_tier"):
+        ft = c["factor_tier"]
+        print(f"factor tier: replicas={ft['replicas']} "
+              f"factored={sum(w['factored'] for w in ft['per_replica'])} "
+              f"coalesced={ft['coalesced_factorizations']} "
+              f"dedups={ft['dedups']} adoptions={ft['adoptions']} "
+              f"failovers={ft['failovers']} "
+              f"factor_s={ft['factor_s']:.1f}")
     print(f"e2e p50={metrics['latency_p50_s']*1e3:.0f}ms "
           f"p95={metrics['latency_p95_s']*1e3:.0f}ms  "
           f"queueing p95={metrics['queue_wait_p95_s']*1e3:.0f}ms  "

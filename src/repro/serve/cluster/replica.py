@@ -17,6 +17,8 @@ from __future__ import annotations
 from concurrent.futures import Future
 from typing import Callable, Dict, Optional
 
+import jax
+
 from repro.core.solver import FactorCache, FactorHandle
 from repro.serve.admission import AdmissionPolicy
 from repro.serve.engine import SolveEngine, SolveRequest
@@ -31,6 +33,12 @@ class EngineReplica:
     frontend's ``"block"``): the router wants the backpressure signal
     immediately so it can spill to another replica instead of stalling
     its submit path on one hot engine.
+
+    ``device`` pins this replica's private cache — its fleet stacks,
+    lane carries and (through committed-input placement) its jitted
+    fleet programs — to one accelerator, so N replicas over N devices
+    scale capacity with device count and the router is the only
+    cross-device hop.
     """
 
     def __init__(self, index: int, *, slots: int = 8,
@@ -38,11 +46,15 @@ class EngineReplica:
                  admission: Optional[AdmissionPolicy] = None,
                  max_queue: int = 256, overload: str = "reject",
                  clock: Optional[Callable[[], float]] = None,
+                 device: Optional[jax.Device] = None,
                  cache_kw: Optional[Dict] = None):
         self.index = index
+        self.device = device
         kw = dict(cache_kw or {})
         if clock is not None:
             kw.setdefault("clock", clock)
+        if device is not None:
+            kw.setdefault("device", device)
         self.cache = FactorCache(**kw)
         self.engine = SolveEngine(self.cache, slots=slots,
                                   iters_per_tick=iters_per_tick,
@@ -89,6 +101,19 @@ class EngineReplica:
                                   graph_id=graph_id, family=family,
                                   precond_params=precond_params,
                                   ttl_s=ttl_s)
+
+    def adopt(self, g, f, *, graph_id: str, family: str = "ac",
+              schedules=None, construct_s: float = 0.0,
+              ttl_s: Optional[float] = None) -> "Future[FactorHandle]":
+        """Admit a payload constructed elsewhere (a factor-tier replica)
+        into this replica's private cache **on the driver thread** —
+        device transfer + fleet-row scatter only, never a factorization,
+        so the driver stall is milliseconds where ``factor()`` is
+        seconds (the whole point of the factor tier)."""
+        return self.frontend.call(self.cache.adopt, g, f,
+                                  graph_id=graph_id, family=family,
+                                  schedules=schedules,
+                                  construct_s=construct_s, ttl_s=ttl_s)
 
     def submit(self, req: SolveRequest) -> "Future[SolveRequest]":
         """Queue a routed request.  *This* replica's factor is pinned

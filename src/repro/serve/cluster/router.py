@@ -62,15 +62,49 @@ from typing import (Callable, Deque, Dict, List, Optional, Sequence, Set,
                     Tuple)
 
 import numpy as np
+import jax
 
 from repro.core.solver import PRECOND_FAMILIES, graph_fingerprint
 from repro.serve.admission import make_policy
 from repro.serve.engine import SolveRequest, make_request
 from repro.serve.frontend import EngineOverloadedError
 
+from .factor_tier import FactorTier
 from .replica import EngineReplica
 from .selector import AdaptiveSelector
 from .stats import ClusterStats, ReplicaStats
+
+
+def resolve_devices(spec, n: int) -> List[Optional[jax.Device]]:
+    """Resolve a device assignment for ``n`` replica slots.
+
+    ``spec`` may be ``None`` (round-robin over ``jax.devices()`` — on a
+    one-device host this is the process default and pinning is a no-op),
+    a comma-separated string (``"cpu:0,cpu:1"``, the ``--devices`` CLI
+    form), or a sequence of devices / integer indices / ``platform:idx``
+    strings.  Fewer entries than slots round-robin."""
+    avail = jax.devices()
+    if spec is None:
+        pool = avail
+    else:
+        if isinstance(spec, str):
+            spec = [s.strip() for s in spec.split(",") if s.strip()]
+        pool = []
+        for s in spec:
+            if isinstance(s, int):
+                pool.append(avail[s])
+            elif isinstance(s, str):
+                plat, sep, idx = s.partition(":")
+                if sep:
+                    pool.append(jax.devices(plat)[int(idx)])
+                else:
+                    pool.append(avail[int(s)] if s.isdigit()
+                                else jax.devices(s)[0])
+            else:
+                pool.append(s)          # an actual jax.Device
+        if not pool:
+            raise ValueError("empty device spec")
+    return [pool[i % len(pool)] for i in range(n)]
 
 
 class ClusterOverloadedError(EngineOverloadedError):
@@ -232,6 +266,7 @@ class Router:
         self.routed = 0
         self.affinity_hits = 0
         self.affinity_misses = 0
+        self.factor_dedups = 0
         self.replications = 0
         self.demotions = 0
         self.ejections = 0
@@ -338,7 +373,8 @@ class Router:
             if cur is None:
                 return _done_future()       # already live
             if isinstance(cur, Future):
-                return cur                  # already factoring
+                self.factor_dedups += 1     # ride the in-flight factor
+                return cur
         fut = self._factor_cb(gid, rep, ttl_s)
         self.placements.setdefault(gid, {})[rep.index] = fut
         return fut
@@ -393,6 +429,8 @@ class Router:
         hit = placed and pl[target.index] is None
         if placed:
             wait = pl[target.index]         # None (live) or pending
+            if wait is not None:
+                self.factor_dedups += 1     # ride the in-flight factor
         else:
             wait = self.place(gid, target)  # immortal primary placement
         # hot-factor replication: a hot graph with exactly one *live*
@@ -462,9 +500,13 @@ class SolveCluster:
                  eject_rejections: int = 4, health_window_s: float = 1.0,
                  readmit_cooldown_s: float = 2.0,
                  clock: Optional[Callable[[], float]] = None,
-                 seed: int = 0, cache_kw: Optional[Dict] = None):
+                 seed: int = 0, cache_kw: Optional[Dict] = None,
+                 devices=None, factor_replicas: int = 0,
+                 factor_max_batch: int = 16):
         if replicas < 1:
             raise ValueError("replicas must be >= 1")
+        if factor_replicas < 0:
+            raise ValueError("factor_replicas must be >= 0")
         if precond != "auto" and precond not in PRECOND_FAMILIES:
             raise ValueError(
                 f"unknown precond {precond!r}; choose a registered family "
@@ -474,13 +516,28 @@ class SolveCluster:
         self.selector = (AdaptiveSelector(seed=seed, epsilon=select_epsilon)
                          if precond == "auto" else None)
         self._clock = clock if clock is not None else time.monotonic
+        # solve replicas take the first device slots, factor replicas
+        # the next ones — on a host with >= replicas + factor_replicas
+        # devices the tiers never share an accelerator
+        devs = resolve_devices(devices, replicas + factor_replicas)
+        self.devices = devs[:replicas]
         self.replicas = [
             EngineReplica(i, slots=slots, iters_per_tick=iters_per_tick,
                           admission=make_policy(admission,
                                                 max_skips=max_skips),
                           max_queue=max_queue, overload=overload,
-                          clock=clock, cache_kw=cache_kw)
+                          clock=clock, device=devs[i], cache_kw=cache_kw)
             for i in range(replicas)]
+        ckw = dict(cache_kw or {})
+        self.factor_tier = FactorTier(
+            factor_replicas, devices=devs[replicas:],
+            chunk=ckw.get("chunk", 64),
+            fill_slack=ckw.get("fill_slack", 32),
+            strict=ckw.get("strict", True),
+            max_retries=ckw.get("max_retries", 3),
+            dtype=ckw.get("dtype", np.float32),
+            max_batch=factor_max_batch,
+            on_retarget=self._retarget) if factor_replicas > 0 else None
         self.router = Router(
             make_routing(routing, seed=seed), self.replicas,
             clock=self._clock, factor_cb=self._factor_on,
@@ -536,8 +593,33 @@ class SolveCluster:
                 f"graph_id {base!r} is not registered with the cluster "
                 f"(call register(graph, key) first)") from None
         params = self.precond_params if fam == self.precond else None
+        if self.factor_tier is not None:
+            # disaggregated path: construction queues on the factor
+            # tier; the serving driver only pays the adopt
+            return self.factor_tier.submit(
+                gid, g, key, family=fam, precond_params=params,
+                ttl_s=ttl_s, target=rep)
         return rep.factor(g, key, graph_id=gid, family=fam,
                           precond_params=params, ttl_s=ttl_s)
+
+    def _retarget(self, gid: str, dead_index: int,
+                  fut: Future) -> Optional[EngineReplica]:
+        """Factor-tier failover: the placement target died before its
+        adoption landed.  Move the pending placement to the roomiest
+        healthy replica (under the cluster lock — the tier worker calls
+        in from its own thread) and return it, or ``None`` when the
+        cluster has nowhere left to put the factor."""
+        with self._lock:
+            healthy = [r for r in self.router.healthy()
+                       if r.index != dead_index]
+            if not healthy:
+                return None
+            new = _roomiest(healthy)
+            pl = self.router.placements.get(gid)
+            if pl is not None and pl.get(dead_index) is fut:
+                del pl[dead_index]
+            self.router.placements.setdefault(gid, {})[new.index] = fut
+            return new
 
     def factor(self, g, key, *, graph_id: Optional[str] = None,
                replica: Optional[int] = None) -> Tuple[str, int]:
@@ -708,7 +790,9 @@ class SolveCluster:
                 routed=r.routed_per[rep.index],
                 rejections=r.rejections_per[rep.index],
                 frontend=rep.frontend.stats(),
-                cache=rep.cache.stats()) for rep in self.replicas]
+                cache=rep.cache.stats(),
+                device=(str(rep.device) if rep.device is not None
+                        else None)) for rep in self.replicas]
             hot = sum(1 for pl in r.placements.values()
                       if sum(1 for i, v in pl.items()
                              if v is None and i in alive_idx) >= 2)
@@ -722,7 +806,12 @@ class SolveCluster:
                 shed=r.shed, hot_graphs=hot, per_replica=per,
                 precond=self.precond,
                 selector=(self.selector.stats()
-                          if self.selector is not None else None))
+                          if self.selector is not None else None),
+                factor_dedups=r.factor_dedups,
+                adoptions=sum(rep.cache.adoptions
+                              for rep in self.replicas),
+                factor_tier=(self.factor_tier.stats()
+                             if self.factor_tier is not None else None))
 
     # -- lifecycle ----------------------------------------------------------
     def drain(self, timeout: Optional[float] = None) -> bool:
@@ -741,7 +830,10 @@ class SolveCluster:
     def close(self, *, drain: bool = True,
               timeout: Optional[float] = None) -> None:
         """Close every replica (with ``drain``, in-flight work finishes
-        first); the cluster is unusable afterwards."""
+        first); the cluster is unusable afterwards.  The factor tier
+        closes first so no construction lands on a closing driver."""
+        if self.factor_tier is not None:
+            self.factor_tier.close()
         for rep in self.replicas:
             rep.close(drain=drain, timeout=timeout)
 

@@ -39,6 +39,7 @@ class ReplicaStats:
     rejections: int      # EngineOverloadedError seen routing here
     frontend: FrontendStats
     cache: Optional[Dict] = None
+    device: Optional[str] = None  # pinned accelerator (None = default)
 
     def as_dict(self) -> Dict:
         # shallow: asdict() would deep-convert the nested frontend and
@@ -67,7 +68,16 @@ class ClusterStats:
     ``precond`` is the cluster's configured preconditioner family
     (``"auto"`` = adaptive selection); ``selector`` carries the
     :class:`~repro.serve.cluster.selector.AdaptiveSelector` counters
-    and per-graph estimates when adaptive, else ``None``."""
+    and per-graph estimates when adaptive, else ``None``.
+
+    **Factor-tier telemetry** (disaggregated clusters): ``factor_dedups``
+    counts routes/placements that rode an in-flight factor instead of
+    enqueueing a second construction; ``adoptions`` the payloads solve
+    replicas admitted without factoring (sum of their caches'
+    ``adoptions``); ``factor_tier`` the tier's own counters —
+    ``factor_queue_depth``, ``coalesced_factorizations``, ``failovers``,
+    per-tier-replica ``factor_s`` — or ``None`` when the cluster
+    factors colocated."""
 
     policy: str
     replicas: int
@@ -85,6 +95,9 @@ class ClusterStats:
     per_replica: List[ReplicaStats]
     precond: str = "ac"
     selector: Optional[Dict] = None
+    factor_dedups: int = 0
+    adoptions: int = 0
+    factor_tier: Optional[Dict] = None
 
     @property
     def hit_rate(self) -> float:

@@ -249,6 +249,11 @@ class _BucketLanes:
             fidx=jnp.zeros((slots,), jnp.int32),
             tol=jnp.ones((slots,), jnp.float32),
             maxiter=jnp.zeros((slots,), jnp.int32))
+        if fleet.device is not None:
+            # commit the carry alongside the pinned fleet stacks so the
+            # first tick never pays a cross-device transfer and the
+            # jitted step program compiles for the replica's device
+            self.state = jax.device_put(self.state, fleet.device)
         self.n_active = 0
 
 

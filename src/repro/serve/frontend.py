@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import deque
 from concurrent.futures import Future
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
@@ -66,6 +67,9 @@ class FrontendStats:
     queue_peak: int
     max_queue: int
     alive: bool
+    control_calls: int
+    control_s: float
+    factor_queue_depth: int
     engine: EngineStats
 
     def as_dict(self) -> Dict:
@@ -128,6 +132,13 @@ class SolveFrontend:
         self.failed = 0          # futures resolved exceptionally
         self.rejected = 0
         self.queue_peak = 0
+        # control-channel visibility: every second the driver spends in
+        # `call()` work (factorizations, adopts, compactions) is a second
+        # its solve lanes sit frozen — the colocated-vs-disaggregated
+        # stall is read straight off these, not inferred from latency
+        self.control_calls = 0
+        self.control_s = 0.0
+        self._control_inflight = 0
         self._thread = threading.Thread(target=self._run,
                                         name="solve-frontend", daemon=True)
         self._thread.start()
@@ -207,6 +218,15 @@ class SolveFrontend:
         return fut
 
     @property
+    def factor_queue_depth(self) -> int:
+        """Control-channel work waiting for (or holding) the driver —
+        queued ``call()``s plus the one executing.  Under a colocated
+        cluster this is the factorization backlog stalling this
+        replica's lanes; with a factor tier it stays near zero (adopts
+        are cheap).  Advisory cross-thread read, like ``queue_depth``."""
+        return len(self._control) + self._control_inflight
+
+    @property
     def alive(self) -> bool:
         """Driver-thread liveness — the health signal a cluster router
         keys ejection on.  False once the driver crashed (see
@@ -234,7 +254,9 @@ class SolveFrontend:
                 self._control.clear()
                 if batch:
                     self._space.notify_all()
+            self._control_inflight = len(control)
             for fn, args, kw, cfut in control:
+                t0 = time.monotonic()
                 try:
                     res = fn(*args, **kw)
                 except Exception as exc:
@@ -243,6 +265,10 @@ class SolveFrontend:
                 else:
                     if not cfut.done():
                         cfut.set_result(res)
+                finally:
+                    self.control_calls += 1
+                    self.control_s += time.monotonic() - t0
+                    self._control_inflight -= 1
             try:
                 for req, fut in batch:
                     try:
@@ -338,4 +364,6 @@ class SolveFrontend:
             failed=self.failed, rejected=self.rejected,
             queue_depth=depth, queue_peak=peak,
             max_queue=self.max_queue, alive=self.alive,
+            control_calls=self.control_calls, control_s=self.control_s,
+            factor_queue_depth=self.factor_queue_depth,
             engine=self.engine.stats())

@@ -1,0 +1,77 @@
+"""Multi-device placement acceptance: on a forced 8-device host, a
+disaggregated cluster pins each solve replica's fleet to its assigned
+device, constructs on the factor replica's own device, and serving
+through the cross-device adopt path stays bit-exact with the engine's
+``step_compiles == buckets`` mega-batching invariant intact.
+
+Runs in a subprocess because ``XLA_FLAGS=--xla_force_host_platform_
+device_count`` must be set before the first jax import (device count
+locks at init)."""
+import subprocess
+import sys
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import numpy as np, jax
+from repro.data import graphs
+from repro.serve import SolveCluster
+
+assert jax.device_count() == 8, jax.device_count()
+gs = {"g2d": graphs.grid2d(6, 6, seed=3),
+      "road": graphs.road_like(6, seed=4)}      # both n=36: one bucket
+cl = SolveCluster(replicas=2, factor_replicas=1, routing="affinity",
+                  slots=4, iters_per_tick=8,
+                  devices="cpu:1,cpu:2,cpu:3",
+                  cache_kw=dict(chunk=32, fill_slack=64, strict=False))
+try:
+    for i, (name, g) in enumerate(gs.items()):
+        cl.register(g, jax.random.key(i), graph_id=name)
+    rng = np.random.default_rng(0)
+    for name, g in gs.items():
+        b = rng.normal(size=g.n).astype(np.float32)
+        b -= b.mean()
+        r = cl.submit(name, b, tol=1e-6, maxiter=300).result(timeout=600)
+        assert r.status == "converged", r.status
+        rep = cl.replicas[r.replica]
+        ref = rep.cache.get(name).solve(np.atleast_2d(b), tol=1e-6,
+                                        maxiter=300)
+        assert np.array_equal(np.atleast_2d(r.x), np.asarray(ref.x)), \
+            f"{name}: cross-device adopt broke bit-exactness"
+    assert cl.drain(timeout=120)
+    st = cl.stats()
+    # construction ran on the factor tier's own pinned device and
+    # arrived on the solve replicas only by adoption
+    tier = st.factor_tier
+    assert tier["per_replica"][0]["device"] == "TFRT_CPU_3", tier
+    assert sum(w["factored"] for w in tier["per_replica"]) == 2, tier
+    assert st.adoptions == 2, st.adoptions
+    # every solve replica's fleet bytes live on ITS assigned device
+    assigned = ["TFRT_CPU_1", "TFRT_CPU_2"]
+    placed = 0
+    for rep, want in zip(cl.replicas, assigned):
+        assert str(rep.device) == want, (str(rep.device), want)
+        cs = rep.cache.stats()
+        assert cs["device"] == want, cs["device"]
+        bydev = cs["fleet_device_bytes_by_device"]
+        if bydev:
+            placed += 1
+            assert set(bydev) == {want}, (bydev, want)
+            assert all(v > 0 for v in bydev.values()), bydev
+        # mega-batching survives pinning: one bucket, one step compile
+        es = rep.frontend.stats().engine
+        assert es.step_compiles == es.buckets, \
+            (es.step_compiles, es.buckets)
+    assert placed >= 1, "no fleet bytes resident anywhere"
+finally:
+    cl.close(drain=False)
+print("OK")
+"""
+
+
+def test_cluster_device_pinning_subprocess():
+    out = subprocess.run([sys.executable, "-c", _CHILD], cwd="/root/repo",
+                         capture_output=True, text=True, timeout=900)
+    assert "OK" in out.stdout, (out.stdout[-500:], out.stderr[-2000:])

@@ -1,0 +1,235 @@
+"""Disaggregated factor tier: bit-exactness through the adopt path,
+in-flight factor dedup (no double construction), burst coalescing into
+one batched factorization, dead-target adoption failover, and the
+control-channel visibility the colocated-vs-disaggregated comparison is
+measured with."""
+import concurrent.futures as cf
+import threading
+import time
+
+import numpy as np
+import jax
+import pytest
+
+from repro.data import graphs
+from repro.serve import SolveCluster
+
+CACHE_KW = dict(chunk=32, fill_slack=64, strict=False)
+
+
+@pytest.fixture(scope="module")
+def gset():
+    return {"g2d": graphs.grid2d(6, 6, seed=3),      # n = 36
+            "road": graphs.road_like(6, seed=4),     # n = 36
+            "pl": graphs.powerlaw(80, 4, seed=3)}    # n = 80
+
+
+def _rhs(rng, n, nrhs=1):
+    b = rng.normal(size=(nrhs, n) if nrhs > 1 else n).astype(np.float32)
+    return b - b.mean(axis=-1, keepdims=True)
+
+
+def _cluster(gset, **kw):
+    kw.setdefault("replicas", 2)
+    kw.setdefault("factor_replicas", 1)
+    kw.setdefault("slots", 4)
+    kw.setdefault("iters_per_tick", 8)
+    kw.setdefault("cache_kw", CACHE_KW)
+    cl = SolveCluster(**kw)
+    for i, (name, g) in enumerate(gset.items()):
+        cl.register(g, jax.random.key(i), graph_id=name)
+    return cl
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: serving through the factor-tier adopt path stays bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("routing", ["affinity", "rr"])
+def test_tier_bit_exact_mixed_trace(gset, routing):
+    """The mixed trace served by a disaggregated cluster (every factor
+    constructed on the tier, adopted cross-thread onto its serving
+    replica) yields per-request x/iters/relres identical to a direct
+    ``FactorHandle.solve`` on the serving replica's cache — the
+    cluster's signature invariant survives disaggregation."""
+    rng = np.random.default_rng(11)
+    spec = [("g2d", 1, 1e-6), ("pl", 2, 1e-5), ("road", 1, 1e-6),
+            ("g2d", 3, 1e-6), ("pl", 1, 1e-6), ("road", 2, 1e-5)]
+    blocks = [(gid, _rhs(rng, gset[gid].n, nr), tol)
+              for gid, nr, tol in spec]
+    with _cluster(gset, routing=routing) as cl:
+        futs = [cl.submit(gid, b, tol=tol, maxiter=400)
+                for gid, b, tol in blocks]
+        done = [f.result(timeout=600) for f in futs]
+        assert cl.drain(timeout=120)
+        for (gid, b, tol), req in zip(blocks, done):
+            assert req.status == "converged" and req.replica >= 0
+            rep = cl.replicas[req.replica]
+            ref = rep.cache.get(gid).solve(np.atleast_2d(b), tol=tol,
+                                           maxiter=400)
+            assert np.array_equal(np.atleast_2d(req.x), np.asarray(ref.x))
+            assert np.array_equal(np.atleast_1d(req.iters),
+                                  np.asarray(ref.iters))
+            assert np.array_equal(np.atleast_1d(req.relres),
+                                  np.atleast_1d(np.asarray(ref.relres)))
+        st = cl.stats()
+        # every construction ran on the tier and arrived by adoption:
+        # the serving drivers never factored
+        tier = st.factor_tier
+        factored = sum(w["factored"] for w in tier["per_replica"])
+        assert factored == st.adoptions >= len(gset)
+        assert all(r.cache["misses"] == 0 for r in st.per_replica)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: concurrent routes dedupe onto one in-flight construction
+# ---------------------------------------------------------------------------
+
+def test_concurrent_cold_routes_ride_one_factorization(gset):
+    """N concurrent cold submits for the same graph must produce exactly
+    one tier construction — later routes ride the pending future
+    (counted as ``factor_dedups``) and serve bit-identically."""
+    N = 4
+    rng = np.random.default_rng(3)
+    b = _rhs(rng, gset["road"].n)
+    with _cluster(gset, routing="affinity") as cl:
+        with cf.ThreadPoolExecutor(max_workers=N) as pool:
+            outer = [pool.submit(
+                lambda: cl.submit("road", b, tol=1e-6,
+                                  maxiter=300).result(timeout=600))
+                for _ in range(N)]
+            done = [f.result(timeout=600) for f in outer]
+        st = cl.stats()
+        tier = st.factor_tier
+        assert tier["enqueued"] == 1                  # one construction
+        assert sum(w["factored"] for w in tier["per_replica"]) == 1
+        assert st.factor_dedups >= N - 1              # the rest rode it
+        assert st.adoptions == 1
+        xs = {np.asarray(r.x).tobytes() for r in done}
+        assert len(xs) == 1                           # identical serving
+        assert all(r.status == "converged" for r in done)
+
+
+def test_tier_coalesces_burst_and_dedups_siblings(gset, monkeypatch):
+    """A burst of distinct cold graphs drains as a single coalesced
+    ``factorize_batched`` call; a duplicate placement id arriving while
+    the job is queued becomes a sibling (construction shared, adoption
+    separate).  The worker is gated until the whole burst is queued so
+    the batch composition is deterministic."""
+    import repro.serve.cluster.factor_tier as ft
+    gate = threading.Event()
+    orig_take = ft.FactorTier._take_batch
+    monkeypatch.setattr(ft.FactorTier, "_take_batch",
+                        lambda self: (gate.wait(60), orig_take(self))[1])
+    rep = ft.EngineReplica(0, slots=4, cache_kw=CACHE_KW)
+    tier = ft.FactorTier(1, chunk=CACHE_KW["chunk"],
+                         fill_slack=CACHE_KW["fill_slack"], strict=False)
+    try:
+        names = ["g2d", "road", "pl"]
+        futs = [tier.submit(n, gset[n], jax.random.key(i), target=rep)
+                for i, n in enumerate(names)]
+        # duplicate gid while its job is still queued: rides the
+        # existing job instead of enqueueing a second build
+        futs.append(tier.submit("pl", gset["pl"], jax.random.key(2),
+                                target=rep))
+        assert tier.queue_depth == 3      # dedup never lengthens queue
+        gate.set()
+        handles = [f.result(timeout=600) for f in futs]
+        s = tier.stats()
+        assert s["enqueued"] == 3 and s["dedups"] == 1
+        assert s["adoptions"] == 4        # 3 jobs + 1 sibling adoption
+        # the whole burst drained in ONE construction call
+        w = s["per_replica"][0]
+        assert w["factored"] == 3 and w["batches"] == 1
+        assert s["coalesced_factorizations"] == 3
+        assert s["factor_queue_depth"] == 0
+        # deduped twin got the same resident handle
+        assert handles[2] is handles[3]
+        assert rep.cache.adoptions == 3   # sibling was a cache hit
+    finally:
+        tier.close()
+        rep.close(drain=False)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: pending factor futures fail over off a dead target
+# ---------------------------------------------------------------------------
+
+def test_adoption_fails_over_when_target_dies_mid_factorization(
+        gset, monkeypatch):
+    """Regression for the tier-less failure mode where a pending factor
+    future died with its target's driver: crash the placement target
+    while its construction is still on the tier — the finished payload
+    must re-target to the healthy replica, the placement must move with
+    it, and the request must serve there bit-exactly."""
+    import repro.serve.cluster.factor_tier as ft
+    killed = threading.Event()
+    real = ft.factorize_batched
+    # hold the tier's construction until the target replica is dead, so
+    # the adoption deterministically lands on a crashed driver
+    monkeypatch.setattr(
+        ft, "factorize_batched",
+        lambda *a, **kw: (killed.wait(60), real(*a, **kw))[1])
+    rng = np.random.default_rng(5)
+    b = _rhs(rng, gset["pl"].n)
+    with _cluster(gset, routing="affinity") as cl:
+        with cf.ThreadPoolExecutor(max_workers=1) as pool:
+            outer = pool.submit(
+                lambda: cl.submit("pl", b, tol=1e-6,
+                                  maxiter=300).result(timeout=600))
+            # wait for the router to record the pending placement, then
+            # kill that exact replica while the tier is constructing
+            target = None
+            for _ in range(600):
+                with cl._lock:
+                    pl = cl.router.placements.get("pl")
+                    if pl:
+                        target = next(iter(pl))
+                        break
+                time.sleep(0.01)
+            assert target is not None
+            cl.replicas[target].frontend.close(drain=False)
+            killed.set()
+            res = outer.result(timeout=600)
+        survivor = 1 - target
+        assert res.status == "converged" and res.replica == survivor
+        st = cl.stats()
+        assert st.factor_tier["failovers"] == 1
+        assert st.ejections == 1
+        # the placement moved: live on the survivor, gone from the dead
+        with cl._lock:
+            pl = dict(cl.router.placements["pl"])
+        assert pl == {survivor: None}
+        ref = cl.replicas[survivor].cache.get("pl").solve(
+            np.atleast_2d(b), tol=1e-6, maxiter=300)
+        assert np.array_equal(np.atleast_2d(res.x), np.asarray(ref.x))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: control-channel stats measure the driver stall directly
+# ---------------------------------------------------------------------------
+
+def test_frontend_control_channel_stats(gset):
+    """``control_calls``/``control_s`` accumulate driver time spent in
+    ``call()`` work and ``factor_queue_depth`` exposes the waiting
+    control backlog — the counters the factor-storm gate compares."""
+    from repro.core.solver import FactorCache
+    from repro.serve import SolveEngine, SolveFrontend
+    eng = SolveEngine(FactorCache(**CACHE_KW), slots=2)
+    with SolveFrontend(eng, max_queue=8) as fe:
+        st = fe.stats()
+        assert st.control_calls == 0 and st.control_s == 0.0
+        assert st.factor_queue_depth == 0
+        gate = fe.call(time.sleep, 0.05)      # holds the driver
+        queued = fe.call(lambda: 7)           # waits behind it
+        assert queued.result(timeout=30) == 7 and gate.result(timeout=30) \
+            is None
+        st = fe.stats()
+        assert st.control_calls == 2
+        assert st.control_s >= 0.05
+        assert st.factor_queue_depth == 0     # drained
+        assert st.as_dict()["control_s"] == st.control_s
+    # cluster surfacing: the per-replica FrontendStats nest the counters
+    with _cluster(gset, factor_replicas=0) as cl:
+        s = cl.stats().per_replica[0].frontend
+        assert hasattr(s, "control_calls") and hasattr(s, "control_s")
