@@ -38,24 +38,29 @@ from .common import emit
 POLICIES = ("affinity", "p2c", "rr")
 
 
-def run_storm(*, replicas=2, storm_graphs=4, warm_dt_s=0.25, seed=0):
+def run_storm(*, replicas=2, storm_graphs=4, warm_dt_s=0.25, seed=0,
+              metrics=None):
     """Factor-storm comparison: the same cold-burst-over-warm-stream
     workload, colocated (``factor_replicas=0``) vs disaggregated
     (``factor_replicas=1``).  The gate
     (``check_cluster_regression``) requires the disaggregated run to
     strictly beat colocated on warm-request e2e p95 **and** on
     solve-driver ``control_s`` — construction seconds off the serving
-    drivers, not merely moved around."""
+    drivers, not merely moved around.  Each mode's overload-detector
+    snapshot rides along in its ``overload`` key."""
     out = {}
     for mode, k in (("colocated", 0), ("disaggregated", 1)):
         m = run_factor_storm(replicas=replicas, factor_replicas=k,
                              storm_graphs=storm_graphs,
-                             warm_dt_s=warm_dt_s, seed=seed)
+                             warm_dt_s=warm_dt_s, seed=seed,
+                             metrics=metrics)
         out[mode] = m
+        ov = m.get("overload") or {}
         emit(f"cluster/storm/{mode}/warm_p95_us", m["warm_p95_s"] * 1e6,
              f"p50_us={m['warm_p50_s']*1e6:.0f};"
              f"warm={m['warm_requests']};storm_s={m['storm_s']:.1f};"
-             f"control_s={m['solve_control_s']:.1f}")
+             f"control_s={m['solve_control_s']:.1f};"
+             f"overload_transitions={ov.get('transitions', 0)}")
     emit("cluster/storm/p95_speedup",
          out["colocated"]["warm_p95_s"]
          / max(out["disaggregated"]["warm_p95_s"], 1e-9),
@@ -67,7 +72,9 @@ def run_storm(*, replicas=2, storm_graphs=4, warm_dt_s=0.25, seed=0):
 def run(*, suite="micro", requests=48, replicas=2, slots=8,
         iters_per_tick=8, seed=0, skew=1.2, arrival_rate=None,
         replicate_above=0.02, rate_window_s=600.0, policies=POLICIES,
-        storm=True, storm_graphs=4):
+        storm=True, storm_graphs=4, prom=None):
+    from repro.obs import MetricsRegistry, render
+    registry = MetricsRegistry() if prom else None
     out = {"suite": suite, "requests": requests, "replicas": replicas,
            "skew": skew, "arrival_rate": arrival_rate,
            "replicate_above": replicate_above,
@@ -78,7 +85,8 @@ def run(*, suite="micro", requests=48, replicas=2, slots=8,
             suite=suite, requests=requests, replicas=replicas,
             routing=routing, slots=slots, iters_per_tick=iters_per_tick,
             seed=seed, skew=skew, arrival_rate=arrival_rate,
-            replicate_above=replicate_above, rate_window_s=rate_window_s)
+            replicate_above=replicate_above, rate_window_s=rate_window_s,
+            metrics=registry)
         metrics["replicate_above"] = replicate_above
         out["policies"][routing] = metrics
         c = metrics["cluster"]
@@ -98,7 +106,11 @@ def run(*, suite="micro", requests=48, replicas=2, slots=8,
     if storm:
         out["factor_storm"] = run_storm(replicas=replicas,
                                         storm_graphs=storm_graphs,
-                                        seed=seed)
+                                        seed=seed, metrics=registry)
+    if registry is not None:
+        with open(prom, "w") as fh:
+            fh.write(render(registry))
+        print(f"wrote {prom}")
     return out
 
 
@@ -133,6 +145,10 @@ def main():
                          "storm-graphs cold graphs twice)")
     ap.add_argument("--storm-graphs", type=int, default=4,
                     help="cold graphs in the factor-storm burst")
+    ap.add_argument("--prom", default=None,
+                    help="write the shared registry's final Prometheus "
+                         "scrape to this file (uploaded as a CI "
+                         "artifact)")
     ap.add_argument("--json", default=None,
                     help="write per-policy metrics to this JSON file "
                          "(uploaded as a CI artifact)")
@@ -144,7 +160,8 @@ def main():
                   replicate_above=args.replicate_above,
                   rate_window_s=args.rate_window_s,
                   storm=not args.skip_storm,
-                  storm_graphs=args.storm_graphs)
+                  storm_graphs=args.storm_graphs,
+                  prom=args.prom)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(metrics, fh, indent=2)

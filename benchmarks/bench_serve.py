@@ -37,6 +37,15 @@ Two padding-tax blocks ride in the same artifact:
   churn followed by stack compaction; the gate is
   ``fleet_device_bytes <= 1.5 x fleet_live_bytes`` with at least one
   compaction, and the post-compaction replay must still converge.
+
+An **observability-overhead** block (``obs_overhead``; disable with
+``--no-obs-overhead``) replays the same closed-loop trace through a
+plain engine and a fully instrumented one (metrics registry + tracer),
+interleaved best-of-N, and records the tick-throughput ratio;
+``check_serve_regression`` gates ``ratio >= 0.98`` so instrumentation
+can never quietly tax the serve hot path.  ``--prom`` dumps the final
+Prometheus scrape of the instrumented run's registry to a file (the CI
+jobs upload it next to the JSON artifact).
 """
 from __future__ import annotations
 
@@ -253,17 +262,93 @@ def run_fleet_memory(*, seed=0, slots=8, iters_per_tick=8, n_graphs=6,
     return out
 
 
+def run_obs_overhead(*, seed=0, slots=8, iters_per_tick=8, requests=24,
+                     rounds=3):
+    """Measure what instrumentation costs the serve hot path: the same
+    seeded closed-loop trace replayed through a plain engine and a
+    fully instrumented one (metrics registry + tracer + Prometheus
+    render at the end), over one shared warm factor cache.  Rounds are
+    **interleaved** (plain, instrumented, plain, ...) and the headline
+    ratio is best-of-N over best-of-N, so machine noise hits both arms
+    alike; compiles are paid by a warmup replay per engine before any
+    timing.  ``check_serve_regression`` gates
+    ``instrumented >= 0.98 x plain`` ticks/s — the off-hot-path
+    contract (pre-bound counter children, per-tick gauges, no device
+    syncs) turned into a number CI can refuse."""
+    import time
+
+    import jax
+
+    from repro.core.solver import FactorCache
+    from repro.data import graphs
+    from repro.launch.serve import make_trace
+    from repro.obs import MetricsRegistry, Tracer, render
+    from repro.serve import SolveEngine
+
+    built = {"mesh": graphs.grid2d(12, 12, seed=1),
+             "road": graphs.road_like(12, seed=2)}
+    keys = {name: jax.random.key(i) for i, name in enumerate(built)}
+    sizes = {name: g.n for name, g in built.items()}
+    cache = FactorCache(strict=False)
+    cache.factor_batched(list(built.values()),
+                         [keys[name] for name in built],
+                         graph_ids=list(built.keys()))
+    registry = MetricsRegistry()
+    tracer = Tracer()
+    engines = {
+        "plain": SolveEngine(cache, slots=slots,
+                             iters_per_tick=iters_per_tick),
+        "instrumented": SolveEngine(cache, slots=slots,
+                                    iters_per_tick=iters_per_tick,
+                                    metrics=registry, tracer=tracer),
+    }
+    gids = list(built)
+    # closed-loop (no arrival gaps): the measurement is pure tick
+    # throughput, not open-loop waiting that would mask the overhead
+    trace_for = lambda s: make_trace(gids, sizes, requests, seed=s,
+                                     max_nrhs=min(4, slots))
+    for eng in engines.values():           # compiles out of the timing
+        replay_trace(eng, trace_for(seed + 1))
+    best = {name: 0.0 for name in engines}
+    for _ in range(rounds):
+        for name, eng in engines.items():  # interleaved arms
+            t0, k0 = time.perf_counter(), eng.ticks
+            replay_trace(eng, trace_for(seed))
+            dt = time.perf_counter() - t0
+            tps = (eng.ticks - k0) / dt if dt > 0 else 0.0
+            best[name] = max(best[name], tps)
+    out = dict(
+        rounds=rounds, requests=requests,
+        plain_ticks_per_s=best["plain"],
+        instrumented_ticks_per_s=best["instrumented"],
+        ratio=(best["instrumented"] / best["plain"]
+               if best["plain"] > 0 else 0.0),
+        traces_recorded=tracer.stats()["recorded"],
+        scrape_lines=len(render(registry).splitlines()))
+    emit("serve/obs_overhead/ticks_per_s_ratio", out["ratio"],
+         f"plain={best['plain']:.0f};"
+         f"instrumented={best['instrumented']:.0f};"
+         f"rounds={rounds};traces={out['traces_recorded']}")
+    return out
+
+
 def run(*, suite="tiny", requests=16, slots=8, iters_per_tick=8, seed=0,
         warm=True, arrival_rate=None, policy="fifo", sweep=True,
-        sweep_arrival_rate=100.0, tier_sweep=True, fleet_memory=True):
+        sweep_arrival_rate=100.0, tier_sweep=True, fleet_memory=True,
+        obs_overhead=True, prom=None):
     """One warmup replay through the same engine (pays jit compiles),
     then the measured replay; with ``sweep`` the wide-head policy
-    comparison reuses the already-factored cache."""
+    comparison reuses the already-factored cache.  With ``prom`` the
+    main run serves under a metrics registry whose final scrape is
+    written to that path."""
+    from repro.obs import MetricsRegistry, render
+    registry = MetricsRegistry() if prom else None
     metrics, _, eng = run_service(
         suite=suite, requests=requests, slots=slots,
         iters_per_tick=iters_per_tick, seed=seed,
         warmup_requests=requests if warm else 0,
-        arrival_rate=arrival_rate, policy=policy, return_engine=True)
+        arrival_rate=arrival_rate, policy=policy, return_engine=True,
+        metrics=registry)
     emit(f"serve/{suite}/requests_per_s", metrics["requests_per_s"],
          f"completed={metrics['completed']};rhs={metrics['rhs_total']}")
     emit(f"serve/{suite}/ticks_per_s", metrics["ticks_per_s"],
@@ -290,6 +375,13 @@ def run(*, suite="tiny", requests=16, slots=8, iters_per_tick=8, seed=0,
     if fleet_memory:
         metrics["fleet_memory"] = run_fleet_memory(
             seed=seed, slots=slots, iters_per_tick=iters_per_tick)
+    if obs_overhead:
+        metrics["obs_overhead"] = run_obs_overhead(
+            seed=seed, slots=slots, iters_per_tick=iters_per_tick)
+    if registry is not None:
+        with open(prom, "w") as fh:
+            fh.write(render(registry))
+        print(f"wrote {prom}")
     return metrics
 
 
@@ -322,6 +414,12 @@ def main():
     ap.add_argument("--no-fleet-memory", action="store_true",
                     help="skip the eviction-churn + compaction "
                          "fleet-memory measurement")
+    ap.add_argument("--no-obs-overhead", action="store_true",
+                    help="skip the instrumented-vs-plain tick-"
+                         "throughput comparison")
+    ap.add_argument("--prom", default=None,
+                    help="write the main run's final Prometheus scrape "
+                         "to this file (uploaded as a CI artifact)")
     ap.add_argument("--json", default=None,
                     help="write service metrics to this JSON file "
                          "(uploaded as a CI artifact)")
@@ -333,7 +431,9 @@ def main():
                   sweep=not args.no_sweep,
                   sweep_arrival_rate=args.sweep_arrival_rate,
                   tier_sweep=not args.no_tier_sweep,
-                  fleet_memory=not args.no_fleet_memory)
+                  fleet_memory=not args.no_fleet_memory,
+                  obs_overhead=not args.no_obs_overhead,
+                  prom=args.prom)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(metrics, fh, indent=2)

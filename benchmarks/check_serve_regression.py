@@ -40,7 +40,11 @@ Two kinds of gate:
   ``fleet_device_bytes <= 1.5 x fleet_live_bytes`` after eviction +
   compaction, with at least one compaction run and every
   post-compaction solve converged (stacks really shrank, and shrinking
-  them kept the engine's resident row indices coherent);
+  them kept the engine's resident row indices coherent).
+
+  The ``obs_overhead`` block (when present) gates the observability
+  tax: the instrumented engine's best ticks/s must be at least 0.98x
+  the plain engine's on the same interleaved closed-loop replay;
 * **throughput ratio**: ``ticks_per_s`` vs the committed baseline
   (insensitive to request mix, sensitive to per-tick host glue).  The
   bar is deliberately loose (default: fail only when the baseline is
@@ -149,6 +153,34 @@ def _padding_failures(current: dict) -> list:
     return failures
 
 
+# instrumentation may cost at most this fraction of tick throughput —
+# the off-hot-path contract of repro.obs, measured interleaved
+# best-of-N so runner noise hits both arms alike
+OBS_OVERHEAD_MIN_RATIO = 0.98
+
+
+def _obs_overhead_failures(current: dict) -> list:
+    """Gate on the ``obs_overhead`` block (absent in pre-observability
+    artifacts: check skipped): the instrumented engine must hold at
+    least ``OBS_OVERHEAD_MIN_RATIO`` of the plain engine's best
+    ticks/s on the same trace."""
+    ob = current.get("obs_overhead")
+    if not ob:
+        return []
+    ratio = float(ob.get("ratio", 0.0))
+    if ratio < OBS_OVERHEAD_MIN_RATIO:
+        return [
+            f"[obs_overhead] instrumented/plain ticks_per_s ratio="
+            f"{ratio:.3f} < {OBS_OVERHEAD_MIN_RATIO} "
+            f"(instrumented={ob['instrumented_ticks_per_s']:.0f}/s vs "
+            f"plain={ob['plain_ticks_per_s']:.0f}/s — metrics/tracing "
+            f"are taxing the serve hot path)"]
+    print(f"obs_overhead OK: instrumented/plain ratio={ratio:.3f} "
+          f">= {OBS_OVERHEAD_MIN_RATIO} "
+          f"({ob['traces_recorded']} traces recorded)")
+    return []
+
+
 def check_invariants(current: dict) -> int:
     """Machine-independent engine-counter gates (no baseline needed)."""
     eng = current.get("engine")
@@ -164,6 +196,7 @@ def check_invariants(current: dict) -> int:
             failures += _engine_failures(m["engine"], label=name,
                                          require_bucket_compiles=True)
     failures += _padding_failures(current)
+    failures += _obs_overhead_failures(current)
     if {"fifo", "priority"} <= set(sweep.get("policies") or {}):
         f95 = float(sweep["policies"]["fifo"]["latency_p95_s"])
         b95 = float(sweep["policies"]["priority"]["latency_p95_s"])

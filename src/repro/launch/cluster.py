@@ -28,7 +28,8 @@ def build_cluster(*, suite="tiny", replicas=2, routing="affinity",
                   overload="reject", replicate_above=None,
                   rate_window_s=1.0, replica_ttl_s=30.0,
                   precond="ac", select_epsilon=0.1, seed=0,
-                  factor_replicas=0, devices=None):
+                  factor_replicas=0, devices=None,
+                  metrics=None, tracer=None, detector=None):
     """Stand up the cluster and register (not factor) the suite graphs.
     Returns ``(cluster, sizes)`` with graph ids = suite names."""
     from repro.data import graphs
@@ -47,6 +48,7 @@ def build_cluster(*, suite="tiny", replicas=2, routing="affinity",
         replica_ttl_s=replica_ttl_s, precond=precond,
         select_epsilon=select_epsilon, seed=seed,
         factor_replicas=factor_replicas, devices=devices,
+        metrics=metrics, tracer=tracer, detector=detector,
         cache_kw=dict(chunk=chunk, fill_slack=fill_slack, strict=False))
     import jax
     for i, (name, g) in enumerate(built.items()):
@@ -91,7 +93,8 @@ def run_cluster(*, suite="tiny", requests=48, replicas=2,
                 max_queue=256, overload="reject", replicate_above=None,
                 rate_window_s=1.0, replica_ttl_s=30.0,
                 precond="ac", select_epsilon=0.1, deadline_ms=None,
-                factor_replicas=0, devices=None):
+                factor_replicas=0, devices=None,
+                metrics=None, tracer=None, detector=None):
     """Build the cluster, replay one trace, close, return metrics."""
     from repro.launch.serve import make_trace
     cluster, sizes = build_cluster(
@@ -101,7 +104,8 @@ def run_cluster(*, suite="tiny", requests=48, replicas=2,
         replicate_above=replicate_above, rate_window_s=rate_window_s,
         replica_ttl_s=replica_ttl_s, precond=precond,
         select_epsilon=select_epsilon, seed=seed,
-        factor_replicas=factor_replicas, devices=devices)
+        factor_replicas=factor_replicas, devices=devices,
+        metrics=metrics, tracer=tracer, detector=detector)
     gids = list(sizes)
     trace = make_trace(gids, sizes, requests, seed=seed,
                        max_nrhs=min(max_nrhs, slots),
@@ -139,7 +143,8 @@ def _storm_suite(k: int, seed: int):
 def run_factor_storm(*, replicas=2, factor_replicas=0, storm_graphs=4,
                      warm_dt_s=0.25, settle_s=2.0, slots=8,
                      iters_per_tick=8, chunk=128, seed=0,
-                     max_queue=1024, devices=None):
+                     max_queue=1024, devices=None,
+                     metrics=None, tracer=None):
     """The disaggregation benchmark: a steady warm solve stream with a
     burst of cold factorizations layered on top.
 
@@ -152,18 +157,35 @@ def run_factor_storm(*, replicas=2, factor_replicas=0, storm_graphs=4,
     ``control_s``); disaggregated they queue on the factor tier and the
     drivers only pay adoptions.  The warm stream runs until the storm
     resolves (plus ``settle_s``), so it spans the storm on any machine
-    speed; warm-request e2e p95 is the headline number."""
+    speed; warm-request e2e p95 is the headline number.
+
+    Each run carries its own :class:`~repro.obs.MetricsRegistry` (or a
+    caller-supplied one — e.g. the bench's ``--prom`` dump) and a
+    :class:`~repro.obs.SustainedThresholdDetector` watching the cluster
+    queue gauge, so the storm doubles as the overload-detection fixture:
+    the colocated burst should trip it, a quiet stream should not.  The
+    detector snapshot rides back in the ``overload`` key."""
     import threading
     import concurrent.futures as cf
     import numpy as np
     import jax
+    from repro.obs import MetricsRegistry, SustainedThresholdDetector
+    from repro.obs.histogram import summarize
     from repro.serve import ClusterOverloadedError
 
+    registry = metrics if metrics is not None else MetricsRegistry()
+    # thresholds sized to the storm shape: the warm stream alone keeps
+    # the cluster queue near zero, while a colocated burst stalls the
+    # drivers and piles warm submits up well past a handful
+    detector = SustainedThresholdDetector(
+        registry, high_queue=3.0, low_queue=1.0,
+        window_s=0.5, sustain_s=0.2, cool_s=0.5)
     cluster, sizes = build_cluster(
         suite="micro", replicas=replicas, routing="affinity",
         slots=slots, iters_per_tick=iters_per_tick, chunk=chunk,
         max_queue=max_queue, seed=seed,
-        factor_replicas=factor_replicas, devices=devices)
+        factor_replicas=factor_replicas, devices=devices,
+        metrics=registry, tracer=tracer, detector=detector)
     try:
         warm_gids = list(sizes)
         rng = np.random.default_rng(seed)
@@ -224,8 +246,6 @@ def run_factor_storm(*, replicas=2, factor_replicas=0, storm_graphs=4,
             for r in (f.result() for f in warm_futs
                       if f.exception() is None))
         cs = cluster.stats().as_dict()
-        pct = (lambda p: lat[min(int(p * len(lat)), len(lat) - 1)]
-               if lat else float("nan"))
         return dict(
             factor_replicas=factor_replicas, replicas=replicas,
             storm_graphs=len(storm), storm_s=storm_s,
@@ -233,14 +253,13 @@ def run_factor_storm(*, replicas=2, factor_replicas=0, storm_graphs=4,
                                 for r in storm_res),
             warm_requests=len(lat), warm_shed=warm_shed[0],
             warm_dt_s=warm_dt_s, seed=seed,
-            warm_p50_s=pct(0.50), warm_p95_s=pct(0.95),
-            warm_max_s=lat[-1] if lat else float("nan"),
+            **summarize(lat, prefix="warm_", unit="s"),
             solve_control_s=sum(r["frontend"]["control_s"]
                                 for r in cs["per_replica"]),
             solve_control_calls=sum(r["frontend"]["control_calls"]
                                     for r in cs["per_replica"]),
             adoptions=cs["adoptions"], factor_dedups=cs["factor_dedups"],
-            cluster=cs)
+            overload=cs["overload"], cluster=cs)
     finally:
         cluster.close(drain=False)
 
@@ -296,19 +315,46 @@ def main():
                          "(the adaptive selector filters on it)")
     ap.add_argument("--json", default=None,
                     help="write metrics (incl. ClusterStats) to JSON")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve a Prometheus /metrics scrape endpoint "
+                         "on this port for the run (0 = ephemeral)")
+    ap.add_argument("--trace-json", default=None,
+                    help="export per-request lifecycle spans as Chrome "
+                         "trace_event JSON (chrome://tracing, Perfetto)")
     args = ap.parse_args()
 
-    metrics, done = run_cluster(
-        suite=args.suite, requests=args.requests, replicas=args.replicas,
-        routing=args.routing, slots=args.slots,
-        iters_per_tick=args.iters_per_tick, max_nrhs=args.max_nrhs,
-        chunk=args.chunk, seed=args.seed, skew=args.skew,
-        arrival_rate=args.arrival_rate, policy=args.policy,
-        max_skips=args.max_skips, max_queue=args.max_queue,
-        overload=args.overload, replicate_above=args.replicate_above,
-        replica_ttl_s=args.replica_ttl_s, precond=args.precond,
-        select_epsilon=args.select_epsilon, deadline_ms=args.deadline_ms,
-        factor_replicas=args.factor_replicas, devices=args.devices)
+    from repro.obs import (MetricsRegistry, SustainedThresholdDetector,
+                           Tracer, maybe_serve)
+    registry = (MetricsRegistry() if args.metrics_port is not None
+                else None)
+    tracer = Tracer() if args.trace_json else None
+    detector = (SustainedThresholdDetector(registry)
+                if registry is not None else None)
+    server = maybe_serve(registry, args.metrics_port)
+    if server is not None:
+        print(f"metrics: http://localhost:{server.port}/metrics")
+
+    try:
+        metrics, done = run_cluster(
+            suite=args.suite, requests=args.requests,
+            replicas=args.replicas,
+            routing=args.routing, slots=args.slots,
+            iters_per_tick=args.iters_per_tick, max_nrhs=args.max_nrhs,
+            chunk=args.chunk, seed=args.seed, skew=args.skew,
+            arrival_rate=args.arrival_rate, policy=args.policy,
+            max_skips=args.max_skips, max_queue=args.max_queue,
+            overload=args.overload, replicate_above=args.replicate_above,
+            replica_ttl_s=args.replica_ttl_s, precond=args.precond,
+            select_epsilon=args.select_epsilon,
+            deadline_ms=args.deadline_ms,
+            factor_replicas=args.factor_replicas, devices=args.devices,
+            metrics=registry, tracer=tracer, detector=detector)
+    finally:
+        if server is not None:
+            server.close()
+    if tracer is not None and args.trace_json:
+        n_ev = tracer.export_chrome(args.trace_json)
+        print(f"wrote {args.trace_json} ({n_ev} trace events)")
 
     c = metrics["cluster"]
     print(f"suite={metrics['suite']} replicas={metrics['replicas']} "
@@ -327,6 +373,12 @@ def main():
           f"(hits={c['affinity_hits']} misses={c['affinity_misses']}) "
           f"replications={c['replications']} demotions={c['demotions']} "
           f"ejections={c['ejections']} hot_graphs={c['hot_graphs']}")
+    if c.get("overload"):
+        ov = c["overload"]
+        print(f"overload: state={ov['state']} "
+              f"rec={ov['recommendation']} "
+              f"transitions={ov['transitions']} "
+              f"queue_mean={ov['queue_mean']:.1f}")
     if c.get("factor_tier"):
         ft = c["factor_tier"]
         print(f"factor tier: replicas={ft['replicas']} "

@@ -39,14 +39,11 @@ import json
 import time
 
 
+from repro.obs.histogram import percentile
+
 # suite names resolved against the canonical registry in repro.data.graphs
 # (no local re-definitions: one source of truth for generator params/seeds)
 SMALL_NAMES = ("grid2d_64", "grid3d_uniform_16", "powerlaw_4k")
-
-
-def percentile(xs, q):
-    import numpy as np
-    return float(np.percentile(np.asarray(xs, float), q)) if len(xs) else 0.0
 
 
 def make_trace(gids, sizes, n_requests, *, seed=0, max_nrhs=4,
@@ -90,7 +87,8 @@ def make_trace(gids, sizes, n_requests, *, seed=0, max_nrhs=4,
 
 def build_service(*, suite="tiny", slots=8, iters_per_tick=8, chunk=128,
                   fill_slack=32, memory_budget_mb=None, policy="fifo",
-                  max_skips=None, precond="ac", precond_params=None):
+                  max_skips=None, precond="ac", precond_params=None,
+                  metrics=None, tracer=None):
     """Stand up the service: generate the graph suite, admit the fleet
     to a :class:`FactorCache`, wrap it in a :class:`SolveEngine` with
     the named admission policy.  ``precond`` selects the preconditioner
@@ -140,7 +138,8 @@ def build_service(*, suite="tiny", slots=8, iters_per_tick=8, chunk=128,
                          precond_params=precond_params)
     t_factor = time.perf_counter() - t0
     eng = SolveEngine(cache, slots=slots, iters_per_tick=iters_per_tick,
-                      admission=make_policy(policy, max_skips=max_skips))
+                      admission=make_policy(policy, max_skips=max_skips),
+                      metrics=metrics, tracer=tracer)
     registry = {name: (g, keys[name]) for name, g in built.items()}
     return eng, {name: g.n for name, g in built.items()}, t_factor, registry
 
@@ -212,8 +211,13 @@ def replay_trace_auto(eng, trace, *, registry, selector):
         base, _, fam = r.graph_id.partition("::")
         missed = r.status == "deadline_missed" or (
             r.deadline_s is not None and r.latency_s > r.deadline_s)
+        # the lifecycle stamps carry the deconflated signal: pure
+        # service seconds as the serve estimate, the lazily-paid
+        # construction (stamped below) as its own component
+        serve = r.service_s if r.admit_time > 0.0 else r.latency_s
         selector.observe(
-            base, fam or "ac", wall_s=r.latency_s,
+            base, fam or "ac", wall_s=r.latency_s, serve_s=serve,
+            construct_s=r.factor_wait_s if r.factor_mode else None,
             iters=int(np.max(r.iters)) if r.iters is not None else None,
             ok=r.status == "converged", deadline_ok=not missed)
 
@@ -226,7 +230,10 @@ def replay_trace_auto(eng, trace, *, registry, selector):
                 else f"{req.graph_id}::{fam}"
             if not eng.cache.fresh(gid):
                 g, key = registry[req.graph_id]
+                t_f0 = time.perf_counter()
                 eng.cache.factor(g, key, graph_id=gid, family=fam)
+                req.factor_wait_s = time.perf_counter() - t_f0
+                req.factor_mode = "factor"
             req.graph_id = gid
             eng.submit(req)
         if eng.busy:
@@ -270,7 +277,8 @@ def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
                 arrival_rate=None, policy="fifo", max_skips=None,
                 deadline_ms=None, use_async=False, max_queue=256,
                 overload="block", precond="ac", precond_params=None,
-                select_epsilon=0.2, skew=None, return_engine=False):
+                select_epsilon=0.2, skew=None, return_engine=False,
+                metrics=None, tracer=None):
     """Build the service, replay a trace, return a metrics dict.  With
     ``warmup_requests`` > 0 a throwaway trace is replayed first through
     the *same* engine so the measured replay excludes jit compiles.
@@ -287,7 +295,7 @@ def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
         chunk=chunk, fill_slack=fill_slack,
         memory_budget_mb=memory_budget_mb, policy=policy,
         max_skips=max_skips, precond=precond,
-        precond_params=precond_params)
+        precond_params=precond_params, metrics=metrics, tracer=tracer)
     gids = list(sizes)
     deadline_s = deadline_ms / 1e3 if deadline_ms else None
     selector = None
@@ -343,7 +351,7 @@ def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
     if use_async:
         from repro.serve import SolveFrontend
         with SolveFrontend(eng, max_queue=max_queue,
-                           overload=overload) as fe:
+                           overload=overload, metrics=metrics) as fe:
             metrics, done = replay_trace_async(fe, trace)
             fs = fe.stats()
             frontend_stats = dict(submitted=fs.submitted,
@@ -370,6 +378,7 @@ def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
                    frontend=frontend_stats,
                    cache=eng.cache.stats(),
                    engine=eng.stats().as_dict(),
+                   tracing=(tracer.stats() if tracer is not None else None),
                    **metrics)
     if return_engine:      # benchmarks reuse the factored cache (sweeps)
         return metrics, done, eng
@@ -422,18 +431,42 @@ def main():
     ap.add_argument("--memory-budget-mb", type=int, default=None)
     ap.add_argument("--json", default=None,
                     help="write service metrics to this JSON file")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve a Prometheus scrape endpoint on this "
+                         "port for the replay's lifetime "
+                         "(curl localhost:PORT/metrics)")
+    ap.add_argument("--trace-json", default=None,
+                    help="record per-request lifecycle spans and write "
+                         "Chrome trace_event JSON here "
+                         "(chrome://tracing / Perfetto)")
     args = ap.parse_args()
 
-    metrics, done = run_service(
-        suite=args.suite, requests=args.requests, slots=args.slots,
-        iters_per_tick=args.iters_per_tick, max_nrhs=args.max_nrhs,
-        chunk=args.chunk, seed=args.seed,
-        memory_budget_mb=args.memory_budget_mb,
-        arrival_rate=args.arrival_rate, policy=args.policy,
-        max_skips=args.max_skips, deadline_ms=args.deadline_ms,
-        use_async=args.use_async, max_queue=args.max_queue,
-        overload=args.overload, precond=args.precond,
-        select_epsilon=args.select_epsilon, skew=args.skew)
+    from repro.obs import MetricsRegistry, Tracer, maybe_serve
+    registry = MetricsRegistry() \
+        if (args.metrics_port is not None) else None
+    tracer = Tracer() if args.trace_json else None
+    server = maybe_serve(registry, args.metrics_port)
+    if server is not None:
+        print(f"metrics: http://localhost:{server.port}/metrics")
+
+    try:
+        metrics, done = run_service(
+            suite=args.suite, requests=args.requests, slots=args.slots,
+            iters_per_tick=args.iters_per_tick, max_nrhs=args.max_nrhs,
+            chunk=args.chunk, seed=args.seed,
+            memory_budget_mb=args.memory_budget_mb,
+            arrival_rate=args.arrival_rate, policy=args.policy,
+            max_skips=args.max_skips, deadline_ms=args.deadline_ms,
+            use_async=args.use_async, max_queue=args.max_queue,
+            overload=args.overload, precond=args.precond,
+            select_epsilon=args.select_epsilon, skew=args.skew,
+            metrics=registry, tracer=tracer)
+    finally:
+        if server is not None:
+            server.close()
+    if tracer is not None:
+        n = tracer.export_chrome(args.trace_json)
+        print(f"wrote {n} trace events to {args.trace_json}")
 
     print(f"suite={metrics['suite']} graphs={metrics['graphs']} "
           f"factor_batched={metrics['factor_s']:.2f}s "

@@ -1,0 +1,22 @@
+"""Observability control plane: metrics registry + time series,
+Prometheus scrape endpoint, request lifecycle tracing, overload
+detection.  See ``docs/observability.md`` for the metric glossary and
+wiring quickstarts."""
+from repro.obs.histogram import (DEFAULT_LATENCY_BUCKETS_S, bucket_index,
+                                 percentile, quantile_from_counts, summarize)
+from repro.obs.overload import OverloadDetector, SustainedThresholdDetector
+from repro.obs.prometheus import MetricsServer, maybe_serve, render
+from repro.obs.registry import (NULL, CardinalityError, Counter, Gauge,
+                                Histogram, MetricsRegistry, NullRegistry)
+from repro.obs.tracing import (RequestTrace, Span, Tracer,
+                               trace_from_request)
+
+__all__ = [
+    "DEFAULT_LATENCY_BUCKETS_S", "bucket_index", "percentile",
+    "quantile_from_counts", "summarize",
+    "NULL", "CardinalityError", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry", "NullRegistry",
+    "MetricsServer", "maybe_serve", "render",
+    "RequestTrace", "Span", "Tracer", "trace_from_request",
+    "OverloadDetector", "SustainedThresholdDetector",
+]

@@ -50,6 +50,7 @@ from repro.core.ref_ac import DeviceFactor
 from repro.core.parac import factorize_batched
 from repro.core.solver import get_family
 from repro.core.trisolve import build_schedules_batched
+from repro.obs.registry import NULL as _NULL_METRICS
 
 from .replica import EngineReplica
 
@@ -143,6 +144,7 @@ class FactorReplica(threading.Thread):
         target = job.target
         attempts = 0
         while True:
+            t_a0 = time.perf_counter()
             try:
                 handle = target.adopt(
                     job.g, f, graph_id=job.gid, family=job.family,
@@ -173,6 +175,8 @@ class FactorReplica(threading.Thread):
                 target = newt
                 continue
             self.adoptions += 1
+            self.tier._m_adopt_s.observe(time.perf_counter() - t_a0)
+            self.tier._m_adoptions.inc()
             with self.tier._lock:
                 self.tier.adoptions += 1
             if not job.future.done():
@@ -203,6 +207,7 @@ class FactorReplica(threading.Thread):
                 continue
             dt = time.perf_counter() - t0
             self.factor_s += dt
+            tier._m_construct_s.observe(dt)
             self.batches += 1
             self.factored += len(batch)
             if len(batch) > 1:
@@ -255,7 +260,8 @@ class FactorTier:
                  strict: bool = True, max_retries: int = 3,
                  dtype=np.float32, max_batch: int = 16,
                  max_failovers: int = 8,
-                 on_retarget: Optional[Callable] = None):
+                 on_retarget: Optional[Callable] = None,
+                 metrics=None):
         if replicas < 1:
             raise ValueError("factor tier needs >= 1 replica")
         self.chunk = chunk
@@ -280,6 +286,24 @@ class FactorTier:
         self.adoptions = 0
         self.failovers = 0
         self.coalesced_factorizations = 0
+        # observability (repro.obs): tier-level instruments shared by
+        # the workers — no-ops when metrics is None
+        reg = metrics if metrics is not None else _NULL_METRICS
+        self._m_enqueued = reg.counter(
+            "repro_factor_tier_enqueued_total",
+            "constructions queued on the factor tier")
+        self._m_dedups = reg.counter(
+            "repro_factor_tier_dedups_total",
+            "placements that rode an in-flight construction")
+        self._m_adoptions = reg.counter(
+            "repro_factor_tier_adoptions_total",
+            "factor payloads shipped to solve replicas")
+        self._m_construct_s = reg.histogram(
+            "repro_factor_tier_construct_seconds",
+            "construction wall seconds per batch on a tier worker")
+        self._m_adopt_s = reg.histogram(
+            "repro_factor_tier_adopt_seconds",
+            "adopt round-trip seconds per shipped payload")
         self.workers = [
             FactorReplica(i, self,
                           devices[i] if devices is not None else None)
@@ -305,10 +329,12 @@ class FactorTier:
             if prior is not None:
                 prior.siblings.append(job)
                 self.dedups += 1
+                self._m_dedups.inc()
                 return job.future
             self._pending[gid] = job
             self._queue.append(job)
             self.enqueued += 1
+            self._m_enqueued.inc()
             self._work.notify()
         return job.future
 

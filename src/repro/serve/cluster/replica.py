@@ -47,7 +47,8 @@ class EngineReplica:
                  max_queue: int = 256, overload: str = "reject",
                  clock: Optional[Callable[[], float]] = None,
                  device: Optional[jax.Device] = None,
-                 cache_kw: Optional[Dict] = None):
+                 cache_kw: Optional[Dict] = None,
+                 metrics=None, tracer=None):
         self.index = index
         self.device = device
         kw = dict(cache_kw or {})
@@ -58,9 +59,14 @@ class EngineReplica:
         self.cache = FactorCache(**kw)
         self.engine = SolveEngine(self.cache, slots=slots,
                                   iters_per_tick=iters_per_tick,
-                                  admission=admission, clock=clock)
+                                  admission=admission, clock=clock,
+                                  metrics=metrics, tracer=tracer,
+                                  obs_replica=index,
+                                  obs_device=str(device) if device is not None
+                                  else "")
         self.frontend = SolveFrontend(self.engine, max_queue=max_queue,
-                                      overload=overload)
+                                      overload=overload, metrics=metrics,
+                                      obs_replica=index)
 
     # -- read-only probes (any thread) --------------------------------------
     def fresh(self, graph_id: str) -> bool:

@@ -65,6 +65,7 @@ import numpy as np
 import jax
 
 from repro.core.solver import PRECOND_FAMILIES, graph_fingerprint
+from repro.obs.registry import NULL as _NULL_METRICS
 from repro.serve.admission import make_policy
 from repro.serve.engine import SolveRequest, make_request
 from repro.serve.frontend import EngineOverloadedError
@@ -502,7 +503,8 @@ class SolveCluster:
                  clock: Optional[Callable[[], float]] = None,
                  seed: int = 0, cache_kw: Optional[Dict] = None,
                  devices=None, factor_replicas: int = 0,
-                 factor_max_batch: int = 16):
+                 factor_max_batch: int = 16,
+                 metrics=None, tracer=None, detector=None):
         if replicas < 1:
             raise ValueError("replicas must be >= 1")
         if factor_replicas < 0:
@@ -515,7 +517,11 @@ class SolveCluster:
         self.precond_params = dict(precond_params or {})
         self.selector = (AdaptiveSelector(seed=seed, epsilon=select_epsilon)
                          if precond == "auto" else None)
-        self._clock = clock if clock is not None else time.monotonic
+        # perf_counter matches the engines' default clock, so the
+        # cluster-stamped submit_time and the engine-stamped admit/finish
+        # times live on one timeline (what makes the lifecycle span
+        # partition sum to e2e latency)
+        self._clock = clock if clock is not None else time.perf_counter
         # solve replicas take the first device slots, factor replicas
         # the next ones — on a host with >= replicas + factor_replicas
         # devices the tiers never share an accelerator
@@ -526,7 +532,8 @@ class SolveCluster:
                           admission=make_policy(admission,
                                                 max_skips=max_skips),
                           max_queue=max_queue, overload=overload,
-                          clock=clock, device=devs[i], cache_kw=cache_kw)
+                          clock=clock, device=devs[i], cache_kw=cache_kw,
+                          metrics=metrics, tracer=tracer)
             for i in range(replicas)]
         ckw = dict(cache_kw or {})
         self.factor_tier = FactorTier(
@@ -537,7 +544,8 @@ class SolveCluster:
             max_retries=ckw.get("max_retries", 3),
             dtype=ckw.get("dtype", np.float32),
             max_batch=factor_max_batch,
-            on_retarget=self._retarget) if factor_replicas > 0 else None
+            on_retarget=self._retarget,
+            metrics=metrics) if factor_replicas > 0 else None
         self.router = Router(
             make_routing(routing, seed=seed), self.replicas,
             clock=self._clock, factor_cb=self._factor_on,
@@ -549,6 +557,50 @@ class SolveCluster:
         self._lock = threading.Lock()
         self._seq = 0
         self.submitted = 0
+
+        # -- observability (repro.obs): cluster-level instruments + the
+        # pull-style mirror of router/cache counters.  The mirror runs
+        # as a registry collect callback (sample/scrape time), so the
+        # routing hot path is untouched by it.
+        reg = metrics if metrics is not None else _NULL_METRICS
+        self.metrics = metrics
+        self.tracer = tracer
+        self._m_arrivals = reg.counter(
+            "repro_cluster_arrivals_total",
+            "requests entering the cluster submit path")
+        self._m_routed = reg.counter(
+            "repro_cluster_routed_total",
+            "requests successfully routed, by affinity outcome",
+            labels=("hit",))
+        self._m_shed = reg.counter(
+            "repro_cluster_shed_total",
+            "requests no healthy replica could take")
+        self._m_queue = reg.gauge(
+            "repro_cluster_queue_depth",
+            "requests waiting before lane admission, summed over "
+            "healthy replicas")
+        self._m_latency = reg.histogram(
+            "repro_cluster_latency_seconds",
+            "client-observed end-to-end latency (cluster submit to "
+            "finish)")
+        self._m_factor_wait = reg.histogram(
+            "repro_cluster_factor_wait_seconds",
+            "cold-path construction/adopt wait per routed request")
+        self._obs_lock = threading.Lock()
+        self.detector = detector
+        if metrics is not None:
+            self._g_healthy = reg.gauge(
+                "repro_cluster_healthy_replicas", "routable replicas")
+            self._g_placements = reg.gauge(
+                "repro_cluster_live_placements", "live factor placements")
+            self._g_factor_queue = reg.gauge(
+                "repro_cluster_factor_tier_queue_depth",
+                "constructions queued on the factor tier")
+            self._g_cache_bytes = reg.gauge(
+                "repro_cache_device_bytes",
+                "device bytes held by a replica's factor cache",
+                labels=("replica",))
+            metrics.on_collect(self._collect)
 
     # -- graph registry -----------------------------------------------------
     def register(self, g, key, *, graph_id: Optional[str] = None) -> str:
@@ -641,6 +693,36 @@ class SolveCluster:
         fut.result()
         return gid, rep.index
 
+    def _collect(self, reg) -> None:
+        """Registry collect callback: mirror router/cache snapshot state
+        into gauges at sample/scrape time (pull-style — the routing hot
+        path never pays for these), then advance the overload detector
+        on the freshly-aggregated queue depth."""
+        alive = [rep for rep in self.replicas if rep.alive]
+        self._g_healthy.set(len(alive))
+        self._m_queue.set(sum(rep.frontend.queue_depth for rep in alive))
+        self._g_placements.set(
+            sum(1 for pl in list(self.router.placements.values())
+                for v in list(pl.values()) if v is None))
+        self._g_factor_queue.set(
+            self.factor_tier.queue_depth if self.factor_tier is not None
+            else 0)
+        for rep in self.replicas:
+            self._g_cache_bytes.labels(replica=str(rep.index)).set(
+                rep.cache.device_bytes if rep.alive else 0)
+        if self.detector is not None:
+            with self._obs_lock:   # samples race in from replica drivers
+                self.detector.update(self._clock())
+
+    def _obs_done(self, fut: Future) -> None:
+        """Done-callback (attached only when metrics are on) observing
+        the client-visible latency of one routed request."""
+        try:
+            res = fut.result()
+        except Exception:
+            return
+        self._m_latency.observe(max(res.finish_time - res.submit_time, 0.0))
+
     def _observer(self, base_gid: str, fam: str) -> Callable:
         """Done-callback feeding one served request back into the
         selector: service seconds as the client saw them, block-max
@@ -659,7 +741,16 @@ class SolveCluster:
             iters = int(np.max(res.iters)) if res.iters is not None else None
             missed = res.status == "deadline_missed" or (
                 res.deadline_s is not None and wall > res.deadline_s)
-            sel.observe(base_gid, fam, wall_s=wall, iters=iters,
+            # feed the bandit *deconflated* timings off the request's
+            # lifecycle stamps: pure service time (admit -> finish) as
+            # the serve signal, the cold-path construction wait as its
+            # own component — not the wall-clock that mixed both with
+            # queueing (the ROADMAP's conflated-EWMA defect)
+            serve = max(res.finish_time - res.admit_time, 0.0) \
+                if res.admit_time > 0.0 else wall
+            construct = res.factor_wait_s if res.factor_mode else None
+            sel.observe(base_gid, fam, wall_s=wall, serve_s=serve,
+                        construct_s=construct, iters=iters,
                         ok=res.status == "converged",
                         deadline_ok=not missed)
         return _cb
@@ -674,6 +765,13 @@ class SolveCluster:
         holds on every exit path (CI-gated)."""
         with self._lock:
             self.submitted += 1
+        self._m_arrivals.inc()
+        # stamp ingress on the cluster clock (shared with the engines):
+        # route and factor waits below then land inside the request's
+        # [submit, finish] window, so traces attribute them and cold
+        # latency includes the construction the client actually waited on
+        if req.submit_time == 0.0:
+            req.submit_time = self._clock()
         # resolve the serving family once per request (overload retries
         # keep it — the retry is about *where*, not *what*) and rewrite
         # the graph id to the family-qualified placement id
@@ -704,7 +802,12 @@ class SolveCluster:
                         f"no healthy replica for graph_id="
                         f"{req.graph_id!r} ({len(tried)} overloaded "
                         f"this submit)")
+                # time-to-final-routing-decision (overwritten on retry:
+                # the span covers everything before this attempt's
+                # factor wait, keeping the trace partition contiguous)
+                req.route_s = max(self._clock() - req.submit_time, 0.0)
                 if wait is not None:
+                    t_w0 = self._clock()
                     try:
                         wait.result()  # cold path: factor landing first
                     except Exception:
@@ -717,6 +820,10 @@ class SolveCluster:
                             tried.add(rep.index)
                             continue
                         raise          # genuine factor failure: surface
+                    req.factor_wait_s = max(self._clock() - t_w0, 0.0)
+                    req.factor_mode = ("adopt" if self.factor_tier
+                                       is not None else "factor")
+                    self._m_factor_wait.observe(req.factor_wait_s)
                 try:
                     fut = rep.submit(req)
                 except EngineOverloadedError:
@@ -735,6 +842,9 @@ class SolveCluster:
                 req.replica = rep.index
                 with self._lock:
                     self.router.record_routed(rep, hit=hit)
+                self._m_routed.labels(hit="1" if hit else "0").inc()
+                if self.metrics is not None:
+                    fut.add_done_callback(self._obs_done)
                 if self.selector is not None:
                     fut.add_done_callback(
                         self._observer(base_gid, req_fam))
@@ -742,6 +852,7 @@ class SolveCluster:
         except Exception:
             with self._lock:
                 self.router.shed += 1
+            self._m_shed.inc()
             raise
 
     def submit(self, graph_id: str, b, *, rid: Optional[int] = None,
@@ -811,7 +922,9 @@ class SolveCluster:
                 adoptions=sum(rep.cache.adoptions
                               for rep in self.replicas),
                 factor_tier=(self.factor_tier.stats()
-                             if self.factor_tier is not None else None))
+                             if self.factor_tier is not None else None),
+                overload=(self.detector.stats()
+                          if self.detector is not None else None))
 
     # -- lifecycle ----------------------------------------------------------
     def drain(self, timeout: Optional[float] = None) -> bool:
@@ -832,6 +945,9 @@ class SolveCluster:
         """Close every replica (with ``drain``, in-flight work finishes
         first); the cluster is unusable afterwards.  The factor tier
         closes first so no construction lands on a closing driver."""
+        if self.metrics is not None:
+            # a scrape after close must not walk torn-down replicas
+            self.metrics.remove_collect(self._collect)
         if self.factor_tier is not None:
             self.factor_tier.close()
         for rep in self.replicas:

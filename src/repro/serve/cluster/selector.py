@@ -97,7 +97,10 @@ class AdaptiveSelector:
         return [f for f in self.families if (gid, f) in self._est]
 
     def _predict(self, gid: str, family: str) -> float:
-        return self._est[(gid, family)]["wall_s"]
+        # pure service time (admit -> finish), not the old conflated
+        # wall clock: queueing and cold construction must not make a
+        # fast family look slow (or a slow family look fast once warm)
+        return self._est[(gid, family)]["serve_s"]
 
     def _count(self, family: str) -> None:
         self.picks += 1
@@ -146,6 +149,8 @@ class AdaptiveSelector:
 
     # -- the feedback path --------------------------------------------------
     def observe(self, gid: str, family: str, *, wall_s: float,
+                serve_s: Optional[float] = None,
+                construct_s: Optional[float] = None,
                 iters: Optional[int] = None, ok: bool = True,
                 deadline_ok: bool = True) -> None:
         """Fold one completed (or failed) request back into the model.
@@ -153,13 +158,24 @@ class AdaptiveSelector:
         Args:
             gid: base graph id the request served.
             family: family it served under.
-            wall_s: submit→finish service seconds as the client saw it.
+            wall_s: submit→finish seconds as the client saw it (kept
+                for telemetry back-compat; no longer the prediction
+                signal).
+            serve_s: pure service seconds (lane admission → finish),
+                read off the request's lifecycle stamps — the signal
+                predictions rank on.  Falls back to ``wall_s`` when the
+                caller has no stamps (pre-tracing traces).
+            construct_s: construction/adopt seconds this request paid
+                on the cold path (``None`` = warm hit, leaves the
+                estimate untouched) — the amortizable cost a predicted
+                request stream divides down.
             iters: PCG iterations the solve took (block max), if known.
             ok: whether the solve converged — ``False`` quarantines the
                 family for this graph until an explore retries it.
             deadline_ok: whether the request met its deadline (always
                 ``True`` for deadline-less requests).
         """
+        serve = float(serve_s) if serve_s is not None else float(wall_s)
         with self._lock:
             self.observed += 1
             if not deadline_ok:
@@ -168,11 +184,21 @@ class AdaptiveSelector:
             if rec is None:
                 self._est[(gid, family)] = {
                     "wall_s": float(wall_s),
+                    "serve_s": serve,
+                    "construct_s": (float(construct_s)
+                                    if construct_s is not None else 0.0),
                     "iters": float(iters) if iters is not None else 0.0,
                     "n": 1, "ok": bool(ok)}
                 return
             a = self.alpha
             rec["wall_s"] += a * (float(wall_s) - rec["wall_s"])
+            rec["serve_s"] += a * (serve - rec["serve_s"])
+            if construct_s is not None:
+                # constructions are rare (factor-once/serve-many): a
+                # plain EWMA against mostly-absent samples would decay
+                # toward stale values, so only cold-path requests move it
+                rec["construct_s"] += a * (float(construct_s)
+                                           - rec["construct_s"])
             if iters is not None:
                 rec["iters"] += a * (float(iters) - rec["iters"])
             rec["n"] += 1

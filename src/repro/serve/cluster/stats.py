@@ -77,7 +77,13 @@ class ClusterStats:
     ``adoptions``); ``factor_tier`` the tier's own counters —
     ``factor_queue_depth``, ``coalesced_factorizations``, ``failovers``,
     per-tier-replica ``factor_s`` — or ``None`` when the cluster
-    factors colocated."""
+    factors colocated.
+
+    ``overload`` carries the attached
+    :class:`~repro.obs.overload.OverloadDetector` snapshot — state
+    (``ok``/``overloaded``), windowed queue/arrival readings and the
+    ``scale_up``/``scale_down``/``hold`` recommendation — or ``None``
+    when the cluster runs without one."""
 
     policy: str
     replicas: int
@@ -98,6 +104,7 @@ class ClusterStats:
     factor_dedups: int = 0
     adoptions: int = 0
     factor_tier: Optional[Dict] = None
+    overload: Optional[Dict] = None
 
     @property
     def hit_rate(self) -> float:

@@ -64,6 +64,8 @@ from repro.core.solver import FactorCache, FactorFleet, FactorHandle
 from repro.core.parac import _next_pow2
 from repro.core.pcg import (FleetArrays, FleetPCGState, pcg_fleet_init,
                             pcg_fleet_step)
+from repro.obs.registry import NULL as _NULL_METRICS
+from repro.obs.tracing import trace_from_request
 from repro.serve.admission import AdmissionPolicy, FIFOAdmission
 
 
@@ -108,6 +110,11 @@ class SolveRequest:                        # arrays, field-wise == is a trap
     submit_tick: int = -1
     admit_tick: int = -1
     finish_tick: int = -1
+    # -- lifecycle attribution (read by repro.obs.tracing) -------------------
+    route_s: float = 0.0        # router decision + retry time (cluster)
+    factor_wait_s: float = 0.0  # cold-path construction/adopt wait
+    factor_mode: str = ""       # "" (warm hit) | "factor" | "adopt"
+    first_tick_time: float = 0.0  # stamped by the engine when traced
     _partial: Dict[int, tuple] = dataclasses.field(
         default_factory=dict, repr=False)
     # handle resolved at submit time: the factor this request will solve
@@ -324,7 +331,9 @@ class SolveEngine:
     def __init__(self, cache: FactorCache, *, slots: int = 8,
                  iters_per_tick: int = 8, completed_history: int = 4096,
                  admission: Optional[AdmissionPolicy] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 metrics=None, tracer=None, obs_replica: int = -1,
+                 obs_device: str = ""):
         if slots < 1:
             raise ValueError("slots must be >= 1")
         self.cache = cache
@@ -370,6 +379,45 @@ class SolveEngine:
         self.sweeps_skipped = 0
         self.sweep_elements = 0
         self.fleet_resyncs = 0
+
+        # -- observability (repro.obs) — instruments pre-bound here so
+        # the tick loop only ever calls inc/set/observe on a child
+        # (no-op children when metrics is None); tracer gates the
+        # first-tick stamping loop entirely
+        reg = metrics if metrics is not None else _NULL_METRICS
+        self.metrics = metrics
+        self.tracer = tracer
+        self._obs_replica = obs_replica
+        self._obs_device = obs_device
+        rep = str(obs_replica) if obs_replica >= 0 else "solo"
+        self._m_ticks = reg.counter(
+            "repro_engine_ticks_total", "engine ticks executed",
+            labels=("replica",)).labels(replica=rep)
+        self._m_tick_s = reg.histogram(
+            "repro_engine_tick_seconds", "wall seconds per engine tick",
+            labels=("replica",)).labels(replica=rep)
+        self._m_queue = reg.gauge(
+            "repro_engine_queue_depth", "requests waiting for lanes",
+            labels=("replica",)).labels(replica=rep)
+        self._m_lanes = reg.gauge(
+            "repro_engine_active_lanes", "lanes currently occupied",
+            labels=("replica",)).labels(replica=rep)
+        self._m_admitted = reg.counter(
+            "repro_engine_admitted_total", "requests granted lanes",
+            labels=("replica",)).labels(replica=rep)
+        self._m_done = reg.counter(
+            "repro_engine_completed_total",
+            "requests retired, by terminal status",
+            labels=("replica", "status"))
+        self._m_latency = reg.histogram(
+            "repro_engine_latency_seconds",
+            "end-to-end request latency (submit to finish)",
+            labels=("replica",)).labels(replica=rep)
+        self._m_qwait = reg.histogram(
+            "repro_engine_queue_wait_seconds",
+            "admission queue wait (submit to lane grant)",
+            labels=("replica",)).labels(replica=rep)
+        self._obs_rep_label = rep
 
         counts = self.compile_counts
         k = iters_per_tick
@@ -519,6 +567,7 @@ class SolveEngine:
                     f"{len(free)} free")
             self.queue.remove(req)     # identity match (eq=False)
             self.admitted_reqs += 1
+            self._m_admitted.inc()
             handle = req._handle       # fixed at submit: re-attaching the
             fleet = handle.fleet       # graph_id cannot hijack this request
             bl = self._bucket(fleet)
@@ -581,6 +630,14 @@ class SolveEngine:
         self._unpin_idle()
         self.ticks += 1
         self.cache.advance_ticks(1)
+        if self.tracer is not None:
+            # first host-side timestamp after a lane's first step call —
+            # only when tracing is on (the stamp loop is pure host work,
+            # but a trace nobody asked for is still overhead)
+            t_first = self._clock()
+            for lane in self.lanes:
+                if lane is not None and lane.req.first_tick_time == 0.0:
+                    lane.req.first_tick_time = t_first
         # running *minimum* tick duration — the deadline-eviction lower
         # bound for "one more tick".  A minimum (not a mean) is the
         # safe estimator: compile-heavy first ticks must not inflate it
@@ -591,6 +648,12 @@ class SolveEngine:
         dur = self._clock() - t_tick0
         self._est_tick_s = dur if self._est_tick_s == 0.0 else \
             min(self._est_tick_s, dur)
+        self._m_ticks.inc()
+        self._m_tick_s.observe(dur)
+        self._m_queue.set(len(self.queue))
+        self._m_lanes.set(sum(l is not None for l in self.lanes))
+        if self.metrics is not None:
+            self.metrics.maybe_sample(self._clock())
         return done
 
     def _account_sweeps(self, bl: _BucketLanes, occ: List[int]) -> None:
@@ -689,6 +752,16 @@ class SolveEngine:
                     req.status = "deadline_missed"
                 else:
                     req.status = "maxiter"
+                self._m_done.labels(replica=self._obs_rep_label,
+                                    status=req.status).inc()
+                self._m_latency.observe(req.latency_s)
+                self._m_qwait.observe(req.queue_wait_s)
+                if self.tracer is not None:
+                    self.tracer.record(trace_from_request(
+                        req, family=bl.fleet.family,
+                        policy=self.admission.name,
+                        replica=self._obs_replica,
+                        device=self._obs_device))
                 # release the factor ref: a completed request sitting in
                 # the bounded history must not keep an evicted handle's
                 # fleet row claimed (row recycling is weakref-driven)

@@ -44,6 +44,8 @@ from collections import deque
 from concurrent.futures import Future
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
+from repro.obs.registry import NULL as _NULL_METRICS
+
 from .engine import EngineStats, SolveEngine, SolveRequest, make_request
 
 
@@ -109,7 +111,8 @@ class SolveFrontend:
     """
 
     def __init__(self, engine: SolveEngine, *, max_queue: int = 256,
-                 overload: str = "block", idle_wait_s: float = 0.05):
+                 overload: str = "block", idle_wait_s: float = 0.05,
+                 metrics=None, obs_replica: int = -1):
         if max_queue < 1:
             raise ValueError("max_queue must be >= 1")
         if overload not in ("block", "reject"):
@@ -139,6 +142,33 @@ class SolveFrontend:
         self.control_calls = 0
         self.control_s = 0.0
         self._control_inflight = 0
+        # observability (repro.obs): pre-bound children; no-ops when
+        # metrics is None, so the submit/driver paths never branch
+        reg = metrics if metrics is not None else _NULL_METRICS
+        rep = str(obs_replica) if obs_replica >= 0 else "solo"
+        self._m_submitted = reg.counter(
+            "repro_frontend_submitted_total", "requests accepted at ingress",
+            labels=("replica",)).labels(replica=rep)
+        self._m_rejected = reg.counter(
+            "repro_frontend_rejected_total",
+            "submissions refused by backpressure",
+            labels=("replica",)).labels(replica=rep)
+        self._m_completed = reg.counter(
+            "repro_frontend_completed_total",
+            "futures resolved with a finished request",
+            labels=("replica",)).labels(replica=rep)
+        self._m_failed = reg.counter(
+            "repro_frontend_failed_total",
+            "futures resolved exceptionally",
+            labels=("replica",)).labels(replica=rep)
+        self._m_queue = reg.gauge(
+            "repro_frontend_queue_depth",
+            "requests waiting before lane admission (ingress + engine)",
+            labels=("replica",)).labels(replica=rep)
+        self._m_control_s = reg.histogram(
+            "repro_frontend_control_seconds",
+            "driver-thread seconds per control-channel call",
+            labels=("replica",)).labels(replica=rep)
         self._thread = threading.Thread(target=self._run,
                                         name="solve-frontend", daemon=True)
         self._thread.start()
@@ -168,6 +198,7 @@ class SolveFrontend:
             while self._depth() >= self.max_queue:
                 if self.overload == "reject":
                     self.rejected += 1
+                    self._m_rejected.inc()
                     raise EngineOverloadedError(
                         f"request queue full ({self.max_queue} waiting)")
                 self._space.wait(timeout=self.idle_wait_s)
@@ -180,7 +211,10 @@ class SolveFrontend:
                 req.submit_time = self.engine._clock()
             self._ingress.append((req, fut))
             self.submitted += 1
-            self.queue_peak = max(self.queue_peak, self._depth())
+            self._m_submitted.inc()
+            depth = self._depth()
+            self.queue_peak = max(self.queue_peak, depth)
+            self._m_queue.set(depth)
             self._work.notify_all()
         return fut
 
@@ -254,7 +288,8 @@ class SolveFrontend:
                 self._control.clear()
                 if batch:
                     self._space.notify_all()
-            self._control_inflight = len(control)
+            with self._lock:
+                self._control_inflight = len(control)
             for fn, args, kw, cfut in control:
                 t0 = time.monotonic()
                 try:
@@ -266,15 +301,23 @@ class SolveFrontend:
                     if not cfut.done():
                         cfut.set_result(res)
                 finally:
-                    self.control_calls += 1
-                    self.control_s += time.monotonic() - t0
-                    self._control_inflight -= 1
+                    dt = time.monotonic() - t0
+                    # under the stats lock: these are read-modify-writes
+                    # racing the `stats()` snapshots router/health threads
+                    # take — unlocked, a snapshot could observe
+                    # control_calls incremented but control_s stale
+                    with self._lock:
+                        self.control_calls += 1
+                        self.control_s += dt
+                        self._control_inflight -= 1
+                    self._m_control_s.observe(dt)
             try:
                 for req, fut in batch:
                     try:
                         eng.submit(req)
                     except Exception as exc:  # unknown graph / bad shape
                         self.failed += 1
+                        self._m_failed.inc()
                         if not fut.done():    # caller may have cancelled
                             fut.set_exception(exc)
                     else:
@@ -286,6 +329,7 @@ class SolveFrontend:
                             continue  # submitted directly to the engine,
                             # not through the frontend: not ours to count
                         self.completed += 1
+                        self._m_completed.inc()
                         if not fut.done():
                             fut.set_result(done)
                     with self._space:
@@ -359,11 +403,16 @@ class SolveFrontend:
         with self._lock:
             depth = self._depth()
             peak = max(self.queue_peak, depth)
+            # read the control pair under the same lock the driver's
+            # accumulation holds, so calls/seconds are mutually coherent
+            control_calls = self.control_calls
+            control_s = self.control_s
+            factor_depth = len(self._control) + self._control_inflight
         return FrontendStats(
             submitted=self.submitted, completed=self.completed,
             failed=self.failed, rejected=self.rejected,
             queue_depth=depth, queue_peak=peak,
             max_queue=self.max_queue, alive=self.alive,
-            control_calls=self.control_calls, control_s=self.control_s,
-            factor_queue_depth=self.factor_queue_depth,
+            control_calls=control_calls, control_s=control_s,
+            factor_queue_depth=factor_depth,
             engine=self.engine.stats())

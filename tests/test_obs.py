@@ -1,0 +1,406 @@
+"""Observability control plane: the thread-safe metrics registry and
+its time-series view, Prometheus text exposition + scrape endpoint,
+per-request lifecycle tracing (Chrome trace_event export), and the
+sustained-threshold overload detector."""
+import json
+import threading
+import re
+import urllib.request
+
+import numpy as np
+import jax
+import pytest
+
+from repro.obs import (
+    CardinalityError, DEFAULT_LATENCY_BUCKETS_S, MetricsRegistry,
+    MetricsServer, NULL, SustainedThresholdDetector, Tracer,
+    percentile, quantile_from_counts, render, trace_from_request)
+from repro.obs.prometheus import CONTENT_TYPE
+
+
+# ---------------------------------------------------------------------------
+# Registry: concurrency, cardinality, time-series reads
+# ---------------------------------------------------------------------------
+
+def test_concurrent_counter_and_histogram_updates():
+    """N threads hammering one counter child and one histogram child
+    must not lose updates: inc is a lock-guarded read-modify-write
+    (bare += loses under GIL preemption)."""
+    reg = MetricsRegistry()
+    c = reg.counter("t_total", "test counter")
+    h = reg.histogram("t_seconds", "test histogram")
+    n_threads, per_thread = 8, 2000
+
+    def work(k):
+        for i in range(per_thread):
+            c.inc()
+            h.observe((k * per_thread + i) % 7 * 1e-4)
+
+    threads = [threading.Thread(target=work, args=(k,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == n_threads * per_thread
+    total, _, counts = h._default.snapshot()
+    assert total == n_threads * per_thread
+    assert sum(counts) == total
+
+
+def test_labeled_children_are_cached_and_checked():
+    reg = MetricsRegistry()
+    c = reg.counter("by_replica_total", "per replica", ("replica",))
+    assert c.labels(replica="0") is c.labels(replica=0)   # str-keyed
+    c.labels(replica="0").inc(3)
+    assert c.labels(replica="0").value == 3
+    with pytest.raises(ValueError):
+        c.labels(shard="0")                # wrong label name
+
+
+def test_cardinality_cap_raises():
+    """Past the cap, labels() raises instead of leaking series — an
+    unbounded label value (request id) must fail at the call site."""
+    reg = MetricsRegistry()
+    c = reg.counter("capped_total", "capped", ("rid",), max_series=8)
+    for i in range(8):
+        c.labels(rid=i).inc()
+    with pytest.raises(CardinalityError):
+        c.labels(rid="one-too-many")
+
+
+def test_registry_idempotent_and_kind_checked():
+    reg = MetricsRegistry()
+    a = reg.counter("dup_total")
+    assert reg.counter("dup_total") is a
+    with pytest.raises(ValueError):
+        reg.gauge("dup_total")
+
+
+def test_windowed_rate_gauge_stats_and_quantile():
+    """The ring answers the three questions the detector and reports
+    ask: counter rate, gauge stats, and histogram quantile — windowed
+    via explicit, injected timestamps."""
+    reg = MetricsRegistry()
+    c = reg.counter("arrivals_total")
+    g = reg.gauge("depth")
+    h = reg.histogram("lat_seconds")
+    for i in range(11):                       # t = 0..10, 2 arrivals/s
+        c.inc(2)
+        g.set(float(i))
+        h.observe(0.01 if i < 8 else 1.0)
+        reg.sample(now=float(i))
+    assert reg.rate("arrivals_total", window_s=5.0, now=10.0) == \
+        pytest.approx(2.0)
+    st = reg.gauge_stats("depth", window_s=4.0, now=10.0)
+    assert st["n"] == 5 and st["max"] == 10.0
+    assert st["mean"] == pytest.approx(8.0)
+    # windowed quantile sees only the last 3 (slow) observations
+    q = reg.quantile("lat_seconds", 0.5, window_s=3.0, now=10.0)
+    assert 0.5 < q <= 1.58                    # in the ~1 s bucket
+    # lifetime quantile is dominated by the 8 fast observations
+    assert reg.quantile("lat_seconds", 0.5) < 0.1
+
+
+def test_null_registry_is_inert():
+    c = NULL.counter("x_total")
+    c.inc()
+    c.labels(anything="goes").observe(1.0)    # no schema, no error
+    assert c.value == 0.0
+    assert NULL.rate("x_total", window_s=1.0) == 0.0
+
+
+def test_quantile_from_counts_and_percentile_agree():
+    rng = np.random.default_rng(0)
+    xs = rng.exponential(0.02, size=2000)
+    counts = [0] * (len(DEFAULT_LATENCY_BUCKETS_S) + 1)
+    from repro.obs import bucket_index
+    for x in xs:
+        counts[bucket_index(DEFAULT_LATENCY_BUCKETS_S, x)] += 1
+    exact = percentile(xs, 95)
+    est = quantile_from_counts(DEFAULT_LATENCY_BUCKETS_S, counts, 0.95)
+    # bucket resolution is ~1.58x: the estimate lands within one ratio
+    assert exact / 1.6 <= est <= exact * 1.6
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition + scrape endpoint
+# ---------------------------------------------------------------------------
+
+_LINE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? [0-9.eE+-]+(?:inf)?$")
+
+
+def _parse_prom(text):
+    """Minimal exposition-format check: every non-comment line is
+    ``name{labels} value``; returns {sample_name: [(labels, value)]}."""
+    out = {}
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        assert _LINE.match(line), f"malformed exposition line: {line!r}"
+        head, val = line.rsplit(" ", 1)
+        name = head.split("{", 1)[0]
+        out.setdefault(name, []).append((head, float(val)))
+    return out
+
+
+def test_render_round_trips_as_prometheus_text():
+    reg = MetricsRegistry()
+    reg.counter("req_total", "requests", ("replica", "status")) \
+        .labels(replica=0, status='conv"erged\\').inc(5)
+    reg.gauge("depth", "queue depth").set(3)
+    h = reg.histogram("lat_seconds", "latency")
+    for v in (1e-4, 2e-3, 0.5):
+        h.observe(v)
+    text = render(reg)
+    assert "# HELP req_total requests" in text
+    assert "# TYPE lat_seconds histogram" in text
+    samples = _parse_prom(text)
+    assert samples["req_total"][0][1] == 5.0
+    assert '\\"' in samples["req_total"][0][0]      # label escaping
+    assert samples["depth"][0][1] == 3.0
+    # cumulative buckets, monotone, +Inf == _count == 3
+    buckets = [v for _, v in samples["lat_seconds_bucket"]]
+    assert buckets == sorted(buckets) and buckets[-1] == 3.0
+    assert any(head.endswith('le="+Inf"} 3') or 'le="+Inf"' in head
+               for head, _ in samples["lat_seconds_bucket"])
+    assert samples["lat_seconds_count"][0][1] == 3.0
+    assert samples["lat_seconds_sum"][0][1] == pytest.approx(0.5021)
+
+
+def test_metrics_server_scrape():
+    reg = MetricsRegistry()
+    reg.counter("scrape_total").inc(7)
+    with MetricsServer(reg, port=0, host="127.0.0.1") as srv:
+        url = f"http://127.0.0.1:{srv.port}/metrics"
+        with urllib.request.urlopen(url, timeout=5) as resp:
+            assert resp.status == 200
+            assert resp.headers["Content-Type"] == CONTENT_TYPE
+            body = resp.read().decode()
+        assert _parse_prom(body)["scrape_total"][0][1] == 7.0
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{srv.port}/nope", timeout=5)
+
+
+# ---------------------------------------------------------------------------
+# Tracing: span partition + Chrome export on a real engine replay
+# ---------------------------------------------------------------------------
+
+def test_trace_partition_sums_to_e2e_synthetic():
+    class R:
+        rid = 1
+        graph_id = "g"
+        status = "converged"
+        submit_time = 10.0
+        admit_time = 10.5
+        finish_time = 11.0
+        first_tick_time = 10.6
+        route_s = 0.1
+        factor_wait_s = 0.2
+        factor_mode = "adopt"
+        iters = np.array([4, 9])
+        nrhs = 2
+        replica = 3
+
+    tr = trace_from_request(R())
+    names = [s.name for s in tr.spans]
+    assert names == ["route", "adopt", "queue", "first_tick", "solve"]
+    # contiguous partition: each span starts where the previous ended
+    for a, b in zip(tr.spans, tr.spans[1:]):
+        assert b.start == pytest.approx(a.end)
+    assert tr.span_sum_s == pytest.approx(tr.e2e_s)
+    assert tr.e2e_s == pytest.approx(1.0)
+    assert tr.attrs["iters"] == 9 and tr.replica == 3
+
+
+def test_trace_skips_unpaid_stages_and_unfinished_requests():
+    class Warm:
+        rid = 2
+        graph_id = "g"
+        status = "converged"
+        submit_time = 5.0
+        admit_time = 5.0
+        finish_time = 5.4
+        first_tick_time = 0.0
+        route_s = 0.0
+        factor_wait_s = 0.0
+        factor_mode = ""
+        iters = None
+        nrhs = 1
+        replica = -1
+
+    tr = trace_from_request(Warm())
+    assert [s.name for s in tr.spans] == ["solve"]
+    assert tr.span_sum_s == pytest.approx(0.4)
+
+    class Unfinished(Warm):
+        finish_time = 0.0
+
+    assert trace_from_request(Unfinished()) is None
+
+
+@pytest.fixture(scope="module")
+def traced_replay():
+    """A mixed 3-graph replay through an instrumented engine: the
+    fixture shared by the scrape, trace-export and overhead tests."""
+    from repro.core.solver import FactorCache
+    from repro.data import graphs
+    from repro.launch.serve import make_trace, replay_trace
+    from repro.serve import SolveEngine
+
+    built = {"g2d": graphs.grid2d(10, 10, seed=1),
+             "pl": graphs.powerlaw(200, 4, seed=2),
+             "road": graphs.road_like(8, seed=3)}
+    keys = {name: jax.random.key(i) for i, name in enumerate(built)}
+    cache = FactorCache(strict=False)
+    cache.factor_batched(list(built.values()),
+                         [keys[name] for name in built],
+                         graph_ids=list(built.keys()))
+    reg = MetricsRegistry()
+    tracer = Tracer()
+    eng = SolveEngine(cache, slots=4, iters_per_tick=8,
+                      metrics=reg, tracer=tracer)
+    sizes = {name: g.n for name, g in built.items()}
+    trace = make_trace(list(built), sizes, 9, seed=0, max_nrhs=2)
+    metrics, done = replay_trace(eng, trace)
+    return reg, tracer, metrics, done, eng
+
+
+def test_engine_replay_records_traces_with_tight_span_sum(traced_replay):
+    _, tracer, metrics, done, _ = traced_replay
+    traces = tracer.traces()
+    assert len(traces) == len(done) == metrics["completed"]
+    by_rid = {tr.rid: tr for tr in traces}
+    for r in done:
+        tr = by_rid[r.rid]
+        assert tr.graph_id == r.graph_id
+        assert tr.status == r.status
+        assert tr.family        # read off the fleet before handle drop
+        assert tr.policy == "fifo"
+        # the acceptance bound: span sum within 5% of e2e latency
+        assert tr.span_sum_s == pytest.approx(r.latency_s, rel=0.05)
+        # spans are ordered, contiguous, and inside [submit, finish]
+        for a, b in zip(tr.spans, tr.spans[1:]):
+            assert b.start >= a.end - 1e-9
+        assert tr.start >= r.submit_time - 1e-9
+        assert tr.end <= r.finish_time + 1e-9
+
+
+def test_chrome_export_loads_and_nests(traced_replay, tmp_path):
+    _, tracer, _, done, _ = traced_replay
+    path = tmp_path / "trace.json"
+    n = tracer.export_chrome(str(path))
+    doc = json.loads(path.read_text())      # valid JSON, loads clean
+    events = doc["traceEvents"]
+    assert len(events) == n
+    xs = [e for e in events if e["ph"] == "X"]
+    assert {e["name"] for e in xs} <= {"route", "factor", "adopt",
+                                       "queue", "first_tick", "solve"}
+    assert all(e["ts"] >= 0 and e["dur"] >= 0 for e in xs)
+    # spans nest per request row: same (pid, tid) events don't overlap
+    rows = {}
+    for e in xs:
+        rows.setdefault((e["pid"], e["tid"]), []).append(e)
+    assert len(rows) == len(done)
+    for evs in rows.values():
+        evs.sort(key=lambda e: e["ts"])
+        for a, b in zip(evs, evs[1:]):
+            assert b["ts"] >= a["ts"] + a["dur"] - 1.0   # µs slack
+    assert any(e["ph"] == "M" for e in events)           # track names
+
+
+def test_engine_replay_is_scrapable(traced_replay):
+    reg, _, metrics, _, eng = traced_replay
+    text = render(reg)
+    samples = _parse_prom(text)
+    assert samples["repro_engine_ticks_total"][0][1] == eng.ticks
+    done = sum(v for _, v in samples["repro_engine_completed_total"])
+    assert done == metrics["completed"]
+    assert samples["repro_engine_latency_seconds_count"][0][1] == \
+        metrics["completed"]
+    # the ring sampled during the replay: windowed reads answer
+    assert reg.series("repro_engine_ticks_total")
+
+
+# ---------------------------------------------------------------------------
+# Overload detection
+# ---------------------------------------------------------------------------
+
+def _feed(reg, det, depths, *, t0=0.0, dt=0.1):
+    g = reg.gauge("repro_cluster_queue_depth")
+    c = reg.counter("repro_cluster_arrivals_total")
+    t = t0
+    for d in depths:
+        g.set(d)
+        c.inc(max(d, 0))
+        reg.sample(now=t)
+        det.update(t)
+        t += dt
+    return t
+
+
+def test_detector_flags_sustained_burst_and_cools():
+    reg = MetricsRegistry()
+    # sustain/cool sit strictly between sample-spacing multiples so
+    # float accumulation of the 0.1 s feed steps can't straddle them
+    det = SustainedThresholdDetector(
+        reg, high_queue=8.0, low_queue=2.0, window_s=0.5,
+        sustain_s=0.25, cool_s=0.25, idle_down_s=1.95)
+    t = _feed(reg, det, [0, 1, 0, 1])                 # stationary: quiet
+    assert det.state == "ok" and det.transitions == 0
+    t = _feed(reg, det, [20, 25, 30, 25, 20, 25], t0=t)   # the storm
+    assert det.state == "overloaded"
+    assert det.recommendation == "scale_up"
+    t = _feed(reg, det, [0] * 10, t0=t)               # drains + cools
+    assert det.state == "ok" and det.transitions == 2
+    # long idle flips the recommendation to scale_down
+    _feed(reg, det, [0] * 25, t0=t)
+    assert det.recommendation == "scale_down"
+    st = det.stats()
+    assert st["detector"] == "sustained_threshold"
+    assert st["updates"] == det.updates
+
+
+def test_detector_ignores_single_spike():
+    """Hysteresis: one hot sample inside a quiet stream neither trips
+    the detector nor leaves residue (the windowed mean absorbs it)."""
+    reg = MetricsRegistry()
+    det = SustainedThresholdDetector(
+        reg, high_queue=8.0, low_queue=2.0, window_s=0.5,
+        sustain_s=0.3, cool_s=0.3)
+    _feed(reg, det, [0, 1, 30, 1, 0, 1, 0, 1, 0, 1])
+    assert det.state == "ok" and det.transitions == 0
+
+
+def test_detector_validates_hysteresis_band():
+    with pytest.raises(ValueError):
+        SustainedThresholdDetector(MetricsRegistry(), high_queue=2.0,
+                                   low_queue=2.0)
+
+
+# ---------------------------------------------------------------------------
+# Selector reads deconflated timings
+# ---------------------------------------------------------------------------
+
+def test_selector_ranks_on_serve_time_not_wall_clock():
+    """A family whose requests queued badly (big wall, small serve)
+    must still outrank a slow family: predictions read the pure
+    admit->finish serve time from the lifecycle stamps."""
+    from repro.serve.cluster.selector import AdaptiveSelector
+    sel = AdaptiveSelector(epsilon=0.0, seed=0)
+    # ac: terrible wall (queueing), fast serve; ichol: the reverse
+    for _ in range(3):
+        sel.observe("g", "ac", wall_s=2.0, serve_s=0.01,
+                    construct_s=None)
+        sel.observe("g", "ichol", wall_s=0.5, serve_s=0.4)
+    assert sel.pick("g") == "ac"
+    est = sel.stats()["estimates"]
+    assert est["g::ac"]["serve_s"] == pytest.approx(0.01)
+    assert est["g::ac"]["wall_s"] == pytest.approx(2.0)
+    # construct EWMA only moves on cold-path samples
+    sel.observe("g", "ac", wall_s=1.0, serve_s=0.01, construct_s=0.8)
+    c0 = sel.stats()["estimates"]["g::ac"]["construct_s"]
+    sel.observe("g", "ac", wall_s=1.0, serve_s=0.01)      # warm: no decay
+    assert sel.stats()["estimates"]["g::ac"]["construct_s"] == c0
