@@ -39,7 +39,7 @@ POLICIES = ("affinity", "p2c", "rr")
 
 
 def run_storm(*, replicas=2, storm_graphs=4, warm_dt_s=0.25, seed=0,
-              metrics=None):
+              metrics=None, flight=None):
     """Factor-storm comparison: the same cold-burst-over-warm-stream
     workload, colocated (``factor_replicas=0``) vs disaggregated
     (``factor_replicas=1``).  The gate
@@ -53,7 +53,7 @@ def run_storm(*, replicas=2, storm_graphs=4, warm_dt_s=0.25, seed=0,
         m = run_factor_storm(replicas=replicas, factor_replicas=k,
                              storm_graphs=storm_graphs,
                              warm_dt_s=warm_dt_s, seed=seed,
-                             metrics=metrics)
+                             metrics=metrics, flight=flight)
         out[mode] = m
         ov = m.get("overload") or {}
         emit(f"cluster/storm/{mode}/warm_p95_us", m["warm_p95_s"] * 1e6,
@@ -72,9 +72,13 @@ def run_storm(*, replicas=2, storm_graphs=4, warm_dt_s=0.25, seed=0,
 def run(*, suite="micro", requests=48, replicas=2, slots=8,
         iters_per_tick=8, seed=0, skew=1.2, arrival_rate=None,
         replicate_above=0.02, rate_window_s=600.0, policies=POLICIES,
-        storm=True, storm_graphs=4, prom=None):
-    from repro.obs import MetricsRegistry, render
+        storm=True, storm_graphs=4, prom=None, postmortem_dir=None):
+    from repro.obs import FlightRecorder, MetricsRegistry, render
     registry = MetricsRegistry() if prom else None
+    flight = (FlightRecorder(postmortem_dir=postmortem_dir)
+              if postmortem_dir else None)
+    if flight is not None:
+        flight.attach(registry=registry)
     out = {"suite": suite, "requests": requests, "replicas": replicas,
            "skew": skew, "arrival_rate": arrival_rate,
            "replicate_above": replicate_above,
@@ -86,7 +90,7 @@ def run(*, suite="micro", requests=48, replicas=2, slots=8,
             routing=routing, slots=slots, iters_per_tick=iters_per_tick,
             seed=seed, skew=skew, arrival_rate=arrival_rate,
             replicate_above=replicate_above, rate_window_s=rate_window_s,
-            metrics=registry)
+            metrics=registry, flight=flight)
         metrics["replicate_above"] = replicate_above
         out["policies"][routing] = metrics
         c = metrics["cluster"]
@@ -106,11 +110,16 @@ def run(*, suite="micro", requests=48, replicas=2, slots=8,
     if storm:
         out["factor_storm"] = run_storm(replicas=replicas,
                                         storm_graphs=storm_graphs,
-                                        seed=seed, metrics=registry)
+                                        seed=seed, metrics=registry,
+                                        flight=flight)
     if registry is not None:
         with open(prom, "w") as fh:
             fh.write(render(registry))
         print(f"wrote {prom}")
+    if flight is not None:
+        path = flight.dump("bench_cluster_final")
+        out["flight"] = flight.stats()
+        print(f"wrote {path}")
     return out
 
 
@@ -152,6 +161,10 @@ def main():
     ap.add_argument("--json", default=None,
                     help="write per-policy metrics to this JSON file "
                          "(uploaded as a CI artifact)")
+    ap.add_argument("--postmortem-dir", default=None,
+                    help="mount a flight recorder across every run and "
+                         "dump its lifecycle-event ring here at the end "
+                         "(uploaded as a CI artifact when gates fail)")
     args = ap.parse_args()
     metrics = run(suite=args.suite, requests=args.requests,
                   replicas=args.replicas, slots=args.slots,
@@ -161,7 +174,7 @@ def main():
                   rate_window_s=args.rate_window_s,
                   storm=not args.skip_storm,
                   storm_graphs=args.storm_graphs,
-                  prom=args.prom)
+                  prom=args.prom, postmortem_dir=args.postmortem_dir)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(metrics, fh, indent=2)

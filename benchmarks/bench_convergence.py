@@ -184,7 +184,8 @@ def run_family_matrix(suite=None, *, tol=1e-6, maxiter=500, seed=0):
 
 def run_auto_replay(*, suite="tiny", requests=24, warmup=16, slots=4,
                     iters_per_tick=8, deadline_ms=1500.0, skew=1.5,
-                    arrival_rate=20.0, seed=0, select_epsilon=0.25):
+                    arrival_rate=20.0, seed=0, select_epsilon=0.25,
+                    flight=None):
     """Replay one skewed open-loop deadline trace twice — always-AC vs
     adaptive family selection — and report the deadline outcome per
     mode.  Both replays share the trace seed (identical requests and
@@ -206,7 +207,7 @@ def run_auto_replay(*, suite="tiny", requests=24, warmup=16, slots=4,
             iters_per_tick=iters_per_tick, seed=seed,
             warmup_requests=warmup, arrival_rate=arrival_rate,
             policy="fifo", deadline_ms=deadline_ms, precond=mode,
-            select_epsilon=select_epsilon, skew=skew)
+            select_epsilon=select_epsilon, skew=skew, flight=flight)
         slo_missed = sum(1 for r in done
                          if r.deadline_s is not None
                          and r.latency_s > r.deadline_s)
@@ -239,11 +240,20 @@ def main():
     ap.add_argument("--skew", type=float, default=1.5)
     ap.add_argument("--arrival-rate", type=float, default=20.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--postmortem-dir", default=None,
+                    help="mount a flight recorder on the deadline "
+                         "replay and dump its event ring here at the "
+                         "end (uploaded as a CI artifact when the zoo "
+                         "gate fails)")
     args = ap.parse_args()
 
     if args.json is None:
         run()
         return
+    flight = None
+    if args.postmortem_dir:
+        from repro.obs import FlightRecorder
+        flight = FlightRecorder(postmortem_dir=args.postmortem_dir)
     spec = {"micro": graphs.SUITE_MICRO, "tiny": graphs.SUITE_TINY,
             "full": graphs.SUITE}[args.suite]
     matrix = run_family_matrix(spec, tol=args.tol, maxiter=args.maxiter,
@@ -252,10 +262,13 @@ def main():
         suite=args.suite if args.suite != "full" else "tiny",
         requests=args.requests, warmup=args.warmup, slots=args.slots,
         deadline_ms=args.deadline_ms, skew=args.skew,
-        arrival_rate=args.arrival_rate, seed=args.seed)
+        arrival_rate=args.arrival_rate, seed=args.seed, flight=flight)
     artifact = dict(suite=args.suite, tol=args.tol, maxiter=args.maxiter,
                     seed=args.seed, deadline_ms=args.deadline_ms,
                     skew=args.skew, families=matrix, replay=replay)
+    if flight is not None:
+        print(f"wrote {flight.dump('bench_precond_final')}")
+        artifact["flight"] = flight.stats()
     with open(args.json, "w") as fh:
         json.dump(artifact, fh, indent=2)
     print(f"wrote {args.json}")

@@ -282,7 +282,8 @@ def run_obs_overhead(*, seed=0, slots=8, iters_per_tick=8, requests=24,
     from repro.core.solver import FactorCache
     from repro.data import graphs
     from repro.launch.serve import make_trace
-    from repro.obs import MetricsRegistry, Tracer, render
+    from repro.obs import (FlightRecorder, HealthMonitor, MetricsRegistry,
+                           Tracer, render)
     from repro.serve import SolveEngine
 
     built = {"mesh": graphs.grid2d(12, 12, seed=1),
@@ -295,13 +296,23 @@ def run_obs_overhead(*, seed=0, slots=8, iters_per_tick=8, requests=24,
                          graph_ids=list(built.keys()))
     registry = MetricsRegistry()
     tracer = Tracer()
+    # the instrumented arm carries the *whole* observability stack the
+    # serving path can mount: metrics + tracer (PR 9) and the flight
+    # recorder + numerical-health monitor (PR 10) — the 0.98 gate covers
+    # all of it at once
+    flight = FlightRecorder(capacity=4096)
+    health = HealthMonitor(registry, flight=flight)
+    flight.attach(registry=registry)
     engines = {
         "plain": SolveEngine(cache, slots=slots,
                              iters_per_tick=iters_per_tick),
         "instrumented": SolveEngine(cache, slots=slots,
                                     iters_per_tick=iters_per_tick,
-                                    metrics=registry, tracer=tracer),
+                                    metrics=registry, tracer=tracer,
+                                    flight=flight, health=health),
     }
+    health.watch_engine(engines["instrumented"])
+    health.watch_cache(cache)
     gids = list(built)
     # closed-loop (no arrival gaps): the measurement is pure tick
     # throughput, not open-loop waiting that would mask the overhead
@@ -324,31 +335,41 @@ def run_obs_overhead(*, seed=0, slots=8, iters_per_tick=8, requests=24,
         ratio=(best["instrumented"] / best["plain"]
                if best["plain"] > 0 else 0.0),
         traces_recorded=tracer.stats()["recorded"],
+        flight_events=flight.stats()["recorded"],
+        health_observed=health.snapshot()["observed"],
         scrape_lines=len(render(registry).splitlines()))
     emit("serve/obs_overhead/ticks_per_s_ratio", out["ratio"],
          f"plain={best['plain']:.0f};"
          f"instrumented={best['instrumented']:.0f};"
-         f"rounds={rounds};traces={out['traces_recorded']}")
+         f"rounds={rounds};traces={out['traces_recorded']};"
+         f"flight={out['flight_events']}")
     return out
 
 
 def run(*, suite="tiny", requests=16, slots=8, iters_per_tick=8, seed=0,
         warm=True, arrival_rate=None, policy="fifo", sweep=True,
         sweep_arrival_rate=100.0, tier_sweep=True, fleet_memory=True,
-        obs_overhead=True, prom=None):
+        obs_overhead=True, prom=None, postmortem_dir=None):
     """One warmup replay through the same engine (pays jit compiles),
     then the measured replay; with ``sweep`` the wide-head policy
     comparison reuses the already-factored cache.  With ``prom`` the
     main run serves under a metrics registry whose final scrape is
-    written to that path."""
-    from repro.obs import MetricsRegistry, render
+    written to that path.  With ``postmortem_dir`` a flight recorder
+    rides the main run and unconditionally dumps its event ring there
+    at the end — the artifact a failing CI gate uploads, so a
+    regression report comes with the lifecycle events behind it."""
+    from repro.obs import FlightRecorder, MetricsRegistry, render
     registry = MetricsRegistry() if prom else None
+    flight = (FlightRecorder(postmortem_dir=postmortem_dir)
+              if postmortem_dir else None)
+    if flight is not None:
+        flight.attach(registry=registry)
     metrics, _, eng = run_service(
         suite=suite, requests=requests, slots=slots,
         iters_per_tick=iters_per_tick, seed=seed,
         warmup_requests=requests if warm else 0,
         arrival_rate=arrival_rate, policy=policy, return_engine=True,
-        metrics=registry)
+        metrics=registry, flight=flight)
     emit(f"serve/{suite}/requests_per_s", metrics["requests_per_s"],
          f"completed={metrics['completed']};rhs={metrics['rhs_total']}")
     emit(f"serve/{suite}/ticks_per_s", metrics["ticks_per_s"],
@@ -382,6 +403,10 @@ def run(*, suite="tiny", requests=16, slots=8, iters_per_tick=8, seed=0,
         with open(prom, "w") as fh:
             fh.write(render(registry))
         print(f"wrote {prom}")
+    if flight is not None:
+        path = flight.dump("bench_serve_final")
+        metrics["flight"] = flight.stats()
+        print(f"wrote {path}")
     return metrics
 
 
@@ -420,6 +445,10 @@ def main():
     ap.add_argument("--prom", default=None,
                     help="write the main run's final Prometheus scrape "
                          "to this file (uploaded as a CI artifact)")
+    ap.add_argument("--postmortem-dir", default=None,
+                    help="mount a flight recorder on the main run and "
+                         "dump its lifecycle-event ring here at the end "
+                         "(uploaded as a CI artifact when gates fail)")
     ap.add_argument("--json", default=None,
                     help="write service metrics to this JSON file "
                          "(uploaded as a CI artifact)")
@@ -433,7 +462,7 @@ def main():
                   tier_sweep=not args.no_tier_sweep,
                   fleet_memory=not args.no_fleet_memory,
                   obs_overhead=not args.no_obs_overhead,
-                  prom=args.prom)
+                  prom=args.prom, postmortem_dir=args.postmortem_dir)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(metrics, fh, indent=2)

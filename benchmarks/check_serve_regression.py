@@ -167,17 +167,30 @@ def _obs_overhead_failures(current: dict) -> list:
     ob = current.get("obs_overhead")
     if not ob:
         return []
+    failures = []
     ratio = float(ob.get("ratio", 0.0))
     if ratio < OBS_OVERHEAD_MIN_RATIO:
-        return [
+        failures.append(
             f"[obs_overhead] instrumented/plain ticks_per_s ratio="
             f"{ratio:.3f} < {OBS_OVERHEAD_MIN_RATIO} "
             f"(instrumented={ob['instrumented_ticks_per_s']:.0f}/s vs "
-            f"plain={ob['plain_ticks_per_s']:.0f}/s — metrics/tracing "
-            f"are taxing the serve hot path)"]
+            f"plain={ob['plain_ticks_per_s']:.0f}/s — metrics/tracing/"
+            f"flight/health are taxing the serve hot path)")
+    # newer artifacts carry the flight-recorder arm: the instrumented
+    # engine must actually have recorded lifecycle events, else the
+    # ratio gate is vacuously passing a disconnected recorder
+    if "flight_events" in ob and int(ob["flight_events"]) <= 0:
+        failures.append(
+            "[obs_overhead] flight_events=0 — the instrumented arm's "
+            "flight recorder saw no admit/retire events (hook wiring "
+            "broken), so the overhead ratio no longer measures the "
+            "full observability stack")
+    if failures:
+        return failures
     print(f"obs_overhead OK: instrumented/plain ratio={ratio:.3f} "
           f">= {OBS_OVERHEAD_MIN_RATIO} "
-          f"({ob['traces_recorded']} traces recorded)")
+          f"({ob['traces_recorded']} traces recorded, "
+          f"{ob.get('flight_events', 'n/a')} flight events)")
     return []
 
 

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.runtime import pad_k
+from repro.obs.flight import NULL_FLIGHT
 from .laplacian import Graph
 from .ref_ac import ACFactor, DeviceFactor
 from .parac import factorize_wavefront, factorize_batched, _next_pow2
@@ -706,7 +707,8 @@ class FactorCache:
                  k_tiering: bool = True,
                  compact_threshold: Optional[float] = 0.5,
                  device: Optional[jax.Device] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 flight=None):
         self.chunk = chunk
         self.fill_slack = fill_slack
         self.strict = strict
@@ -749,6 +751,14 @@ class FactorCache:
         self.expirations = 0
         self.compactions = 0
         self.adoptions = 0         # factors constructed elsewhere, adopted
+        # flight-recorder events for cache lifecycle transitions — a
+        # post-mortem needs the eviction/expiry/compaction sequence that
+        # preceded an incident, not just the end-state counters
+        fl = flight if flight is not None else NULL_FLIGHT
+        self._ev_cache_evict = fl.bind("cache_evict")
+        self._ev_cache_expire = fl.bind("cache_expire")
+        self._ev_compaction = fl.bind("compaction")
+        self._ev_adopt = fl.bind("adopt")
 
     # -- staleness ----------------------------------------------------------
     def advance_ticks(self, k: int = 1) -> None:
@@ -791,6 +801,7 @@ class FactorCache:
         for gid in stale:
             del self._handles[gid]
             self.expirations += 1
+            self._ev_cache_expire(gid=gid)
         if stale:
             self._maybe_compact()
         return len(stale)
@@ -807,6 +818,9 @@ class FactorCache:
             if cap and fleet.free_rows / cap >= self.compact_threshold:
                 if fleet.compact():
                     self.compactions += 1
+                    self._ev_compaction(family=fleet.family,
+                                        n_pad=fleet.n_pad,
+                                        k_tier=fleet.k_tier)
                     done += 1
         return done
 
@@ -819,6 +833,9 @@ class FactorCache:
         for fleet in self._fleets.values():
             if fleet.compact():
                 self.compactions += 1
+                self._ev_compaction(family=fleet.family,
+                                    n_pad=fleet.n_pad,
+                                    k_tier=fleet.k_tier)
                 done += 1
         return done
 
@@ -987,6 +1004,8 @@ class FactorCache:
                              max_age_ticks=max_age_ticks)
         handle.construct_s = construct_s
         self.adoptions += 1
+        self._ev_adopt(gid=graph_id, family=family,
+                       construct_s=construct_s)
         return handle
 
     def _attach_many(self, items: Sequence[Tuple[Graph, object,
@@ -1064,8 +1083,9 @@ class FactorCache:
                  and len(self._handles) > self.max_handles)
                 or (self.memory_budget_bytes is not None
                     and self.device_bytes > self.memory_budget_bytes)):
-            self._handles.popitem(last=False)
+            gid, _ = self._handles.popitem(last=False)
             self.evictions += 1
+            self._ev_cache_evict(gid=gid, reason="budget")
             evicted = True
         if evicted:
             self._maybe_compact()
@@ -1143,6 +1163,7 @@ class FactorCache:
     def evict(self, graph_id: str) -> None:
         if self._handles.pop(graph_id, None) is not None:
             self.evictions += 1
+            self._ev_cache_evict(gid=graph_id, reason="explicit")
             self._maybe_compact()
 
     def clear(self) -> None:

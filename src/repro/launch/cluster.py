@@ -29,7 +29,8 @@ def build_cluster(*, suite="tiny", replicas=2, routing="affinity",
                   rate_window_s=1.0, replica_ttl_s=30.0,
                   precond="ac", select_epsilon=0.1, seed=0,
                   factor_replicas=0, devices=None,
-                  metrics=None, tracer=None, detector=None):
+                  metrics=None, tracer=None, detector=None,
+                  flight=None, health=None):
     """Stand up the cluster and register (not factor) the suite graphs.
     Returns ``(cluster, sizes)`` with graph ids = suite names."""
     from repro.data import graphs
@@ -49,6 +50,7 @@ def build_cluster(*, suite="tiny", replicas=2, routing="affinity",
         select_epsilon=select_epsilon, seed=seed,
         factor_replicas=factor_replicas, devices=devices,
         metrics=metrics, tracer=tracer, detector=detector,
+        flight=flight, health=health,
         cache_kw=dict(chunk=chunk, fill_slack=fill_slack, strict=False))
     import jax
     for i, (name, g) in enumerate(built.items()):
@@ -94,7 +96,8 @@ def run_cluster(*, suite="tiny", requests=48, replicas=2,
                 rate_window_s=1.0, replica_ttl_s=30.0,
                 precond="ac", select_epsilon=0.1, deadline_ms=None,
                 factor_replicas=0, devices=None,
-                metrics=None, tracer=None, detector=None):
+                metrics=None, tracer=None, detector=None,
+                flight=None, health=None):
     """Build the cluster, replay one trace, close, return metrics."""
     from repro.launch.serve import make_trace
     cluster, sizes = build_cluster(
@@ -105,7 +108,8 @@ def run_cluster(*, suite="tiny", requests=48, replicas=2,
         replica_ttl_s=replica_ttl_s, precond=precond,
         select_epsilon=select_epsilon, seed=seed,
         factor_replicas=factor_replicas, devices=devices,
-        metrics=metrics, tracer=tracer, detector=detector)
+        metrics=metrics, tracer=tracer, detector=detector,
+        flight=flight, health=health)
     gids = list(sizes)
     trace = make_trace(gids, sizes, requests, seed=seed,
                        max_nrhs=min(max_nrhs, slots),
@@ -144,7 +148,8 @@ def run_factor_storm(*, replicas=2, factor_replicas=0, storm_graphs=4,
                      warm_dt_s=0.25, settle_s=2.0, slots=8,
                      iters_per_tick=8, chunk=128, seed=0,
                      max_queue=1024, devices=None,
-                     metrics=None, tracer=None):
+                     metrics=None, tracer=None,
+                     flight=None, health=None):
     """The disaggregation benchmark: a steady warm solve stream with a
     burst of cold factorizations layered on top.
 
@@ -185,7 +190,8 @@ def run_factor_storm(*, replicas=2, factor_replicas=0, storm_graphs=4,
         slots=slots, iters_per_tick=iters_per_tick, chunk=chunk,
         max_queue=max_queue, seed=seed,
         factor_replicas=factor_replicas, devices=devices,
-        metrics=registry, tracer=tracer, detector=detector)
+        metrics=registry, tracer=tracer, detector=detector,
+        flight=flight, health=health)
     try:
         warm_gids = list(sizes)
         rng = np.random.default_rng(seed)
@@ -259,7 +265,8 @@ def run_factor_storm(*, replicas=2, factor_replicas=0, storm_graphs=4,
             solve_control_calls=sum(r["frontend"]["control_calls"]
                                     for r in cs["per_replica"]),
             adoptions=cs["adoptions"], factor_dedups=cs["factor_dedups"],
-            overload=cs["overload"], cluster=cs)
+            overload=cs["overload"], cluster=cs,
+            flight=(flight.stats() if flight is not None else None))
     finally:
         cluster.close(drain=False)
 
@@ -321,6 +328,11 @@ def main():
     ap.add_argument("--trace-json", default=None,
                     help="export per-request lifecycle spans as Chrome "
                          "trace_event JSON (chrome://tracing, Perfetto)")
+    ap.add_argument("--postmortem-dir", default=None,
+                    help="arm the flight recorder: any incident (driver "
+                         "crash, replica ejection, sustained overload, "
+                         "SLO-miss streak) dumps the recent event ring "
+                         "plus a stats/metrics sample to JSONL here")
     args = ap.parse_args()
 
     from repro.obs import (MetricsRegistry, SustainedThresholdDetector,
@@ -330,6 +342,13 @@ def main():
     tracer = Tracer() if args.trace_json else None
     detector = (SustainedThresholdDetector(registry)
                 if registry is not None else None)
+    flight = health = None
+    if args.postmortem_dir or registry is not None:
+        from repro.obs import FlightRecorder, HealthMonitor
+        flight = FlightRecorder(postmortem_dir=args.postmortem_dir,
+                                slo_miss_streak=8)
+        flight.attach(registry=registry)
+        health = HealthMonitor(registry, flight=flight)
     server = maybe_serve(registry, args.metrics_port)
     if server is not None:
         print(f"metrics: http://localhost:{server.port}/metrics")
@@ -348,10 +367,17 @@ def main():
             select_epsilon=args.select_epsilon,
             deadline_ms=args.deadline_ms,
             factor_replicas=args.factor_replicas, devices=args.devices,
-            metrics=registry, tracer=tracer, detector=detector)
+            metrics=registry, tracer=tracer, detector=detector,
+            flight=flight, health=health)
     finally:
         if server is not None:
             server.close()
+        if flight is not None:
+            flight.flush(timeout=5.0)
+            fs = flight.stats()
+            if fs["dump_paths"]:
+                print("post-mortem dumps: "
+                      + ", ".join(fs["dump_paths"]))
     if tracer is not None and args.trace_json:
         n_ev = tracer.export_chrome(args.trace_json)
         print(f"wrote {args.trace_json} ({n_ev} trace events)")

@@ -88,7 +88,7 @@ def make_trace(gids, sizes, n_requests, *, seed=0, max_nrhs=4,
 def build_service(*, suite="tiny", slots=8, iters_per_tick=8, chunk=128,
                   fill_slack=32, memory_budget_mb=None, policy="fifo",
                   max_skips=None, precond="ac", precond_params=None,
-                  metrics=None, tracer=None):
+                  metrics=None, tracer=None, flight=None, health=None):
     """Stand up the service: generate the graph suite, admit the fleet
     to a :class:`FactorCache`, wrap it in a :class:`SolveEngine` with
     the named admission policy.  ``precond`` selects the preconditioner
@@ -113,7 +113,8 @@ def build_service(*, suite="tiny", slots=8, iters_per_tick=8, chunk=128,
     cache = FactorCache(
         chunk=chunk, fill_slack=fill_slack, strict=False,
         memory_budget_bytes=(memory_budget_mb * (1 << 20)
-                             if memory_budget_mb else None))
+                             if memory_budget_mb else None),
+        flight=flight)
     t0 = time.perf_counter()
     if precond in ("ac", "auto"):
         cache.factor_batched(list(built.values()),
@@ -139,7 +140,11 @@ def build_service(*, suite="tiny", slots=8, iters_per_tick=8, chunk=128,
     t_factor = time.perf_counter() - t0
     eng = SolveEngine(cache, slots=slots, iters_per_tick=iters_per_tick,
                       admission=make_policy(policy, max_skips=max_skips),
-                      metrics=metrics, tracer=tracer)
+                      metrics=metrics, tracer=tracer,
+                      flight=flight, health=health)
+    if health is not None:
+        health.watch_engine(eng)
+        health.watch_cache(cache)
     registry = {name: (g, keys[name]) for name, g in built.items()}
     return eng, {name: g.n for name, g in built.items()}, t_factor, registry
 
@@ -278,7 +283,7 @@ def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
                 deadline_ms=None, use_async=False, max_queue=256,
                 overload="block", precond="ac", precond_params=None,
                 select_epsilon=0.2, skew=None, return_engine=False,
-                metrics=None, tracer=None):
+                metrics=None, tracer=None, flight=None, health=None):
     """Build the service, replay a trace, return a metrics dict.  With
     ``warmup_requests`` > 0 a throwaway trace is replayed first through
     the *same* engine so the measured replay excludes jit compiles.
@@ -295,7 +300,8 @@ def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
         chunk=chunk, fill_slack=fill_slack,
         memory_budget_mb=memory_budget_mb, policy=policy,
         max_skips=max_skips, precond=precond,
-        precond_params=precond_params, metrics=metrics, tracer=tracer)
+        precond_params=precond_params, metrics=metrics, tracer=tracer,
+        flight=flight, health=health)
     gids = list(sizes)
     deadline_s = deadline_ms / 1e3 if deadline_ms else None
     selector = None
@@ -351,7 +357,8 @@ def run_service(*, suite="tiny", requests=24, slots=8, iters_per_tick=8,
     if use_async:
         from repro.serve import SolveFrontend
         with SolveFrontend(eng, max_queue=max_queue,
-                           overload=overload, metrics=metrics) as fe:
+                           overload=overload, metrics=metrics,
+                           flight=flight) as fe:
             metrics, done = replay_trace_async(fe, trace)
             fs = fe.stats()
             frontend_stats = dict(submitted=fs.submitted,
@@ -439,12 +446,24 @@ def main():
                     help="record per-request lifecycle spans and write "
                          "Chrome trace_event JSON here "
                          "(chrome://tracing / Perfetto)")
+    ap.add_argument("--postmortem-dir", default=None,
+                    help="arm the flight recorder: structured lifecycle "
+                         "events ring-buffer in memory, and any incident "
+                         "(driver crash, SLO-miss streak) dumps the last "
+                         "events + a metrics sample to JSONL files here")
     args = ap.parse_args()
 
     from repro.obs import MetricsRegistry, Tracer, maybe_serve
     registry = MetricsRegistry() \
         if (args.metrics_port is not None) else None
     tracer = Tracer() if args.trace_json else None
+    flight = health = None
+    if args.postmortem_dir or registry is not None:
+        from repro.obs import FlightRecorder, HealthMonitor
+        flight = FlightRecorder(postmortem_dir=args.postmortem_dir,
+                                slo_miss_streak=8)
+        flight.attach(registry=registry)
+        health = HealthMonitor(registry, flight=flight)
     server = maybe_serve(registry, args.metrics_port)
     if server is not None:
         print(f"metrics: http://localhost:{server.port}/metrics")
@@ -460,10 +479,16 @@ def main():
             use_async=args.use_async, max_queue=args.max_queue,
             overload=args.overload, precond=args.precond,
             select_epsilon=args.select_epsilon, skew=args.skew,
-            metrics=registry, tracer=tracer)
+            metrics=registry, tracer=tracer, flight=flight, health=health)
     finally:
         if server is not None:
             server.close()
+        if flight is not None:
+            flight.flush(timeout=5.0)
+            fs = flight.stats()
+            if fs["dump_paths"]:
+                print("post-mortem dumps: "
+                      + ", ".join(fs["dump_paths"]))
     if tracer is not None:
         n = tracer.export_chrome(args.trace_json)
         print(f"wrote {n} trace events to {args.trace_json}")

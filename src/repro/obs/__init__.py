@@ -1,7 +1,10 @@
 """Observability control plane: metrics registry + time series,
 Prometheus scrape endpoint, request lifecycle tracing, overload
-detection.  See ``docs/observability.md`` for the metric glossary and
-wiring quickstarts."""
+detection, flight recorder + post-mortem dumps, numerical-health
+instruments.  See ``docs/observability.md`` for the metric glossary
+and wiring quickstarts."""
+from repro.obs.flight import NULL_FLIGHT, FlightRecorder, NullFlight
+from repro.obs.health import HealthMonitor
 from repro.obs.histogram import (DEFAULT_LATENCY_BUCKETS_S, bucket_index,
                                  percentile, quantile_from_counts, summarize)
 from repro.obs.overload import OverloadDetector, SustainedThresholdDetector
@@ -19,4 +22,5 @@ __all__ = [
     "MetricsServer", "maybe_serve", "render",
     "RequestTrace", "Span", "Tracer", "trace_from_request",
     "OverloadDetector", "SustainedThresholdDetector",
+    "NULL_FLIGHT", "FlightRecorder", "NullFlight", "HealthMonitor",
 ]

@@ -19,6 +19,13 @@ from .registry import Counter, Gauge, Histogram, MetricsRegistry
 CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
 
 
+class _ReuseAddrServer(ThreadingHTTPServer):
+    # back-to-back replays on a fixed --metrics-port must not trip over
+    # the previous run's TIME_WAIT socket
+    allow_reuse_address = True
+    daemon_threads = True
+
+
 def _escape(v: str) -> str:
     return v.replace("\\", r"\\").replace('"', r'\"').replace("\n", r"\n")
 
@@ -94,15 +101,23 @@ class MetricsServer:
             def log_message(self, fmt, *args):     # silence per-scrape spam
                 pass
 
-        self._httpd = ThreadingHTTPServer((host, port), _Handler)
-        self._httpd.daemon_threads = True
+        self._httpd = _ReuseAddrServer((host, port), _Handler)
         self.port = self._httpd.server_address[1]
+        self._closed = False
+        self._close_lock = threading.Lock()
         self._thread = threading.Thread(
             target=self._httpd.serve_forever, name="metrics-server",
             daemon=True)
         self._thread.start()
 
     def close(self) -> None:
+        """Stop serving and release the port.  Idempotent — launchers
+        and tests may close from both a finally block and an exit
+        handler."""
+        with self._close_lock:
+            if self._closed:
+                return
+            self._closed = True
         self._httpd.shutdown()
         self._httpd.server_close()
         self._thread.join(timeout=5.0)

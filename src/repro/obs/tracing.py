@@ -63,6 +63,7 @@ class RequestTrace:
     status: str = ""
     replica: int = -1
     device: str = ""
+    trace_id: str = ""
     spans: List[Span] = field(default_factory=list)
     attrs: Dict[str, object] = field(default_factory=dict)
 
@@ -122,6 +123,7 @@ def trace_from_request(req, *, family: str = "", policy: str = "",
     return RequestTrace(
         rid=req.rid, graph_id=req.graph_id, family=family,
         policy=policy, status=req.status, replica=replica, device=device,
+        trace_id=getattr(req, "trace_id", ""),
         spans=spans,
         attrs={"iters": max_iters, "nrhs": req.nrhs,
                "factor_mode": getattr(req, "factor_mode", "") or ""})
@@ -183,6 +185,7 @@ class Tracer:
                     "ts": (sp.start - t0) * 1e6,
                     "dur": sp.dur_s * 1e6,
                     "args": {"rid": tr.rid, "graph_id": tr.graph_id,
+                             "trace_id": tr.trace_id,
                              "family": tr.family, "policy": tr.policy,
                              "status": tr.status, "device": tr.device,
                              **tr.attrs}})

@@ -50,6 +50,7 @@ from repro.core.ref_ac import DeviceFactor
 from repro.core.parac import factorize_batched
 from repro.core.solver import get_family
 from repro.core.trisolve import build_schedules_batched
+from repro.obs.flight import NULL_FLIGHT
 from repro.obs.registry import NULL as _NULL_METRICS
 
 from .replica import EngineReplica
@@ -172,6 +173,8 @@ class FactorReplica(threading.Thread):
                 self.failovers += 1
                 with self.tier._lock:
                     self.tier.failovers += 1
+                self.tier._ev_failover(gid=job.gid, dead=target.index,
+                                       new=newt.index)
                 target = newt
                 continue
             self.adoptions += 1
@@ -261,7 +264,7 @@ class FactorTier:
                  dtype=np.float32, max_batch: int = 16,
                  max_failovers: int = 8,
                  on_retarget: Optional[Callable] = None,
-                 metrics=None):
+                 metrics=None, flight=None):
         if replicas < 1:
             raise ValueError("factor tier needs >= 1 replica")
         self.chunk = chunk
@@ -304,6 +307,8 @@ class FactorTier:
         self._m_adopt_s = reg.histogram(
             "repro_factor_tier_adopt_seconds",
             "adopt round-trip seconds per shipped payload")
+        fl = flight if flight is not None else NULL_FLIGHT
+        self._ev_failover = fl.bind("failover")
         self.workers = [
             FactorReplica(i, self,
                           devices[i] if devices is not None else None)

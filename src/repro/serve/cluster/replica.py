@@ -48,7 +48,7 @@ class EngineReplica:
                  clock: Optional[Callable[[], float]] = None,
                  device: Optional[jax.Device] = None,
                  cache_kw: Optional[Dict] = None,
-                 metrics=None, tracer=None):
+                 metrics=None, tracer=None, flight=None, health=None):
         self.index = index
         self.device = device
         kw = dict(cache_kw or {})
@@ -56,17 +56,20 @@ class EngineReplica:
             kw.setdefault("clock", clock)
         if device is not None:
             kw.setdefault("device", device)
+        if flight is not None:
+            kw.setdefault("flight", flight)
         self.cache = FactorCache(**kw)
         self.engine = SolveEngine(self.cache, slots=slots,
                                   iters_per_tick=iters_per_tick,
                                   admission=admission, clock=clock,
                                   metrics=metrics, tracer=tracer,
+                                  flight=flight, health=health,
                                   obs_replica=index,
                                   obs_device=str(device) if device is not None
                                   else "")
         self.frontend = SolveFrontend(self.engine, max_queue=max_queue,
                                       overload=overload, metrics=metrics,
-                                      obs_replica=index)
+                                      flight=flight, obs_replica=index)
 
     # -- read-only probes (any thread) --------------------------------------
     def fresh(self, graph_id: str) -> bool:

@@ -65,6 +65,7 @@ import numpy as np
 import jax
 
 from repro.core.solver import PRECOND_FAMILIES, graph_fingerprint
+from repro.obs.flight import NULL_FLIGHT
 from repro.obs.registry import NULL as _NULL_METRICS
 from repro.serve.admission import make_policy
 from repro.serve.engine import SolveRequest, make_request
@@ -248,7 +249,8 @@ class Router:
                  replica_ttl_s: float = 30.0,
                  eject_rejections: int = 4,
                  health_window_s: float = 1.0,
-                 readmit_cooldown_s: float = 2.0):
+                 readmit_cooldown_s: float = 2.0,
+                 flight=None):
         self.policy = policy
         self.replicas = list(replicas)
         self._clock = clock
@@ -275,6 +277,14 @@ class Router:
         self.shed = 0
         self.routed_per: Dict[int, int] = defaultdict(int)
         self.rejections_per: Dict[int, int] = defaultdict(int)
+        # flight-recorder hooks: pre-bound so the health loop pays one
+        # call per *transition*, nothing per route.  incident() defers
+        # its dump to a worker thread, so firing it here — under the
+        # cluster lock — cannot deadlock against stats_fn.
+        fl = flight if flight is not None else NULL_FLIGHT
+        self._flight = fl
+        self._ev_eject = fl.bind("eject")
+        self._ev_readmit = fl.bind("readmit")
 
     # -- health -------------------------------------------------------------
     def healthy(self, *, advance: bool = True) -> List[EngineReplica]:
@@ -294,6 +304,10 @@ class Router:
                 if advance and until != float("inf"):
                     if until is None:
                         self.ejections += 1
+                        self._ev_eject(replica=i, reason="dead_driver")
+                        self._flight.incident("replica_ejected",
+                                              replica=i,
+                                              cause="dead_driver")
                     self._ejected_until[i] = float("inf")
                 continue
             if until is not None:
@@ -303,6 +317,7 @@ class Router:
                     del self._ejected_until[i]  # cooldown over: probation
                     self._rejects[i].clear()
                     self.readmissions += 1
+                    self._ev_readmit(replica=i)
             out.append(rep)
         return out
 
@@ -321,6 +336,9 @@ class Router:
             self._ejected_until[i] = now + self.readmit_cooldown_s
             self.ejections += 1
             dq.clear()
+            self._ev_eject(replica=i, reason="overload")
+            self._flight.incident("replica_ejected", replica=i,
+                                  cause="overload")
 
     def record_routed(self, rep: EngineReplica, *, hit: bool) -> None:
         """A submit to ``rep`` was accepted — only now does the route
@@ -504,7 +522,8 @@ class SolveCluster:
                  seed: int = 0, cache_kw: Optional[Dict] = None,
                  devices=None, factor_replicas: int = 0,
                  factor_max_batch: int = 16,
-                 metrics=None, tracer=None, detector=None):
+                 metrics=None, tracer=None, detector=None,
+                 flight=None, health=None):
         if replicas < 1:
             raise ValueError("replicas must be >= 1")
         if factor_replicas < 0:
@@ -533,7 +552,8 @@ class SolveCluster:
                                                 max_skips=max_skips),
                           max_queue=max_queue, overload=overload,
                           clock=clock, device=devs[i], cache_kw=cache_kw,
-                          metrics=metrics, tracer=tracer)
+                          metrics=metrics, tracer=tracer,
+                          flight=flight, health=health)
             for i in range(replicas)]
         ckw = dict(cache_kw or {})
         self.factor_tier = FactorTier(
@@ -545,14 +565,16 @@ class SolveCluster:
             dtype=ckw.get("dtype", np.float32),
             max_batch=factor_max_batch,
             on_retarget=self._retarget,
-            metrics=metrics) if factor_replicas > 0 else None
+            metrics=metrics,
+            flight=flight) if factor_replicas > 0 else None
         self.router = Router(
             make_routing(routing, seed=seed), self.replicas,
             clock=self._clock, factor_cb=self._factor_on,
             replicate_above=replicate_above, rate_window_s=rate_window_s,
             replica_ttl_s=replica_ttl_s, eject_rejections=eject_rejections,
             health_window_s=health_window_s,
-            readmit_cooldown_s=readmit_cooldown_s)
+            readmit_cooldown_s=readmit_cooldown_s,
+            flight=flight)
         self.registry: Dict[str, Tuple] = {}
         self._lock = threading.Lock()
         self._seq = 0
@@ -588,6 +610,24 @@ class SolveCluster:
             "cold-path construction/adopt wait per routed request")
         self._obs_lock = threading.Lock()
         self.detector = detector
+        self._prev_det_state: Optional[str] = None
+        # -- forensic half (repro.obs.flight / repro.obs.health): the
+        # recorder gets the cluster's stats snapshot as post-mortem
+        # context, the health monitor watches every replica's engine
+        # retirements and feeds drift quarantines into the selector.
+        self.flight = flight
+        self.health = health
+        fl = flight if flight is not None else NULL_FLIGHT
+        self._ev_detector = fl.bind("detector_transition")
+        if flight is not None:
+            flight.attach(stats_fn=lambda: self.stats().as_dict(),
+                          registry=metrics)
+        if health is not None:
+            for rep in self.replicas:
+                health.watch_engine(rep.engine)
+                health.watch_cache(rep.cache)
+            if self.selector is not None:
+                health.on_quarantine = self._quarantine
         if metrics is not None:
             self._g_healthy = reg.gauge(
                 "repro_cluster_healthy_replicas", "routable replicas")
@@ -596,6 +636,9 @@ class SolveCluster:
             self._g_factor_queue = reg.gauge(
                 "repro_cluster_factor_tier_queue_depth",
                 "constructions queued on the factor tier")
+            self._g_overload = reg.gauge(
+                "repro_cluster_overload_state",
+                "overload detector state (0 = ok, 1 = overloaded)")
             self._g_cache_bytes = reg.gauge(
                 "repro_cache_device_bytes",
                 "device bytes held by a replica's factor cache",
@@ -634,6 +677,14 @@ class SolveCluster:
         if self.selector is not None:
             return self.selector.pick(gid, deadline_s=deadline_s)
         return self.precond
+
+    def _quarantine(self, gid: str, family: str) -> None:
+        """Health-monitor drift callback: quarantine ``family`` for the
+        drifting graph in the adaptive selector.  The engine reports the
+        *placement* id (possibly family-qualified) — the selector keys
+        on the base graph id."""
+        base, _, _ = gid.partition("::")
+        self.selector.quarantine(base, family)
 
     def _factor_on(self, gid: str, rep: EngineReplica,
                    ttl_s: Optional[float]) -> Future:
@@ -712,7 +763,21 @@ class SolveCluster:
                 rep.cache.device_bytes if rep.alive else 0)
         if self.detector is not None:
             with self._obs_lock:   # samples race in from replica drivers
-                self.detector.update(self._clock())
+                state = self.detector.update(self._clock())
+            self._g_overload.set(1 if state == "overloaded" else 0)
+            prev = self._prev_det_state
+            if state != prev:
+                self._prev_det_state = state
+                self._ev_detector(state=state, prev=prev or "")
+                # a flip *into* overloaded is the sustained-pressure
+                # incident the post-mortem dump exists for; the flip
+                # back to ok is just an event
+                if prev is not None and state == "overloaded":
+                    fl = self.flight
+                    if fl is not None:
+                        fl.incident("sustained_overload",
+                                    detector=self.detector.name,
+                                    state=state)
 
     def _obs_done(self, fut: Future) -> None:
         """Done-callback (attached only when metrics are on) observing
@@ -924,7 +989,9 @@ class SolveCluster:
                 factor_tier=(self.factor_tier.stats()
                              if self.factor_tier is not None else None),
                 overload=(self.detector.stats()
-                          if self.detector is not None else None))
+                          if self.detector is not None else None),
+                health=(self.health.snapshot()
+                        if self.health is not None else None))
 
     # -- lifecycle ----------------------------------------------------------
     def drain(self, timeout: Optional[float] = None) -> bool:
@@ -952,6 +1019,10 @@ class SolveCluster:
             self.factor_tier.close()
         for rep in self.replicas:
             rep.close(drain=drain, timeout=timeout)
+        if self.flight is not None:
+            # post-mortem writers run on daemon threads; give in-flight
+            # dumps a bounded window to land before the process moves on
+            self.flight.flush(timeout=5.0)
 
     def __enter__(self) -> "SolveCluster":
         return self

@@ -90,6 +90,7 @@ class AdaptiveSelector:
         self.exploits = 0
         self.observed = 0
         self.deadline_misses = 0
+        self.quarantined = 0      # external (drift-detector) quarantines
         self.picks_by_family: Dict[str, int] = {f: 0 for f in self.families}
 
     # -- internals ----------------------------------------------------------
@@ -204,6 +205,25 @@ class AdaptiveSelector:
             rec["n"] += 1
             rec["ok"] = bool(ok)
 
+    def quarantine(self, gid: str, family: str) -> None:
+        """Externally quarantine ``family`` for ``gid`` — the health
+        monitor's drift detector calls this when the family's iteration
+        counts degrade against their own baseline.  Same mechanism as a
+        failed serve: exploitation skips the pair until an explicit
+        explore retries it (so a drifting family can rehabilitate if
+        the drift was transient)."""
+        with self._lock:
+            rec = self._est.get((gid, family))
+            if rec is None:
+                # never served exploitatively yet: record the flag so a
+                # first exploitation pass already avoids it
+                self._est[(gid, family)] = {
+                    "wall_s": 0.0, "serve_s": 0.0, "construct_s": 0.0,
+                    "iters": 0.0, "n": 0, "ok": False}
+            else:
+                rec["ok"] = False
+            self.quarantined += 1
+
     # -- telemetry ----------------------------------------------------------
     def stats(self) -> Dict:
         """Counters plus the per-graph estimate table (JSON-friendly)."""
@@ -217,6 +237,7 @@ class AdaptiveSelector:
                 "exploits": self.exploits,
                 "observed": self.observed,
                 "deadline_misses": self.deadline_misses,
+                "quarantined": self.quarantined,
                 "picks_by_family": dict(self.picks_by_family),
                 "graphs": len({g for g, _ in self._est}),
                 "estimates": {f"{g}::{f}": dict(rec)

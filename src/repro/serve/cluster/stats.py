@@ -83,7 +83,12 @@ class ClusterStats:
     :class:`~repro.obs.overload.OverloadDetector` snapshot — state
     (``ok``/``overloaded``), windowed queue/arrival readings and the
     ``scale_up``/``scale_down``/``hold`` recommendation — or ``None``
-    when the cluster runs without one."""
+    when the cluster runs without one.
+
+    ``health`` carries the attached
+    :class:`~repro.obs.health.HealthMonitor` snapshot — tracked
+    ``(graph, family)`` pairs, drift quarantines, per-family worst
+    maxiter/deadline-miss streaks — or ``None`` without one."""
 
     policy: str
     replicas: int
@@ -105,6 +110,7 @@ class ClusterStats:
     adoptions: int = 0
     factor_tier: Optional[Dict] = None
     overload: Optional[Dict] = None
+    health: Optional[Dict] = None
 
     @property
     def hit_rate(self) -> float:

@@ -52,6 +52,7 @@ mates and tick slicing change nothing.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
@@ -64,9 +65,17 @@ from repro.core.solver import FactorCache, FactorFleet, FactorHandle
 from repro.core.parac import _next_pow2
 from repro.core.pcg import (FleetArrays, FleetPCGState, pcg_fleet_init,
                             pcg_fleet_step)
+from repro.obs.flight import NULL_FLIGHT
 from repro.obs.registry import NULL as _NULL_METRICS
 from repro.obs.tracing import trace_from_request
 from repro.serve.admission import AdmissionPolicy, FIFOAdmission
+
+# process-wide trace-id sequence: stamped once per request at
+# construction (``__post_init__``) so flight-recorder events and
+# Chrome trace rows join on the same id no matter which face —
+# frontend, cluster, or a replay driver building SolveRequests
+# directly — created the request
+_TRACE_SEQ = itertools.count()
 
 
 @dataclasses.dataclass(eq=False)          # identity equality: results are
@@ -94,6 +103,7 @@ class SolveRequest:                        # arrays, field-wise == is a trap
     priority: int = 0
     deadline_s: Optional[float] = None
     replica: int = -1         # filled by the cluster router (serving replica)
+    trace_id: str = ""        # auto-stamped; joins flight events ↔ traces
     # -- filled by the engine -----------------------------------------------
     x: Optional[np.ndarray] = None
     iters: Optional[np.ndarray] = None
@@ -122,6 +132,10 @@ class SolveRequest:                        # arrays, field-wise == is a trap
     # graph_id to a different factor afterwards
     _handle: Optional[FactorHandle] = dataclasses.field(
         default=None, repr=False)
+
+    def __post_init__(self):
+        if not self.trace_id:
+            self.trace_id = f"t{next(_TRACE_SEQ):06d}"
 
     @property
     def nrhs(self) -> int:
@@ -332,8 +346,8 @@ class SolveEngine:
                  iters_per_tick: int = 8, completed_history: int = 4096,
                  admission: Optional[AdmissionPolicy] = None,
                  clock: Optional[Callable[[], float]] = None,
-                 metrics=None, tracer=None, obs_replica: int = -1,
-                 obs_device: str = ""):
+                 metrics=None, tracer=None, flight=None, health=None,
+                 obs_replica: int = -1, obs_device: str = ""):
         if slots < 1:
             raise ValueError("slots must be >= 1")
         self.cache = cache
@@ -418,6 +432,15 @@ class SolveEngine:
             "admission queue wait (submit to lane grant)",
             labels=("replica",)).labels(replica=rep)
         self._obs_rep_label = rep
+        # flight recorder + health monitor ride the same pre-bound
+        # pattern: no-op callables when absent, one dict build per event
+        # when present — never a device sync either way
+        fl = flight if flight is not None else NULL_FLIGHT
+        self.flight = flight
+        self.health = health
+        self._ev_admit = fl.bind("admit", replica=rep)
+        self._ev_retire = fl.bind("retire", replica=rep)
+        self._ev_evict = fl.bind("evict", replica=rep)
 
         counts = self.compile_counts
         k = iters_per_tick
@@ -595,6 +618,8 @@ class SolveEngine:
             self.cols_in += j
             req.admit_tick = self.ticks
             req.admit_time = self._clock()
+            self._ev_admit(rid=req.rid, trace_id=req.trace_id,
+                           gid=req.graph_id, nrhs=j, tick=self.ticks)
             for col, lane_i in enumerate(rows):
                 self.lanes[lane_i] = _LaneRef(req, col, bl)
 
@@ -704,6 +729,10 @@ class SolveEngine:
                 if not lane.req._evicted:
                     lane.req._evicted = True
                     self.deadline_evictions += 1
+                    self._ev_evict(rid=lane.req.rid,
+                                   trace_id=lane.req.trace_id,
+                                   gid=lane.req.graph_id,
+                                   reason="deadline")
                 doomed.setdefault(lane.bucket, []).append(i)
         for bl, rows in doomed.items():
             jp = _next_pow2(len(rows))
@@ -756,6 +785,16 @@ class SolveEngine:
                                     status=req.status).inc()
                 self._m_latency.observe(req.latency_s)
                 self._m_qwait.observe(req.queue_wait_s)
+                it_max = int(req.iters.max())
+                rr_max = float(req.relres.max())
+                self._ev_retire(rid=req.rid, trace_id=req.trace_id,
+                                gid=req.graph_id, status=req.status,
+                                iters=it_max, relres=rr_max)
+                if self.health is not None:
+                    self.health.observe_retirement(
+                        gid=req.graph_id, family=bl.fleet.family,
+                        iters=it_max, relres=rr_max, status=req.status,
+                        deadline_missed=req.status == "deadline_missed")
                 if self.tracer is not None:
                     self.tracer.record(trace_from_request(
                         req, family=bl.fleet.family,

@@ -44,6 +44,7 @@ from collections import deque
 from concurrent.futures import Future
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
+from repro.obs.flight import NULL_FLIGHT
 from repro.obs.registry import NULL as _NULL_METRICS
 
 from .engine import EngineStats, SolveEngine, SolveRequest, make_request
@@ -112,7 +113,7 @@ class SolveFrontend:
 
     def __init__(self, engine: SolveEngine, *, max_queue: int = 256,
                  overload: str = "block", idle_wait_s: float = 0.05,
-                 metrics=None, obs_replica: int = -1):
+                 metrics=None, flight=None, obs_replica: int = -1):
         if max_queue < 1:
             raise ValueError("max_queue must be >= 1")
         if overload not in ("block", "reject"):
@@ -169,6 +170,8 @@ class SolveFrontend:
             "repro_frontend_control_seconds",
             "driver-thread seconds per control-channel call",
             labels=("replica",)).labels(replica=rep)
+        self._flight = flight if flight is not None else NULL_FLIGHT
+        self._obs_rep_label = rep
         self._thread = threading.Thread(target=self._run,
                                         name="solve-frontend", daemon=True)
         self._thread.start()
@@ -341,6 +344,9 @@ class SolveFrontend:
                 # the cleanup below so pending futures resolve
                 # exceptionally instead of blackholing
                 self.driver_error = exc
+                self._flight.incident(
+                    "driver_crash", replica=self._obs_rep_label,
+                    error=repr(exc))
                 with self._work:
                     self._closed = True
                     self._work.notify_all()

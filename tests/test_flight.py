@@ -1,0 +1,528 @@
+"""Forensic observability: the flight recorder's bounded ring and
+post-mortem dumps (incident-triggered and explicit), numerical-health
+drift detection wired through to selector quarantine, incident capture
+on an injected driver crash and a sustained-overload flip, and the
+fleet dashboard's scrape/summarize/render pipeline."""
+import io
+import json
+import threading
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core.solver import FactorCache
+from repro.data import graphs
+from repro.launch import top
+from repro.obs import (FlightRecorder, HealthMonitor, MetricsRegistry,
+                       MetricsServer, NULL_FLIGHT, render)
+from repro.serve import SolveCluster, SolveEngine, SolveFrontend
+from repro.serve.cluster.selector import AdaptiveSelector
+
+CACHE_KW = dict(chunk=32, fill_slack=64, strict=False)
+
+
+def _read_dump(path):
+    with open(path) as fh:
+        return [json.loads(line) for line in fh if line.strip()]
+
+
+# ---------------------------------------------------------------------------
+# Ring buffer semantics
+# ---------------------------------------------------------------------------
+
+def test_ring_bounds_memory_and_counts_drops():
+    fl = FlightRecorder(capacity=4)
+    ev = fl.bind("admit", replica=0)
+    for i in range(10):
+        ev(rid=i)
+    evs = fl.events()
+    assert len(evs) == 4                      # bounded: oldest fell off
+    assert [e["rid"] for e in evs] == [6, 7, 8, 9]
+    st = fl.stats()
+    assert st["recorded"] == 10 and st["dropped"] == 6
+    assert fl.events(last=2)[0]["rid"] == 8
+
+
+def test_bound_event_merges_static_and_call_fields():
+    fl = FlightRecorder()
+    fl.bind("retire", replica=3, component="engine")(
+        rid=7, trace_id="t000001", status="converged")
+    (e,) = fl.events()
+    assert e["kind"] == "retire" and e["replica"] == 3
+    assert e["component"] == "engine" and e["rid"] == 7
+    assert e["trace_id"] == "t000001"
+    assert e["seq"] == 1 and isinstance(e["t"], float)
+
+
+def test_null_flight_is_inert():
+    NULL_FLIGHT.bind("admit", replica=0)(rid=1)
+    NULL_FLIGHT.record("retire", rid=1)
+    NULL_FLIGHT.incident("whatever")
+    assert NULL_FLIGHT.dump("whatever") is None
+    assert NULL_FLIGHT.events() == []
+    assert NULL_FLIGHT.stats()["recorded"] == 0
+    assert NULL_FLIGHT.flush() is True
+
+
+def test_concurrent_recording_loses_nothing_and_tears_nothing():
+    """8 threads x 2000 bound-event records: every event lands exactly
+    once (unique, gapless seqs) and every event carries both its static
+    and per-call fields — no lost updates, no torn dicts."""
+    n_threads, per_thread = 8, 2000
+    fl = FlightRecorder(capacity=n_threads * per_thread)
+    evs = [fl.bind("admit", thread=k) for k in range(n_threads)]
+
+    def work(k):
+        for i in range(per_thread):
+            evs[k](i=i, trace_id=f"t{k}:{i}")
+
+    threads = [threading.Thread(target=work, args=(k,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    st = fl.stats()
+    assert st["recorded"] == n_threads * per_thread
+    assert st["dropped"] == 0
+    out = fl.events()
+    assert len(out) == n_threads * per_thread
+    assert sorted(e["seq"] for e in out) == \
+        list(range(1, n_threads * per_thread + 1))
+    seen = set()
+    for e in out:
+        assert e["kind"] == "admit"
+        assert e["trace_id"] == f"t{e['thread']}:{e['i']}"   # not torn
+        seen.add((e["thread"], e["i"]))
+    assert len(seen) == n_threads * per_thread               # not lost
+
+
+# ---------------------------------------------------------------------------
+# Dumps: format, caps, SLO-streak trigger
+# ---------------------------------------------------------------------------
+
+def test_sync_dump_writes_parseable_jsonl_with_context(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("repro_engine_ticks_total").inc(5)
+    fl = FlightRecorder(postmortem_dir=str(tmp_path))
+    fl.attach(stats_fn=lambda: {"routed": 12}, registry=reg)
+    fl.bind("admit", replica=0)(rid=1, trace_id="t000001")
+    fl.bind("retire", replica=0)(rid=1, trace_id="t000001",
+                                 status="converged")
+    path = fl.dump("bug report!", note="manual")
+    assert path.endswith("postmortem-001-bug_report_.jsonl")
+    lines = _read_dump(path)
+    head = lines[0]
+    assert head["type"] == "incident" and head["reason"] == "bug report!"
+    assert head["context"] == {"note": "manual"}
+    assert head["recorder"]["recorded"] == 2
+    events = [ln for ln in lines if ln["type"] == "event"]
+    assert [e["kind"] for e in events] == ["admit", "retire"]
+    assert all(e["trace_id"] == "t000001" for e in events)
+    (cs,) = [ln for ln in lines if ln["type"] == "cluster_stats"]
+    assert cs["stats"] == {"routed": 12}
+    (ms,) = [ln for ln in lines if ln["type"] == "metrics"]
+    assert ms["series"]["repro_engine_ticks_total"][""] == 5.0
+    assert path in fl.stats()["dump_paths"]
+
+
+def test_incident_dumps_are_capped_but_explicit_dumps_are_not(tmp_path):
+    fl = FlightRecorder(postmortem_dir=str(tmp_path), max_dumps=2)
+    for i in range(4):
+        fl.incident(f"crash_{i}")
+    assert fl.flush(timeout=10)
+    st = fl.stats()
+    assert st["incidents"] == 4 and st["dumps"] == 2   # cap held
+    assert len(st["dump_paths"]) == 2
+    path = fl.dump("post_cap")                          # explicit: uncapped
+    assert path is not None and _read_dump(path)[0]["reason"] == "post_cap"
+
+
+def test_no_postmortem_dir_records_but_never_dumps():
+    fl = FlightRecorder()
+    fl.incident("driver_crash", replica=0)
+    assert fl.flush(timeout=5)
+    st = fl.stats()
+    assert st["incidents"] == 1 and st["dumps"] == 0
+    # the incident itself still landed in the ring
+    assert fl.events()[-1]["kind"] == "incident"
+    assert fl.dump("nope") is None
+
+
+def test_slo_miss_streak_raises_incident_and_resets(tmp_path):
+    fl = FlightRecorder(postmortem_dir=str(tmp_path), slo_miss_streak=3)
+    retire = fl.bind("retire", replica=0)
+    retire(rid=0, status="deadline_missed")
+    retire(rid=1, status="deadline_missed")
+    retire(rid=2, status="converged")          # streak resets
+    assert fl.stats()["incidents"] == 0
+    for rid in (3, 4, 5):
+        retire(rid=rid, status="deadline_missed")
+    assert fl.flush(timeout=10)
+    st = fl.stats()
+    assert st["incidents"] == 1 and st["dumps"] == 1
+    lines = _read_dump(st["dump_paths"][0])
+    assert lines[0]["reason"] == "slo_miss_streak"
+    assert lines[0]["context"] == {"streak": 3}
+    # the dump's trailing events reconstruct the losing streak
+    misses = [ln for ln in lines if ln["type"] == "event"
+              and ln.get("status") == "deadline_missed"]
+    assert len(misses) == 5
+
+
+def test_flight_gauges_exported_through_registry():
+    reg = MetricsRegistry()
+    fl = FlightRecorder()
+    fl.attach(registry=reg)
+    fl.attach(registry=reg)                    # idempotent re-attach
+    fl.bind("admit")(rid=0)
+    fl.incident("boom")
+    text = render(reg)
+    assert "repro_flight_events 2" in text     # admit + incident event
+    assert "repro_flight_incidents 1" in text
+    assert "repro_flight_dumps 0" in text
+
+
+# ---------------------------------------------------------------------------
+# Numerical health: drift detection, quarantine, fleet gauges
+# ---------------------------------------------------------------------------
+
+def test_drift_detector_latches_quarantines_and_records_flight_event():
+    reg = MetricsRegistry()
+    fl = FlightRecorder()
+    fired = []
+    hm = HealthMonitor(reg, min_samples=3, flight=fl,
+                       on_quarantine=lambda g, f: fired.append((g, f)))
+    for it in (10, 10, 30):                   # fast EWMA jumps past 1.5x
+        hm.observe_retirement(gid="mesh", family="amg", iters=it,
+                              relres=1e-7, status="converged")
+    assert fired == [("mesh", "amg")]
+    snap = hm.snapshot()
+    assert snap["drifting"] == ["mesh::amg"] and snap["quarantines"] == 1
+    assert snap["families"]["amg"]["drifting"] == 1
+    (drift_ev,) = [e for e in fl.events() if e["kind"] == "health_drift"]
+    assert drift_ev["gid"] == "mesh" and drift_ev["family"] == "amg"
+    assert drift_ev["efficiency"] > 1.5
+    # latched: further degradation does not re-fire the quarantine
+    hm.observe_retirement(gid="mesh", family="amg", iters=50,
+                          relres=1e-7, status="converged")
+    assert fired == [("mesh", "amg")] and hm.snapshot()["quarantines"] == 1
+    text = render(reg)
+    assert 'repro_health_quarantines_total{family="amg"} 1' in text
+    assert 'repro_health_drift{family="amg"} 1' in text
+
+
+def test_health_streaks_track_worst_graph_and_reset():
+    hm = HealthMonitor(MetricsRegistry(), min_samples=100)
+    for _ in range(3):
+        hm.observe_retirement(gid="g", family="ac", iters=None,
+                              relres=None, status="maxiter")
+    hm.observe_retirement(gid="h", family="ac", iters=5, relres=1e-6,
+                          status="converged", deadline_missed=True)
+    fam = hm.snapshot()["families"]["ac"]
+    assert fam["max_maxiter_streak"] == 3
+    assert fam["max_deadline_miss_streak"] == 1
+    hm.observe_retirement(gid="g", family="ac", iters=4, relres=1e-6,
+                          status="converged")
+    assert hm.snapshot()["families"]["ac"]["max_maxiter_streak"] == 0
+
+
+def test_quarantine_callback_exception_never_escapes():
+    hm = HealthMonitor(min_samples=2,
+                       on_quarantine=lambda g, f: 1 / 0)
+    for it in (10, 40):
+        hm.observe_retirement(gid="g", family="ac", iters=it,
+                              relres=1e-6, status="converged")
+    assert hm.snapshot()["quarantines"] == 1   # fired, exception swallowed
+
+
+def test_fleet_gauges_collect_from_engine_and_cache_watermark():
+    reg = MetricsRegistry()
+    hm = HealthMonitor(reg)
+    lane = SimpleNamespace(req=SimpleNamespace(
+        _handle=SimpleNamespace(n=40, n_pad=64)))
+    eng = SimpleNamespace(
+        _buckets={("ac", 64, 4): SimpleNamespace(n_active=2)},
+        lanes=[lane, None])
+    bytes_now = [1000.0]
+    cache = SimpleNamespace(stats=lambda: {
+        "fleet_device_bytes_by_device": {"dev0": bytes_now[0]}})
+    hm.watch_engine(eng)
+    hm.watch_cache(cache)
+    samples = top.parse_prom(render(reg))
+    (labels, v) = samples["repro_fleet_lane_occupancy"][0]
+    assert labels == {"family": "ac", "n_pad": "64", "k_tier": "4"}
+    assert v == 2.0
+    assert samples["repro_fleet_sweep_waste_ratio"][0][1] == \
+        pytest.approx(1.0 - 40 / 64)
+    assert samples["repro_fleet_bytes_watermark"][0][1] == 1000.0
+    bytes_now[0] = 10.0                        # watermark never regresses
+    samples = top.parse_prom(render(reg))
+    assert samples["repro_fleet_bytes_watermark"][0][1] == 1000.0
+    assert hm.snapshot()["fleet_bytes_watermark"] == {"dev0": 1000.0}
+
+
+def test_selector_quarantine_skips_family_until_explore():
+    sel = AdaptiveSelector(epsilon=0.0, seed=0)
+    for _ in range(3):
+        sel.observe("g", "ac", wall_s=0.1, serve_s=0.01)
+        sel.observe("g", "ichol", wall_s=0.5, serve_s=0.4)
+    assert sel.pick("g") == "ac"               # cheapest wins
+    sel.quarantine("g", "ac")                  # the drift detector's call
+    assert sel.pick("g") == "ichol"            # exploitation skips it
+    st = sel.stats()
+    assert st["quarantined"] == 1
+    assert st["estimates"]["g::ac"]["ok"] is False
+    # quarantining a never-served pair pre-flags it
+    sel.quarantine("h", "amg")
+    assert sel.stats()["estimates"]["h::amg"]["n"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Incident capture: injected driver crash, sustained overload
+# ---------------------------------------------------------------------------
+
+def test_driver_crash_postmortem_reconstructs_inflight_lanes(
+        tmp_path, monkeypatch):
+    """Crash the frontend's driver thread mid-solve: the flight
+    recorder must dump a post-mortem whose event log identifies the
+    in-flight request (admitted, never retired) by trace id."""
+    g = graphs.road_like(6, seed=4)
+    cache = FactorCache(**CACHE_KW)
+    cache.factor(g, jax.random.key(0), graph_id="road")
+    reg = MetricsRegistry()
+    fl = FlightRecorder(postmortem_dir=str(tmp_path))
+    fl.attach(registry=reg)
+    eng = SolveEngine(cache, slots=2, iters_per_tick=1, metrics=reg,
+                      flight=fl, obs_replica=0)
+    rng = np.random.default_rng(0)
+    b = rng.normal(size=g.n).astype(np.float32)
+    b -= b.mean()
+    fe = SolveFrontend(eng, flight=fl, obs_replica=0)
+    try:
+        # unconvergeable: stays in flight until the injected crash
+        fut = fe.submit("road", b, tol=1e-30, maxiter=10**6)
+        deadline = time.monotonic() + 60
+        while not any(e["kind"] == "admit" for e in fl.events()):
+            assert time.monotonic() < deadline, "request never admitted"
+            time.sleep(0.01)
+
+        def boom():
+            raise RuntimeError("injected tick fault")
+
+        monkeypatch.setattr(eng, "tick", boom)
+        with pytest.raises(RuntimeError, match="injected tick fault"):
+            fut.result(timeout=60)
+        deadline = time.monotonic() + 30
+        while fe.alive:
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        assert isinstance(fe.driver_error, RuntimeError)
+        assert fl.flush(timeout=30)
+    finally:
+        fe.close(drain=False)
+    st = fl.stats()
+    assert st["incidents"] == 1 and st["dumps"] == 1
+    lines = _read_dump(st["dump_paths"][0])
+    assert lines[0]["reason"] == "driver_crash"
+    assert "injected tick fault" in str(lines[0]["context"])
+    events = [ln for ln in lines if ln["type"] == "event"]
+    admitted = {e["trace_id"] for e in events if e["kind"] == "admit"}
+    retired = {e["trace_id"] for e in events if e["kind"] == "retire"}
+    in_flight = admitted - retired
+    assert len(in_flight) == 1                 # the crashed lane, by id
+    assert next(iter(in_flight)).startswith("t")
+    # the registry sample rode along for cross-checking
+    assert any(ln["type"] == "metrics" for ln in lines)
+
+
+def test_replica_ejection_raises_incident_with_dump(tmp_path):
+    """Kill one replica's driver in a 2-replica cluster: the router's
+    ejection path must raise a ``replica_ejected`` incident naming the
+    dead replica and the surviving replica must keep serving."""
+    g = graphs.road_like(6, seed=4)
+    fl = FlightRecorder(postmortem_dir=str(tmp_path))
+    rng = np.random.default_rng(3)
+    b = rng.normal(size=g.n).astype(np.float32)
+    b -= b.mean()
+    with SolveCluster(replicas=2, slots=2, cache_kw=CACHE_KW,
+                      flight=fl) as cl:
+        cl.register(g, jax.random.key(0), graph_id="road")
+        first = cl.submit("road", b, tol=1e-4,
+                          maxiter=300).result(timeout=300)
+        cl.replicas[first.replica].frontend.close(drain=True)
+        second = cl.submit("road", b, tol=1e-4,
+                           maxiter=300).result(timeout=300)
+        assert second.status == "converged"
+        assert fl.flush(timeout=30)
+    st = fl.stats()
+    assert st["incidents"] == 1
+    lines = _read_dump(st["dump_paths"][0])
+    assert lines[0]["reason"] == "replica_ejected"
+    assert lines[0]["context"] == {"replica": first.replica,
+                                   "cause": "dead_driver"}
+    events = [ln for ln in lines if ln["type"] == "event"]
+    (eject,) = [e for e in events if e["kind"] == "eject"]
+    assert eject["replica"] == first.replica
+    # lifecycle events around the ejection kept their trace ids
+    assert any(e["kind"] == "retire" and e.get("trace_id")
+               for e in events)
+
+
+class _FakeDetector:
+    """Duck-typed overload detector the cluster's collect loop drives:
+    ``update`` returns whatever state the test set."""
+
+    name = "fake"
+    recommendation = "scale_up"
+
+    def __init__(self):
+        self.state = "ok"
+        self.updates = 0
+
+    def update(self, now):
+        self.updates += 1
+        return self.state
+
+    def stats(self):
+        return {"detector": self.name, "state": self.state,
+                "updates": self.updates}
+
+
+def test_sustained_overload_flip_dumps_with_cluster_stats(tmp_path):
+    """Flip the detector to ``overloaded`` between two collect passes:
+    the transition is recorded as a flight event, the flip raises a
+    ``sustained_overload`` incident, and the dump carries the cluster's
+    own stats snapshot."""
+    reg = MetricsRegistry()
+    fl = FlightRecorder(postmortem_dir=str(tmp_path))
+    det = _FakeDetector()
+    with SolveCluster(replicas=1, slots=2, cache_kw=CACHE_KW,
+                      metrics=reg, detector=det, flight=fl) as cl:
+        cl._collect(reg)                       # ok: transition, no incident
+        assert fl.stats()["incidents"] == 0
+        det.state = "overloaded"
+        cl._collect(reg)                       # the flip
+        cl._collect(reg)                       # steady-state: no re-fire
+        assert fl.flush(timeout=30)
+        st = fl.stats()
+        assert st["incidents"] == 1 and st["dumps"] == 1
+        lines = _read_dump(st["dump_paths"][0])
+        assert lines[0]["reason"] == "sustained_overload"
+        assert lines[0]["context"]["detector"] == "fake"
+        trans = [ln for ln in lines if ln["type"] == "event"
+                 and ln["kind"] == "detector_transition"]
+        assert [(t["prev"], t["state"]) for t in trans] == \
+            [("", "ok"), ("ok", "overloaded")]
+        (cs,) = [ln for ln in lines if ln["type"] == "cluster_stats"]
+        assert cs["stats"]["overload"]["detector"] == "fake"
+        samples = top.parse_prom(render(reg))
+        assert samples["repro_cluster_overload_state"][0][1] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Fleet dashboard: parse -> summarize -> render, --once over file + HTTP
+# ---------------------------------------------------------------------------
+
+def test_parse_prom_and_quantile():
+    text = "\n".join([
+        "# HELP repro_engine_latency_seconds latency",
+        "# TYPE repro_engine_latency_seconds histogram",
+        'repro_engine_latency_seconds_bucket{replica="0",le="0.1"} 8',
+        'repro_engine_latency_seconds_bucket{replica="0",le="1"} 10',
+        'repro_engine_latency_seconds_bucket{replica="0",le="+Inf"} 10',
+        'repro_engine_latency_seconds_bucket{replica="1",le="0.1"} 0',
+        'repro_engine_latency_seconds_bucket{replica="1",le="1"} 10',
+        'repro_engine_latency_seconds_bucket{replica="1",le="+Inf"} 12',
+        "repro_engine_ticks_total 7", ""])
+    samples = top.parse_prom(text)
+    assert samples["repro_engine_ticks_total"] == [({}, 7.0)]
+    assert len(samples["repro_engine_latency_seconds_bucket"]) == 6
+    # cross-replica sum: 8/22 in [0,0.1], 12 more in (0.1,1], 2 at +Inf
+    p50 = top._quantile(samples, "repro_engine_latency_seconds", 0.5)
+    assert 0.1 < p50 < 1.0
+    # a quantile landing past the last finite bound clamps to it
+    p99 = top._quantile(samples, "repro_engine_latency_seconds", 0.99)
+    assert p99 == 1.0
+    assert top._quantile(samples, "no_such_series", 0.5) is None
+
+
+def _populated_registry():
+    reg = MetricsRegistry()
+    reg.counter("repro_engine_ticks_total").inc(40)
+    reg.counter("repro_engine_admitted_total").inc(9)
+    c = reg.counter("repro_engine_completed_total", "",
+                    ("replica", "status"))
+    c.labels(replica=0, status="converged").inc(6)
+    c.labels(replica=0, status="maxiter").inc(1)
+    reg.gauge("repro_engine_queue_depth").set(2)
+    reg.gauge("repro_engine_active_lanes").set(3)
+    h = reg.histogram("repro_engine_latency_seconds")
+    for v in (0.01, 0.02, 0.5):
+        h.observe(v)
+    r = reg.counter("repro_cluster_routed_total", "", ("hit",))
+    r.labels(hit=1).inc(6)
+    r.labels(hit=0).inc(2)
+    reg.gauge("repro_cluster_overload_state").set(1)
+    reg.gauge("repro_health_drift", "", ("family",)) \
+        .labels(family="amg").set(1)
+    reg.counter("repro_health_quarantines_total", "", ("family",)) \
+        .labels(family="amg").inc()
+    reg.gauge("repro_fleet_lane_occupancy", "",
+              ("family", "n_pad", "k_tier")) \
+        .labels(family="ac", n_pad=64, k_tier=4).set(3)
+    reg.gauge("repro_fleet_sweep_waste_ratio").set(0.25)
+    reg.gauge("repro_fleet_bytes_watermark", "", ("device",)) \
+        .labels(device="dev0").set(2048)
+    reg.gauge("repro_flight_incidents").set(1)
+    return reg
+
+
+def test_summarize_and_render_read_the_whole_display_model():
+    samples = top.parse_prom(render(_populated_registry()))
+    info = top.summarize_endpoint(samples)
+    assert info["ticks"] == 40 and info["admitted"] == 9
+    assert info["done"] == 7
+    assert info["completed"] == {"converged": 6.0, "maxiter": 1.0}
+    assert info["queue"] == 2 and info["lanes"] == 3
+    assert info["hit_rate"] == pytest.approx(6 / 8)
+    assert info["overload"] == 1 and info["incidents"] == 1
+    assert info["drift"] == {"amg": 1.0} and info["quarantines"] == 1
+    assert info["buckets"] == [("ac/64/K4", 3.0)]
+    assert info["waste"] == 0.25 and info["watermark"] == 2048
+    assert 0.0 < info["p50"] < info["p95"]
+    text = "\n".join(top.render_lines("ep", info))
+    assert "== ep ==" in text and "state OVERLOADED" in text
+    assert "converged=6" in text and "maxiter=1" in text
+    assert "affinity 75%" in text
+    assert "drifting: amg(1)" in text and "incidents 1" in text
+    assert "waste 25.0%" in text and "watermark 2KiB" in text
+    assert "ac/64/K4" in text
+
+
+def test_once_renders_prom_file_and_fails_only_when_all_do(tmp_path):
+    path = tmp_path / "scrape.prom"
+    path.write_text(render(_populated_registry()))
+    buf = io.StringIO()
+    assert top.once([str(path), str(tmp_path / "missing.prom")],
+                    out=buf) == 0             # one endpoint is enough
+    text = buf.getvalue()
+    assert f"== {path} ==" in text and "ticks 40" in text
+    assert "scrape failed" in text            # the missing one, flagged
+    assert top.once([str(tmp_path / "missing.prom")],
+                    out=io.StringIO()) == 1   # all failed -> nonzero
+
+
+def test_once_scrapes_live_http_endpoint():
+    reg = _populated_registry()
+    with MetricsServer(reg, port=0, host="127.0.0.1") as srv:
+        buf = io.StringIO()
+        assert top.once([f"127.0.0.1:{srv.port}"], out=buf) == 0
+        assert "ticks 40" in buf.getvalue()
+        # full-URL endpoint form resolves to the same scrape
+        info = top.summarize_endpoint(
+            top.scrape(f"http://127.0.0.1:{srv.port}/metrics"))
+        assert info["ticks"] == 40

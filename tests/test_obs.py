@@ -12,9 +12,10 @@ import jax
 import pytest
 
 from repro.obs import (
-    CardinalityError, DEFAULT_LATENCY_BUCKETS_S, MetricsRegistry,
-    MetricsServer, NULL, SustainedThresholdDetector, Tracer,
-    percentile, quantile_from_counts, render, trace_from_request)
+    CardinalityError, DEFAULT_LATENCY_BUCKETS_S, FlightRecorder,
+    MetricsRegistry, MetricsServer, NULL, SustainedThresholdDetector,
+    Tracer, percentile, quantile_from_counts, render,
+    trace_from_request)
 from repro.obs.prometheus import CONTENT_TYPE
 
 
@@ -184,6 +185,31 @@ def test_metrics_server_scrape():
                 f"http://127.0.0.1:{srv.port}/nope", timeout=5)
 
 
+def test_metrics_server_fixed_port_replay_and_idempotent_close():
+    """Back-to-back runs on a fixed ``--metrics-port`` (the replay
+    workflow) must rebind immediately — SO_REUSEADDR, not a TIME_WAIT
+    stall — and ``close`` must be callable from both a finally block
+    and an exit handler without raising."""
+    import socket
+    reg = MetricsRegistry()
+    reg.counter("replay_total").inc(3)
+    with socket.socket() as s:                 # reserve a concrete port
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+    for _ in range(2):                         # run, close, run again
+        srv = MetricsServer(reg, port=port, host="127.0.0.1")
+        assert srv.port == port
+        url = f"http://127.0.0.1:{port}/metrics"
+        with urllib.request.urlopen(url, timeout=5) as resp:
+            body = resp.read().decode()
+        assert _parse_prom(body)["replay_total"][0][1] == 3.0
+        srv.close()
+        srv.close()                            # idempotent second close
+    # closed for real: the port no longer answers
+    with pytest.raises(urllib.error.URLError):
+        urllib.request.urlopen(url, timeout=1)
+
+
 # ---------------------------------------------------------------------------
 # Tracing: span partition + Chrome export on a real engine replay
 # ---------------------------------------------------------------------------
@@ -260,16 +286,17 @@ def traced_replay():
                          graph_ids=list(built.keys()))
     reg = MetricsRegistry()
     tracer = Tracer()
+    flight = FlightRecorder()
     eng = SolveEngine(cache, slots=4, iters_per_tick=8,
-                      metrics=reg, tracer=tracer)
+                      metrics=reg, tracer=tracer, flight=flight)
     sizes = {name: g.n for name, g in built.items()}
     trace = make_trace(list(built), sizes, 9, seed=0, max_nrhs=2)
     metrics, done = replay_trace(eng, trace)
-    return reg, tracer, metrics, done, eng
+    return reg, tracer, metrics, done, eng, flight
 
 
 def test_engine_replay_records_traces_with_tight_span_sum(traced_replay):
-    _, tracer, metrics, done, _ = traced_replay
+    _, tracer, metrics, done, _, _ = traced_replay
     traces = tracer.traces()
     assert len(traces) == len(done) == metrics["completed"]
     by_rid = {tr.rid: tr for tr in traces}
@@ -289,7 +316,7 @@ def test_engine_replay_records_traces_with_tight_span_sum(traced_replay):
 
 
 def test_chrome_export_loads_and_nests(traced_replay, tmp_path):
-    _, tracer, _, done, _ = traced_replay
+    _, tracer, _, done, _, _ = traced_replay
     path = tmp_path / "trace.json"
     n = tracer.export_chrome(str(path))
     doc = json.loads(path.read_text())      # valid JSON, loads clean
@@ -312,7 +339,7 @@ def test_chrome_export_loads_and_nests(traced_replay, tmp_path):
 
 
 def test_engine_replay_is_scrapable(traced_replay):
-    reg, _, metrics, _, eng = traced_replay
+    reg, _, metrics, _, eng, _ = traced_replay
     text = render(reg)
     samples = _parse_prom(text)
     assert samples["repro_engine_ticks_total"][0][1] == eng.ticks
@@ -322,6 +349,31 @@ def test_engine_replay_is_scrapable(traced_replay):
         metrics["completed"]
     # the ring sampled during the replay: windowed reads answer
     assert reg.series("repro_engine_ticks_total")
+
+
+def test_flight_events_join_chrome_trace_rows_by_trace_id(
+        traced_replay, tmp_path):
+    """The forensic join the post-mortem workflow leans on: every
+    request's auto-stamped ``trace_id`` appears identically in its
+    flight-recorder lifecycle events and its Chrome trace row, so a
+    dump cross-references ``--trace-json`` row for row."""
+    _, tracer, metrics, done, _, flight = traced_replay
+    evs = flight.events()
+    admits = {e["trace_id"]: e for e in evs if e["kind"] == "admit"}
+    retires = {e["trace_id"]: e for e in evs if e["kind"] == "retire"}
+    assert len(retires) == metrics["completed"]
+    for r in done:
+        assert r.trace_id and r.trace_id in admits
+        retire = retires[r.trace_id]
+        assert retire["rid"] == r.rid and retire["status"] == r.status
+    # a clean replay leaves no admitted-but-unretired lane behind
+    assert set(admits) == set(retires)
+    path = tmp_path / "trace.json"
+    tracer.export_chrome(str(path))
+    doc = json.loads(path.read_text())
+    span_ids = {e["args"]["trace_id"] for e in doc["traceEvents"]
+                if e["ph"] == "X"}
+    assert span_ids == set(retires)            # the join, both ways
 
 
 # ---------------------------------------------------------------------------
